@@ -1,0 +1,53 @@
+"""Paper Tables 3/4: empirical complexity of filtering and DFG.
+
+Times each implementation across a geometric ladder of N and fits the
+log-log slope — the measured complexity exponent. Expected: ~1.0 for all
+columnar paths (Table 3/4 'dataframe' rows) and ~1.0 avg for the classic
+log (its worst cases are map-collision pathologies CPython hides)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import ClassicEventLog, dfg
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.core import filtering
+from repro.data import synthetic
+
+from .common import emit, timeit
+
+
+def _slope(ns, ts):
+    return float(np.polyfit(np.log(ns), np.log(ts), 1)[0])
+
+
+def run(sizes=(2_000, 8_000, 32_000, 128_000)):
+    t_filter_classic, t_filter_frame = [], []
+    t_dfg_classic, t_dfg_frame, t_dfg_matmul = [], [], []
+    ns = []
+    for n_cases in sizes:
+        frame, tables = synthetic.generate(num_cases=n_cases, num_activities=26,
+                                           seed=7)
+        log = ClassicEventLog.from_eventframe(frame, tables)
+        n = frame.nrows
+        ns.append(n)
+        acts = set(tables[ACTIVITY][:5])
+
+        t_filter_classic.append(timeit(
+            lambda: log.filter_events(ACTIVITY, acts), repeat=1))
+        ids = np.asarray([tables[ACTIVITY].index(a) for a in acts])
+        t_filter_frame.append(timeit(lambda: jax.block_until_ready(
+            filtering.filter_attr_values(frame, ACTIVITY, ids).rows_valid())))
+        t_dfg_classic.append(timeit(lambda: log.dfg_iterative(), repeat=1))
+        t_dfg_frame.append(timeit(lambda: jax.block_until_ready(
+            dfg(frame, 26, method="shift").counts)))
+        t_dfg_matmul.append(timeit(lambda: jax.block_until_ready(
+            dfg(frame, 26, method="matmul").counts)))
+
+    for name, ts in [("filter_classic_log", t_filter_classic),
+                     ("filter_dataframe", t_filter_frame),
+                     ("dfg_classic_iteration", t_dfg_classic),
+                     ("dfg_dataframe_shift", t_dfg_frame),
+                     ("dfg_dataframe_matmul", t_dfg_matmul)]:
+        emit(f"complexity/{name}", ts[-1],
+             f"exponent={_slope(ns, ts):.2f};N_max={ns[-1]}")

@@ -1,0 +1,61 @@
+"""Distributed DFG scaling: shard_map map-reduce over 1..8 host devices.
+
+Runs in a subprocess so the 8-device XLA flag never leaks into the parent
+(tests/benches must see 1 device)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax
+import numpy as np
+from repro.data import synthetic
+from repro.core import dfg
+from repro.distributed.dfg import dfg_sharded_host
+
+frame, tables = synthetic.generate(num_cases=200_000, num_activities=26, seed=5)
+n = frame.nrows
+# pad to multiple of 8 for even sharding
+pad = (-n) % 8
+if pad:
+    import jax.numpy as jnp
+    from repro.core.eventframe import EventFrame
+    cols = {k: jnp.pad(v, (0, pad), constant_values=-1) for k, v in frame.columns.items()}
+    rv = jnp.pad(frame.rows_valid(), (0, pad))
+    frame = EventFrame(cols, {}, rv)
+
+ref = np.asarray(dfg(frame, 26, method="segment").counts)
+out = {}
+for shards in (1, 2, 4, 8):
+    f = lambda: jax.block_until_ready(dfg_sharded_host(frame, 26, shards))
+    f()
+    t0 = time.perf_counter(); f(); dt = time.perf_counter() - t0
+    got = np.asarray(dfg_sharded_host(frame, 26, shards))
+    out[f"shards_{shards}"] = {"seconds": dt, "events_per_s": n / dt,
+                               "correct": bool((got == ref).all())}
+print(json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                         text=True, env=env, timeout=600)
+    if res.returncode != 0:
+        emit("distributed_dfg/error", 0.0, res.stderr.strip()[-200:])
+        return
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    base = data["shards_1"]["seconds"]
+    for k, v in data.items():
+        emit(f"distributed_dfg/{k}", v["seconds"],
+             f"events_per_s={v['events_per_s']:.0f};correct={v['correct']};"
+             f"speedup={base/v['seconds']:.2f}x")

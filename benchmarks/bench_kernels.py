@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (CPU: oracle + interpret-mode correctness cost;
+the TPU numbers come from the dry-run roofline, benchmarks here give the
+algorithmic comparison the paper's Table 4 implies)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dfg
+from repro.data import synthetic
+from repro.kernels.dfg_count import dfg_count_pallas, dfg_count_ref
+
+from .common import emit, timeit
+
+
+def run():
+    frame, tables = synthetic.generate(num_cases=100_000, num_activities=26, seed=3)
+    n = frame.nrows
+    for method in ("shift", "segment", "matmul"):
+        t = timeit(lambda: jax.block_until_ready(
+            dfg(frame, 26, method=method).counts))
+        emit(f"kernels/dfg_{method}", t, f"events_per_s={n/t:.0f}")
+
+    rng = np.random.default_rng(0)
+    e, a = 100_000, 128
+    src = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    w = jnp.ones((e,), jnp.float32)
+    t = timeit(lambda: jax.block_until_ready(dfg_count_ref(src, dst, w, a)))
+    emit("kernels/dfg_count_ref_scatter", t, f"events_per_s={e/t:.0f}")
+    t = timeit(lambda: jax.block_until_ready(
+        dfg_count_pallas(src, dst, w, a, interpret=True)), repeat=1)
+    emit("kernels/dfg_count_pallas_interpret", t,
+         "correctness-mode;TPU_perf=see_roofline")
+
+    from repro.models.attention import attention_chunked, attention_ref
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    fr = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    fc = jax.jit(lambda q, k, v: attention_chunked(q, k, v, chunk=128))
+    t = timeit(lambda: jax.block_until_ready(fr(q, k, v)))
+    emit("kernels/attention_ref_512", t, "materialized S^2")
+    t2 = timeit(lambda: jax.block_until_ready(fc(q, k, v)))
+    emit("kernels/attention_chunked_512", t2, f"vs_ref={t2/t:.2f}x")

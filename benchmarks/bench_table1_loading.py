@@ -1,0 +1,52 @@
+"""Paper Table 1: loading time + in-memory footprint, row vs columnar.
+
+The paper measures XESLite-in-ProM; our row baseline is the JSONL classic
+log (attr maps), the columnar path is EDF -> EventFrame. 'RAM' is the sum of
+materialized array/object sizes (tracemalloc for the row path).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import tracemalloc
+
+import numpy as np
+
+from repro.core import ClassicEventLog
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.data import synthetic
+from repro.storage import edf, rowlog
+
+from .common import emit, timeit
+
+
+def frame_nbytes(frame):
+    return sum(np.asarray(v).nbytes for v in frame.columns.values())
+
+
+def run(num_cases=50_000):
+    frame, tables = synthetic.generate(num_cases=num_cases, num_activities=26,
+                                       seed=0, extra_numeric_attrs=3)
+    n = frame.nrows
+    d = tempfile.mkdtemp()
+    pe = os.path.join(d, "log.edf")
+    pr = os.path.join(d, "log.jsonl")
+    edf.write(pe, frame, tables, codec="zlib1")
+    log = ClassicEventLog.from_eventframe(frame, tables)
+    rowlog.write(pr, log)
+
+    t = timeit(lambda: edf.read(pe), repeat=3)
+    emit("table1/load_columnar_all", t, f"events={n};MBps={os.path.getsize(pe)/t/1e6:.0f}")
+    t2 = timeit(lambda: edf.read(pe, columns=[CASE, ACTIVITY]), repeat=3)
+    emit("table1/load_columnar_2col", t2, f"speedup_vs_all={t/t2:.2f}x")
+    t3 = timeit(lambda: rowlog.read(pr), repeat=1, warmup=0)
+    emit("table1/load_row_jsonl", t3, f"slowdown_vs_columnar={t3/t:.1f}x")
+
+    emit("table1/ram_columnar", 0.0, f"bytes={frame_nbytes(frame)}")
+    tracemalloc.start()
+    log2 = rowlog.read(pr)
+    cur, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    emit("table1/ram_row_objects", 0.0,
+         f"bytes={cur};ratio_vs_columnar={cur/max(frame_nbytes(frame),1):.1f}x")

@@ -1,0 +1,53 @@
+"""Paper Table 2: size on disk across formats/codecs.
+
+XES (row XML) vs CSV vs JSONL (Avro stand-in) vs EDF raw / zlib1 (Snappy
+role) / zlib9 (Gzip role)."""
+from __future__ import annotations
+
+import csv
+import gzip
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import ClassicEventLog
+from repro.data import synthetic
+from repro.storage import edf, rowlog, xes
+
+from .common import emit
+
+
+def run(num_cases=20_000):
+    frame, tables = synthetic.generate(num_cases=num_cases, num_activities=26,
+                                       seed=1, extra_numeric_attrs=2)
+    d = tempfile.mkdtemp()
+    log = ClassicEventLog.from_eventframe(frame, tables)
+
+    paths = {}
+    paths["xes"] = os.path.join(d, "log.xes")
+    xes.write(paths["xes"], log)
+    paths["csv"] = os.path.join(d, "log.csv")
+    data = frame.to_numpy()
+    cols = sorted(data)
+    with open(paths["csv"], "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(cols)
+        for i in range(frame.nrows):
+            w.writerow([data[c][i] for c in cols])
+    paths["jsonl(avro-role)"] = os.path.join(d, "log.jsonl")
+    rowlog.write(paths["jsonl(avro-role)"], log)
+    for codec, label in [("raw", "edf-raw"), ("zlib1", "edf-zlib1(snappy-role)"),
+                         ("zlib9", "edf-zlib9(gzip-role)")]:
+        p = os.path.join(d, f"log_{codec}.edf")
+        edf.write(p, frame, tables, codec=codec)
+        paths[label] = p
+    paths["xes.gz"] = os.path.join(d, "log.xes.gz")
+    with open(paths["xes"], "rb") as fi, gzip.open(paths["xes.gz"], "wb") as fo:
+        fo.write(fi.read())
+
+    base = os.path.getsize(paths["xes"])
+    for label, p in paths.items():
+        sz = os.path.getsize(p)
+        emit(f"table2/size_{label}", 0.0,
+             f"bytes={sz};ratio_vs_xes={sz/base:.3f}")

@@ -1,0 +1,54 @@
+"""Paper Table 5: real-life-scale operations on dataframes.
+
+Per log: size on disk, load (all attrs vs 2 cols), filter on most common
+activity, DFG via shifting-and-counting. Log profiles mirror the paper's
+five real-life logs (events/cases/classes)."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+
+from repro.core import dfg
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.core import filtering
+from repro.data import synthetic
+from repro.storage import edf
+
+from .common import emit, timeit
+
+# (name, events~, cases, classes) scaled ~1/10 of the paper's logs by default
+PROFILES = [
+    ("roadtraffic", 15_370, 11),
+    ("bpic2017_o", 42_995, 8),
+    ("bpic2017_a", 31_509, 26),
+    ("bpic2018", 43_809, 41),
+    ("bpic2019", 50_000, 42),
+]
+
+
+def run(scale=1.0):
+    for name, cases, classes in PROFILES:
+        n_cases = max(100, int(cases * scale))
+        frame, tables = synthetic.generate(num_cases=n_cases,
+                                           num_activities=classes, seed=42)
+        a = classes
+        d = tempfile.mkdtemp()
+        p = os.path.join(d, f"{name}.edf")
+        edf.write(p, frame, tables, codec="zlib1")
+        emit(f"table5/{name}/size", 0.0,
+             f"events={frame.nrows};bytes={os.path.getsize(p)}")
+        t = timeit(lambda: edf.read(p), repeat=2)
+        emit(f"table5/{name}/load_all", t, f"events_per_s={frame.nrows/t:.0f}")
+        t = timeit(lambda: edf.read(p, columns=[CASE, ACTIVITY]), repeat=2)
+        emit(f"table5/{name}/load_2col", t, f"events_per_s={frame.nrows/t:.0f}")
+
+        top = filtering.most_common_activity(frame, a)
+        f = jax.jit(lambda fr: filtering.filter_attr_values(fr, ACTIVITY, top[None]).rows_valid().sum())
+        t = timeit(lambda: f(frame).block_until_ready())
+        emit(f"table5/{name}/filter_top_activity", t,
+             f"events_per_s={frame.nrows/t:.0f}")
+        t = timeit(lambda: jax.block_until_ready(dfg(frame, a, method='shift').counts))
+        emit(f"table5/{name}/dfg_shift_count", t,
+             f"events_per_s={frame.nrows/t:.0f}")

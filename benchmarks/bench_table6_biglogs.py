@@ -1,0 +1,44 @@
+"""Paper Table 6: synthetic big logs L1..L5 (10^6..5x10^6 cases, ~7 ev/case).
+
+Default scale runs L_k with k*10^5 cases to stay CI-friendly; --full in
+run.py restores the paper's k*10^6. Reported: generation, disk size, load,
+filter, DFG (shift-and-count on device) wall times."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.core import dfg
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.core import filtering
+from repro.data import synthetic
+from repro.storage import edf
+
+from .common import emit, timeit
+
+
+def run(scale=0.1, levels=(1, 2, 3, 4, 5)):
+    for lvl in levels:
+        n_cases = int(lvl * 1_000_000 * scale)
+        t0 = time.perf_counter()
+        frame, tables = synthetic.generate(num_cases=n_cases, num_activities=26,
+                                           seed=lvl, extra_numeric_attrs=0)
+        gen_t = time.perf_counter() - t0
+        n = frame.nrows
+        emit(f"table6/L{lvl}/generate", gen_t, f"cases={n_cases};events={n}")
+        d = tempfile.mkdtemp()
+        p = os.path.join(d, f"L{lvl}.edf")
+        edf.write(p, frame, tables, codec="zlib1")
+        emit(f"table6/L{lvl}/size", 0.0, f"bytes={os.path.getsize(p)}")
+        t = timeit(lambda: edf.read(p, columns=[CASE, ACTIVITY]), repeat=1)
+        emit(f"table6/L{lvl}/load_2col", t, f"events_per_s={n/t:.0f}")
+        top = filtering.most_common_activity(frame, 26)
+        t = timeit(lambda: jax.block_until_ready(
+            filtering.filter_attr_values(frame, ACTIVITY, top[None]).rows_valid().sum()))
+        emit(f"table6/L{lvl}/filter", t, f"events_per_s={n/t:.0f}")
+        t = timeit(lambda: jax.block_until_ready(dfg(frame, 26, method='shift').counts))
+        emit(f"table6/L{lvl}/dfg", t, f"events_per_s={n/t:.0f}")
+        del frame

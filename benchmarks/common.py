@@ -1,0 +1,27 @@
+"""Benchmark helpers: timing + CSV emission (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

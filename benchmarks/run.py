@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table. CSV: name,us_per_call,derived.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table5,table6]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_complexity, bench_distributed_dfg, bench_kernels,
+               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
+               bench_table6_biglogs)
+from .common import header
+
+SUITES = {
+    "table1": lambda full: bench_table1_loading.run(
+        num_cases=200_000 if full else 50_000),
+    "table2": lambda full: bench_table2_sizes.run(
+        num_cases=100_000 if full else 20_000),
+    "table5": lambda full: bench_table5_ops.run(scale=1.0 if full else 0.3),
+    "table6": lambda full: bench_table6_biglogs.run(
+        scale=1.0 if full else 0.05, levels=(1, 2, 3, 4, 5)),
+    "complexity": lambda full: bench_complexity.run(
+        sizes=(2_000, 8_000, 32_000, 128_000, 512_000) if full
+        else (2_000, 8_000, 32_000)),
+    "kernels": lambda full: bench_kernels.run(),
+    "distributed": lambda full: bench_distributed_dfg.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (Table 6 at 10^6..5x10^6 cases)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    header()
+    failed = []
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(args.full)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

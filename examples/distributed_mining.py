@@ -1,0 +1,74 @@
+"""Distributed process mining: shard_map DFG + all-to-all distributed sort.
+
+Runs itself in a child process with 8 virtual host devices (the XLA flag
+must be set before jax initializes), computes the DFG of a 1.4M-event log
+sharded 8 ways, validates against the single-device result, and shows the
+distributed sort-by-case that the shifting strategy assumes.
+
+  PYTHONPATH=src python examples/distributed_mining.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SRC = os.path.join(HERE, "..", "src")
+
+CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core import dfg
+from repro.core.eventframe import ACTIVITY, CASE, EventFrame
+from repro.data import synthetic
+from repro.distributed.dfg import dfg_sharded_host
+from repro.distributed.sort import sort_by_case_sharded
+
+print(f"devices: {len(jax.devices())}")
+frame, tables = synthetic.generate(num_cases=200_000, num_activities=26, seed=5)
+n = frame.nrows
+pad = (-n) % 8
+cols = {k: jnp.pad(v, (0, pad), constant_values=-1) for k, v in frame.columns.items()}
+frame = EventFrame(cols, {}, jnp.pad(frame.rows_valid(), (0, pad)))
+print(f"log: {n:,} events, sharded 8 ways")
+
+ref = np.asarray(dfg(frame, 26, method="segment").counts)
+t0 = time.time(); local = np.asarray(dfg(frame, 26, method="segment").counts)
+t_local = time.time() - t0
+t0 = time.time(); got = np.asarray(dfg_sharded_host(frame, 26, 8))
+t_dist = time.time() - t0
+assert (got == ref).all(), "distributed DFG mismatch!"
+print(f"DFG single-device: {t_local*1e3:.1f}ms   sharded x8 (map+psum): "
+      f"{t_dist*1e3:.1f}ms   counts identical: True")
+print(f"reduce payload: one {26}x{26} int32 psum = {26*26*4} bytes "
+      f"(vs a Spark shuffle of O(N) edges)")
+
+# distributed sort: scramble event order, re-sort by case via all_to_all
+perm = np.random.default_rng(0).permutation(frame.nrows)
+scrambled = frame.take(jnp.asarray(perm))
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+t0 = time.time()
+case_s, act_s, ts_s, overflow = sort_by_case_sharded(scrambled, mesh)
+jax.block_until_ready(case_s)
+print(f"distributed sort-by-case (bucket all_to_all + local lexsort): "
+      f"{(time.time()-t0)*1e3:.1f}ms, bucket overflow: {bool(overflow)}")
+case_np = np.asarray(case_s).reshape(8, -1)   # one row per shard
+ok = all(bool((np.diff(row[row >= 0]) >= 0).all()) for row in case_np)
+owners = {int(c) % 8 for row in case_np for c in np.unique(row[row >= 0])[:50]}
+print(f"each shard case-sorted: {ok}; cases land on hash(case)%8 shard: "
+      f"{all((np.unique(row[row>=0]) % 8 == i).all() for i, row in enumerate(case_np))}")
+"""
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", CHILD], env=env, text=True)
+    raise SystemExit(res.returncode)
+
+
+if __name__ == "__main__":
+    main()

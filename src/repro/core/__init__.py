@@ -1,0 +1,11 @@
+"""Core library: the paper's event-dataframe abstraction and algorithms."""
+from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+from .classic_log import ClassicEventLog, make_classic_log
+from .dfg import DFG, dfg, dfg_matmul, dfg_segment, dfg_shift_count
+from . import conformance, filtering, ops, stats, variants
+
+__all__ = [
+    "ACTIVITY", "CASE", "TIMESTAMP", "EventFrame", "ClassicEventLog",
+    "make_classic_log", "DFG", "dfg", "dfg_matmul", "dfg_segment",
+    "dfg_shift_count", "conformance", "filtering", "ops", "stats", "variants",
+]

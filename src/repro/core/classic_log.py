@@ -1,0 +1,141 @@
+"""Classical event log (paper Def. 1) — the compared baseline structure.
+
+``L = (C_I, E, A, case_ev, act, attr, <=)`` where each event's ``attr`` is an
+associative map (the XES / XESLite implementation strategy). This is the
+structure whose per-event map lookups give the O(N*M) worst-case filtering and
+O(N^2) worst-case DFG of Tables 3/4. Kept faithfully *un*-vectorized: plain
+Python dicts and iteration, used by the complexity/assessment benchmarks as
+the row-oriented baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import numpy as np
+
+from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+
+
+@dataclasses.dataclass
+class ClassicEventLog:
+    """List-of-events with per-event attribute maps, totally ordered."""
+
+    events: list[dict[str, Any]]  # each dict is the event's attr map
+
+    # ------------------------------------------------------------- Def. 1
+    @property
+    def case_ids(self) -> set:
+        return {e[CASE] for e in self.events}
+
+    def case_ev(self) -> dict[Any, list[int]]:
+        m: dict[Any, list[int]] = {}
+        for i, e in enumerate(self.events):
+            m.setdefault(e[CASE], []).append(i)
+        return m
+
+    def act(self, i: int) -> Any:
+        return self.events[i][ACTIVITY]
+
+    # --------------------------------------------------------- operations
+    def filter_events(self, name: str, values: set) -> "ClassicEventLog":
+        """Attr-map filtering: one map lookup per event (Table 3 baseline)."""
+        kept = [e for e in self.events if e.get(name) in values]
+        return ClassicEventLog(kept)
+
+    def dfg_iterative(self) -> dict[tuple, int]:
+        """Single pass over cases storing edges in a map (Table 4 baseline)."""
+        counts: dict[tuple, int] = {}
+        last_by_case: dict[Any, Any] = {}
+        for e in self.events:  # events are totally ordered
+            c, a = e[CASE], e[ACTIVITY]
+            if c in last_by_case:
+                key = (last_by_case[c], a)
+                counts[key] = counts.get(key, 0) + 1
+            last_by_case[c] = a
+        return counts
+
+    def start_end_activities(self) -> tuple[dict, dict]:
+        starts: dict[Any, int] = {}
+        ends: dict[Any, int] = {}
+        last_act: dict[Any, Any] = {}
+        seen: set = set()
+        for e in self.events:
+            c, a = e[CASE], e[ACTIVITY]
+            if c not in seen:
+                seen.add(c)
+                starts[a] = starts.get(a, 0) + 1
+            last_act[c] = a
+        for a in last_act.values():
+            ends[a] = ends.get(a, 0) + 1
+        return starts, ends
+
+    # -------------------------------------------------- conversion (§5.2)
+    def to_eventframe(self) -> tuple[EventFrame, dict[str, list]]:
+        """Paper §5.2 conversion: E is a <=-ordered sequence; every attribute
+        name becomes a column; missing attributes become epsilon (validity 0).
+        Object-valued columns are dictionary-encoded; the string tables are
+        returned alongside the frame."""
+        names = sorted({n for e in self.events for n in e})
+        n = len(self.events)
+        cols: dict[str, np.ndarray] = {}
+        valid: dict[str, np.ndarray] = {}
+        tables: dict[str, list] = {}
+        for name in names:
+            raw = [e.get(name) for e in self.events]
+            mask = np.array([r is not None for r in raw])
+            if all(isinstance(r, (int, float, np.integer, np.floating)) or r is None for r in raw):
+                arr = np.array([r if r is not None else 0 for r in raw], dtype=np.float64)
+                if all(isinstance(r, (int, np.integer)) or r is None for r in raw):
+                    arr = arr.astype(np.int64)
+                cols[name] = arr
+            else:  # dictionary-encode
+                table: list = []
+                index: dict = {}
+                ids = np.zeros((n,), dtype=np.int32)
+                for i, r in enumerate(raw):
+                    if r is None:
+                        continue
+                    if r not in index:
+                        index[r] = len(table)
+                        table.append(r)
+                    ids[i] = index[r]
+                cols[name] = ids
+                tables[name] = table
+            if not mask.all():
+                valid[name] = mask
+        return EventFrame.from_numpy(cols, valid), tables
+
+    @staticmethod
+    def from_eventframe(frame: EventFrame, tables: dict[str, list] | None = None) -> "ClassicEventLog":
+        tables = tables or {}
+        data = frame.to_numpy()
+        rv = np.asarray(frame.rows_valid())
+        events = []
+        for i in range(frame.nrows):
+            if not rv[i]:
+                continue
+            e = {}
+            for k, v in data.items():
+                if k in frame.valid and not bool(np.asarray(frame.valid[k])[i]):
+                    continue
+                val = v[i].item()
+                if k in tables:
+                    val = tables[k][int(val)]
+                e[k] = val
+            events.append(e)
+        return ClassicEventLog(events)
+
+
+def make_classic_log(cases: Iterable[tuple[Any, list[tuple[Any, float]]]],
+                     extra_attrs: int = 0) -> ClassicEventLog:
+    """Build a classic log from (case_id, [(activity, ts), ...]) traces."""
+    events = []
+    for cid, trace in cases:
+        for j, (a, ts) in enumerate(trace):
+            e = {CASE: cid, ACTIVITY: a, TIMESTAMP: ts}
+            for k in range(extra_attrs):
+                e[f"attr{k}"] = j * 31 + k
+            events.append(e)
+    events.sort(key=lambda e: e[TIMESTAMP])
+    return ClassicEventLog(events)

@@ -1,0 +1,175 @@
+"""Directly-Follows Graph on dataframes — paper §5.4, three lowerings.
+
+The paper gives two strategies; we implement both, plus the TPU-native matmul
+formulation used by the Pallas kernel:
+
+1. ``dfg_shift_count``  — *shifting and counting* (§5.4 strategy 2), literally
+   composed from the §5.3 transformation functions: ``concat(D, shift(D))``,
+   keep rows with equal case id, ``mergstrv`` the two activity columns, count.
+2. ``dfg_segment``      — *map-reduce* (§5.4 strategy 1): pair keys reduced via
+   scatter-add (``segment_sum``-style); this is the per-shard "map" used by the
+   distributed version (``repro.distributed.dfg``), whose "reduce" is a psum.
+3. ``dfg_matmul``       — counts as a matrix product ``C = X^T Y`` with one-hot
+   operands; the systolic MXU does the counting. This is the reference for
+   ``repro.kernels.dfg_count`` and the fastest TPU path for small alphabets.
+
+All variants assume the frame is sorted by (case, time) — the paper's stated
+precondition ("the strategy assumes that the dataframe is sorted"). Start/end
+activities (needed to convert a DFG into a Petri net / IMDF input) come free
+from segment boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .eventframe import ACTIVITY, CASE, EventFrame
+from . import ops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DFG:
+    """Dense DFG: ``counts[a, b]`` = #times b directly follows a."""
+
+    counts: jax.Array        # (A, A) int32
+    starts: jax.Array        # (A,)   int32 — start-activity histogram
+    ends: jax.Array          # (A,)   int32 — end-activity histogram
+
+    def tree_flatten(self):
+        return (self.counts, self.starts, self.ends), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_activities(self) -> int:
+        return self.counts.shape[-1]
+
+    def edges(self):
+        """Host-side sparse view: list of ((src, dst), count), count > 0."""
+        import numpy as np
+
+        c = np.asarray(self.counts)
+        src, dst = np.nonzero(c)
+        return [((int(a), int(b)), int(c[a, b])) for a, b in zip(src, dst)]
+
+
+def _pair_arrays(frame: EventFrame):
+    """(src_act, dst_act, pair_mask, case, act, rv) for adjacent rows."""
+    case = frame[CASE]
+    act = frame[ACTIVITY]
+    rv = frame.rows_valid()
+    same_case = (case[1:] == case[:-1]) & rv[1:] & rv[:-1]
+    return act[:-1], act[1:], same_case, case, act, rv
+
+
+def _boundaries(case: jax.Array, rv: jax.Array):
+    n = case.shape[0]
+    is_start = jnp.concatenate([jnp.ones((1,), bool), case[1:] != case[:-1]]) & rv
+    is_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)]) & rv
+    return is_start, is_end
+
+
+@partial(jax.jit, static_argnames=("num_activities",))
+def dfg_shift_count(frame: EventFrame, num_activities: int) -> DFG:
+    """Paper §5.4 strategy 2, composed from the §5.3 ops verbatim.
+
+    sort -> shift -> concat -> proj(case == case.2) -> mergstrv -> value_counts.
+    """
+    shifted = ops.shift(frame)
+    both = ops.concat(frame, shifted, ".2")
+    both = ops.proj(both, both[CASE] == both[CASE + ".2"])
+    both = ops.mergstrv(both, "df:pair", ACTIVITY, ACTIVITY + ".2", num_activities)
+    keep = both.rows_valid()
+    # value_counts over the pair key; masked rows hit a scratch bucket.
+    pair = jnp.where(keep, both["df:pair"], num_activities * num_activities)
+    flat = jnp.zeros((num_activities * num_activities + 1,), jnp.int32).at[pair].add(1)
+    counts = flat[:-1].reshape(num_activities, num_activities)
+    is_start, is_end = _boundaries(frame[CASE], frame.rows_valid())
+    act = frame[ACTIVITY]
+    starts = ops.value_counts(jnp.where(is_start, act, num_activities),
+                              num_activities + 1)[:-1]
+    ends = ops.value_counts(jnp.where(is_end, act, num_activities),
+                            num_activities + 1)[:-1]
+    return DFG(counts, starts, ends)
+
+
+@partial(jax.jit, static_argnames=("num_activities",))
+def dfg_segment(frame: EventFrame, num_activities: int) -> DFG:
+    """Paper §5.4 strategy 1 (map-reduce): scatter-add of pair keys.
+
+    The "map" groups by case implicitly (sorted segments); the "reduce" is a
+    scatter-add into the dense count matrix. ``repro.distributed.dfg`` runs
+    this per shard and psums — the paper's Spark shuffle becomes one
+    all-reduce of an (A, A) matrix.
+    """
+    src, dst, mask, case, act, rv = _pair_arrays(frame)
+    a = num_activities
+    key = jnp.where(mask, src * a + dst, a * a)
+    flat = jnp.zeros((a * a + 1,), jnp.int32).at[key].add(1)
+    counts = flat[:-1].reshape(a, a)
+    is_start, is_end = _boundaries(case, rv)
+    starts = ops.value_counts(jnp.where(is_start, act, a), a + 1)[:-1]
+    ends = ops.value_counts(jnp.where(is_end, act, a), a + 1)[:-1]
+    return DFG(counts, starts, ends)
+
+
+@partial(jax.jit, static_argnames=("num_activities", "block"))
+def dfg_matmul(frame: EventFrame, num_activities: int, block: int = 2048) -> DFG:
+    """TPU-native: counts as one-hot matmuls on the MXU (kernel reference).
+
+    ``C = sum_i w_i * e[src_i] e[dst_i]^T`` computed blockwise:
+    ``C += (onehot(src_blk) * w_blk)^T @ onehot(dst_blk)``. The Pallas kernel
+    (``repro.kernels.dfg_count``) is this loop with explicit VMEM tiling.
+    """
+    src, dst, mask, case, act, rv = _pair_arrays(frame)
+    a = num_activities
+    n = src.shape[0]
+    pad = (-n) % block
+    src = jnp.pad(src, (0, pad))
+    dst = jnp.pad(dst, (0, pad))
+    w = jnp.pad(mask.astype(jnp.float32), (0, pad))
+    nblk = (n + pad) // block
+
+    def body(c, xs):
+        s, d, ww = xs
+        x = (jax.nn.one_hot(s, a, dtype=jnp.float32) * ww[:, None])
+        y = jax.nn.one_hot(d, a, dtype=jnp.float32)
+        return c + jnp.dot(x.T, y, preferred_element_type=jnp.float32), None
+
+    c0 = jnp.zeros((a, a), jnp.float32)
+    c, _ = jax.lax.scan(
+        body, c0,
+        (src.reshape(nblk, block), dst.reshape(nblk, block), w.reshape(nblk, block)),
+    )
+    is_start, is_end = _boundaries(case, rv)
+    starts = ops.value_counts(jnp.where(is_start, act, a), a + 1)[:-1]
+    ends = ops.value_counts(jnp.where(is_end, act, a), a + 1)[:-1]
+    return DFG(c.astype(jnp.int32), starts, ends)
+
+
+def dfg(frame: EventFrame, num_activities: int, method: str = "segment") -> DFG:
+    """Front door. ``method`` in {"shift", "segment", "matmul", "kernel"}."""
+    if method == "shift":
+        return dfg_shift_count(frame, num_activities)
+    if method == "segment":
+        return dfg_segment(frame, num_activities)
+    if method == "matmul":
+        return dfg_matmul(frame, num_activities)
+    if method == "kernel":
+        from repro.kernels.dfg_count import ops as kops
+
+        src, dst, mask, case, act, rv = _pair_arrays(frame)
+        counts = kops.dfg_count(src, dst, mask, num_activities)
+        is_start, is_end = _boundaries(case, rv)
+        starts = ops.value_counts(jnp.where(is_start, act, num_activities),
+                                  num_activities + 1)[:-1]
+        ends = ops.value_counts(jnp.where(is_end, act, num_activities),
+                                num_activities + 1)[:-1]
+        return DFG(counts, starts, ends)
+    raise ValueError(f"unknown DFG method {method!r}")

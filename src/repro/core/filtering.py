@@ -1,0 +1,61 @@
+"""Event- and case-level filters on EventFrames (paper §6 / PM4Py parity).
+
+Event-level filtering is the paper's O(N) columnar op. Case-level filtering
+("keep every event of any case that has property P") is the operation the
+paper calls out as needing custom dataframe techniques — here it is a
+two-phase mask broadcast: per-case predicate via segment reduction, then
+expansion back to events through the case segment ids.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .eventframe import ACTIVITY, CASE, EventFrame
+from . import ops
+
+
+def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
+    """Keep (or drop) events whose ``name`` is in ``values`` (event-level)."""
+    col = frame[name]
+    vals = jnp.asarray(values)
+    m = (col[:, None] == vals[None, :]).any(axis=-1)
+    return ops.proj(frame, m if keep else ~m)
+
+
+def filter_time_range(frame: EventFrame, name: str, lo, hi) -> EventFrame:
+    col = frame[name]
+    return ops.proj(frame, (col >= lo) & (col <= hi))
+
+
+@partial(jax.jit, static_argnames=("num_cases",))
+def _case_mask_to_event_mask(case_seg: jax.Array, case_keep: jax.Array, num_cases: int) -> jax.Array:
+    return case_keep[case_seg]
+
+
+def filter_cases_containing(frame: EventFrame, activity: int, num_cases: int) -> EventFrame:
+    """Case-level: keep all events of cases that contain ``activity``.
+
+    Requires frame sorted by (case, time); uses segment ids + scatter-or.
+    """
+    seg, _ = ops.segment_ids_sorted(frame[CASE])
+    hit = (frame[ACTIVITY] == activity) & frame.rows_valid()
+    case_keep = jnp.zeros((num_cases,), bool).at[seg].max(hit)
+    return ops.proj(frame, _case_mask_to_event_mask(seg, case_keep, num_cases))
+
+
+def filter_case_size(frame: EventFrame, min_events: int, max_events: int, num_cases: int) -> EventFrame:
+    """Case-level: keep cases whose (valid-)event count is within bounds."""
+    seg, _ = ops.segment_ids_sorted(frame[CASE])
+    sizes = jnp.zeros((num_cases,), jnp.int32).at[seg].add(frame.rows_valid().astype(jnp.int32))
+    case_keep = (sizes >= min_events) & (sizes <= max_events)
+    return ops.proj(frame, case_keep[seg])
+
+
+def most_common_activity(frame: EventFrame, num_activities: int) -> jax.Array:
+    """The paper's Table-5 filter target: the most frequent activity."""
+    act = jnp.where(frame.rows_valid(), frame[ACTIVITY], num_activities)
+    counts = ops.value_counts(act, num_activities + 1)[:-1]
+    return jnp.argmax(counts)

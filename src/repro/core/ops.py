@@ -1,0 +1,114 @@
+"""Transformation functions on dataframes — paper §5.3, vectorized for TPU.
+
+Each function mirrors one definition from the paper:
+
+* ``proj``     — projection on a selective function (filter). Lazy: marks the
+                 ``row_valid`` mask instead of compacting (static shapes).
+* ``group``    — grouping on an attribute. Realized as *segment ids*: after a
+                 sort on the grouping attribute, groups are contiguous segments
+                 (hash-free; TPU-native).
+* ``shift``    — index shift ``I' = {i-1 | i in I}`` i.e. ``shift(D)[i] = D[i+1]``.
+* ``concat``   — horizontal concatenation with a column-name suffix.
+* ``sort``     — stable sort by one or more attributes.
+* ``mergstrv`` — string-attribute merge. Strings are dictionary-encoded, so the
+                 merge of two id columns is the *pair encoding* ``a * base + b``
+                 (an injective stand-in for ``a + sep + b``).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .eventframe import EventFrame
+
+
+def proj(frame: EventFrame, mask: jax.Array) -> EventFrame:
+    """Paper's ``proj(D, S, f)``: keep rows where the selective function is 1.
+
+    ``mask`` is ``f`` evaluated per row. The result shares the input's column
+    arrays and only narrows ``row_valid`` — O(N) worst case, matching Table 3.
+    """
+    rv = mask if frame.row_valid is None else (frame.row_valid & mask)
+    return EventFrame(frame.columns, frame.valid, rv)
+
+
+def proj_fn(frame: EventFrame, names: Sequence[str], f: Callable[..., jax.Array]) -> EventFrame:
+    """Literal form of the paper's projection: ``f`` receives the named columns."""
+    return proj(frame, f(*[frame[n] for n in names]))
+
+
+def sort(frame: EventFrame, by: Sequence[str] | str) -> EventFrame:
+    """Stable lexicographic sort by one or more columns (last key primary —
+    mirrors ``np.lexsort`` convention; pass keys minor-to-major)."""
+    if isinstance(by, str):
+        by = (by,)
+    keys = [frame[n] for n in by]
+    order = jnp.lexsort(tuple(keys))
+    return frame.take(order)
+
+
+def shift(frame: EventFrame, fill: int = 0) -> EventFrame:
+    """``shift(D)[i] = D[i+1]``; the final row becomes invalid (index left I)."""
+    n = frame.nrows
+
+    def shf(col):
+        return jnp.concatenate([col[1:], jnp.full((1,), fill, col.dtype)])
+
+    cols = {k: shf(v) for k, v in frame.columns.items()}
+    vals = {k: jnp.concatenate([v[1:], jnp.zeros((1,), bool)]) for k, v in frame.valid.items()}
+    rv = frame.rows_valid()
+    rv = jnp.concatenate([rv[1:], jnp.zeros((1,), bool)])
+    return EventFrame(cols, vals, rv)
+
+
+def concat(a: EventFrame, b: EventFrame, suffix: str = ".2") -> EventFrame:
+    """Horizontal concat; ``b``'s columns are renamed ``name + suffix``."""
+    cols = dict(a.columns)
+    vals = dict(a.valid)
+    for k, v in b.columns.items():
+        cols[k + suffix] = v
+    for k, v in b.valid.items():
+        vals[k + suffix] = v
+    rv = None
+    if a.row_valid is not None or b.row_valid is not None:
+        rv = a.rows_valid() & b.rows_valid()
+    return EventFrame(cols, vals, rv)
+
+
+def mergstrv(frame: EventFrame, out: str, n1: str, n2: str, base: int) -> EventFrame:
+    """Pair-encode two dictionary-encoded columns: ``v = col1 * base + col2``.
+
+    ``base`` must exceed every value of ``n2`` (typically the alphabet size);
+    the encoding is injective, as string concatenation with a separator is.
+    """
+    merged = frame[n1].astype(jnp.int32) * jnp.int32(base) + frame[n2].astype(jnp.int32)
+    return frame.with_column(out, merged)
+
+
+def group_segments(frame: EventFrame, by: str) -> tuple[EventFrame, jax.Array, jax.Array]:
+    """Paper's ``group(D, n0)`` realized as contiguous segments.
+
+    Returns ``(sorted_frame, segment_ids, segment_starts_mask)``. After the
+    sort, rows of one group are adjacent; ``segment_ids`` numbers groups
+    ``0..G-1`` in order of first appearance in the sorted frame.
+    """
+    sf = sort(frame, by)
+    key = sf[by]
+    starts = jnp.concatenate([jnp.ones((1,), bool), key[1:] != key[:-1]])
+    seg_ids = jnp.cumsum(starts.astype(jnp.int32)) - 1
+    return sf, seg_ids, starts
+
+
+def segment_ids_sorted(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Segment ids for an already-sorted key column (no resort)."""
+    starts = jnp.concatenate([jnp.ones((1,), bool), key[1:] != key[:-1]])
+    return jnp.cumsum(starts.astype(jnp.int32)) - 1, starts
+
+
+def value_counts(col: jax.Array, num_values: int, weights: jax.Array | None = None) -> jax.Array:
+    """Histogram of a dictionary-encoded column — the ``c(e)`` count of §5.4."""
+    w = weights if weights is not None else jnp.ones_like(col, dtype=jnp.int32)
+    return jnp.zeros((num_values,), jnp.int32).at[col].add(w)

@@ -1,0 +1,48 @@
+"""Case/event statistics on EventFrames (segment reductions, all O(N))."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+from . import ops
+
+
+@partial(jax.jit, static_argnames=("num_cases",))
+def case_sizes(frame: EventFrame, num_cases: int) -> jax.Array:
+    seg, _ = ops.segment_ids_sorted(frame[CASE])
+    return jnp.zeros((num_cases,), jnp.int32).at[seg].add(frame.rows_valid().astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("num_cases",))
+def case_durations(frame: EventFrame, num_cases: int) -> jax.Array:
+    """max(ts) - min(ts) per case (sorted frame)."""
+    seg, _ = ops.segment_ids_sorted(frame[CASE])
+    ts = frame[TIMESTAMP].astype(jnp.float32)
+    big = jnp.finfo(jnp.float32).max
+    rv = frame.rows_valid()
+    tmin = jnp.full((num_cases,), big).at[seg].min(jnp.where(rv, ts, big))
+    tmax = jnp.full((num_cases,), -big).at[seg].max(jnp.where(rv, ts, -big))
+    return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
+
+
+@partial(jax.jit, static_argnames=("num_activities",))
+def activity_counts(frame: EventFrame, num_activities: int) -> jax.Array:
+    act = jnp.where(frame.rows_valid(), frame[ACTIVITY], num_activities)
+    return ops.value_counts(act, num_activities + 1)[:-1]
+
+
+@partial(jax.jit, static_argnames=("num_activities",))
+def sojourn_times(frame: EventFrame, num_activities: int) -> jax.Array:
+    """Mean inter-event time by *source* activity (bottleneck analysis)."""
+    case = frame[CASE]
+    ts = frame[TIMESTAMP].astype(jnp.float32)
+    rv = frame.rows_valid()
+    same = (case[1:] == case[:-1]) & rv[1:] & rv[:-1]
+    dt = jnp.where(same, ts[1:] - ts[:-1], 0.0)
+    src = jnp.where(same, frame[ACTIVITY][:-1], num_activities)
+    tot = jnp.zeros((num_activities + 1,), jnp.float32).at[src].add(dt)
+    cnt = jnp.zeros((num_activities + 1,), jnp.int32).at[src].add(same.astype(jnp.int32))
+    return (tot / jnp.maximum(cnt, 1))[:-1]

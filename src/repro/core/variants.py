@@ -1,0 +1,59 @@
+"""Variants (distinct activity sequences per case) on EventFrames.
+
+The paper lists "statistics for cases/variants" among the dataframe-specific
+techniques taken into PM4Py. A variant is the sequence of activities of a
+case; we fingerprint it with *two* independent 32-bit polynomial rolling
+hashes computed by one segmented scan — O(N), no per-case Python loop, and
+x64-free (JAX default config). Collision probability ~ n_cases^2 / 2^64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .eventframe import ACTIVITY, CASE, EventFrame
+from . import ops
+
+_BASE1 = jnp.uint32(1_000_003)
+_BASE2 = jnp.uint32(16_777_619)  # FNV prime
+
+
+@jax.jit
+def variant_fingerprints(frame: EventFrame) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-case (fp1, fp2) fingerprints + segment ids.
+
+    Frame must be sorted by (case, time). The rolling hashes
+    ``h <- h * BASE + (act + 1)`` (mod 2^32, free on uint32) restart at each
+    case boundary; the value at each case's last event is the variant
+    fingerprint. Returns arrays of length nrows; entries [0..ncases) of the
+    first two are the per-case fingerprints (scattered by segment id).
+    """
+    seg, starts = ops.segment_ids_sorted(frame[CASE])
+    act = frame[ACTIVITY].astype(jnp.uint32) + 1
+
+    def step(h, xs):
+        a, is_start = xs
+        h1, h2 = h
+        h1 = jnp.where(is_start, jnp.uint32(0), h1) * _BASE1 + a
+        h2 = jnp.where(is_start, jnp.uint32(0), h2) * _BASE2 + a
+        return (h1, h2), (h1, h2)
+
+    _, (hs1, hs2) = jax.lax.scan(step, (jnp.uint32(0), jnp.uint32(0)), (act, starts))
+    case = frame[CASE]
+    is_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)])
+    n = hs1.shape[0]
+    fp1 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs1, 0))
+    fp2 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs2, 0))
+    return fp1, fp2, seg
+
+
+def variant_counts(frame: EventFrame) -> dict[tuple[int, int], int]:
+    """Host-side: {fingerprint: number of cases} — the paper's 'Variants'."""
+    import numpy as np
+
+    fp1, fp2, seg = variant_fingerprints(frame)
+    seg = np.asarray(seg)
+    ncases = int(seg.max()) + 1 if len(seg) else 0
+    pairs = np.stack([np.asarray(fp1)[:ncases], np.asarray(fp2)[:ncases]], axis=1)
+    vals, counts = np.unique(pairs, axis=0, return_counts=True)
+    return {(int(v[0]), int(v[1])): int(c) for v, c in zip(vals, counts)}

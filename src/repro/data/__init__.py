@@ -1,0 +1,3 @@
+from . import pipeline, synthetic, tokenizer
+
+__all__ = ["pipeline", "synthetic", "tokenizer"]

@@ -1,0 +1,5 @@
+from . import ops
+from .dfg_count import dfg_count_pallas
+from .ref import dfg_count_ref
+
+__all__ = ["ops", "dfg_count_pallas", "dfg_count_ref"]

@@ -1,0 +1,21 @@
+"""Public entry point for DFG pair counting.
+
+Chooses the Pallas MXU kernel on TPU (or when forced) and the scatter-add
+reference elsewhere. ``interpret=True`` runs the kernel body on CPU for
+validation — the TPU lowering uses the identical code with interpret=False.
+"""
+from __future__ import annotations
+
+import jax
+
+from .dfg_count import dfg_count_pallas
+from .ref import dfg_count_ref
+
+
+def dfg_count(src, dst, w, num_activities: int, *, impl: str | None = None):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return dfg_count_pallas(src, dst, w, num_activities,
+                                interpret=jax.default_backend() != "tpu")
+    return dfg_count_ref(src, dst, w, num_activities)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the dfg_count kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("num_activities",))
+def dfg_count_ref(src: jax.Array, dst: jax.Array, w: jax.Array, num_activities: int) -> jax.Array:
+    """Scatter-add oracle: counts[src_i, dst_i] += w_i."""
+    a = num_activities
+    key = jnp.clip(src.astype(jnp.int32), 0, a - 1) * a + jnp.clip(dst.astype(jnp.int32), 0, a - 1)
+    inb = (src >= 0) & (src < a) & (dst >= 0) & (dst < a)
+    ww = jnp.where(inb, w.astype(jnp.float32), 0.0)
+    flat = jnp.zeros((a * a,), jnp.float32).at[key].add(ww)
+    return flat.reshape(a, a).astype(jnp.int32)

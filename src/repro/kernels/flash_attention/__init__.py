@@ -1,0 +1,5 @@
+from . import ops
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["ops", "flash_attention_pallas", "attention_ref"]

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: FlashAttention-style causal GQA with optional window.
+
+Online-softmax attention tiled for VMEM: the (S, S) score matrix is never
+materialized — each (block_q, block_k) tile is produced on the MXU, folded
+into running (max, sum, accumulator) statistics, and discarded. Supports:
+
+* GQA — kv heads indexed as ``q_head // (H // KVH)`` via the K/V BlockSpec
+  index maps (no repeat/broadcast of K/V in HBM);
+* causal masking and sliding windows (Mixtral SWA, Gemma-3 local layers);
+* ragged kv lengths via a scalar length operand (padding-safe).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv axis is innermost so the
+running stats live in VMEM scratch across its iterations. VMEM per step ~
+(block_q + 2*block_k) * head_dim * 4B + block_q*block_k*4B; with the defaults
+(block_q = block_k = 128, head_dim <= 256) well under 1 MiB. All matmul dims
+are multiples of the MXU's 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int | None,
+            block_q: int, block_k: int, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Skip tiles entirely above the causal diagonal / outside the window.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = needed & (k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        kv_len = len_ref[0]
+        mask = cols < kv_len
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                    # (bq, 1)
+        l_prev = l_ref[...][:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,                 # (B, H, Sq, D)
+    k: jax.Array,                 # (B, KVH, Sk, D)
+    v: jax.Array,                 # (B, KVH, Sk, D)
+    kv_len: jax.Array | None = None,   # () int32 — valid kv length
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    scale = d ** -0.5
+    if kv_len is None:
+        kv_len = jnp.int32(sk)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = (sq + pad_q) // block_q, (sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, qi, ki: (0,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)
+    return out[:, :, :sq, :]

@@ -1,0 +1,17 @@
+"""Public entry point for fused attention (kernel on TPU, oracle elsewhere)."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, kv_len=None, *, causal=True, window=None, impl=None):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, kv_len, causal=causal, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return attention_ref(q, k, v, kv_len, causal=causal, window=window)

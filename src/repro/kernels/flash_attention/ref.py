@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for flash_attention: materialized-score GQA attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention_ref(
+    q: jax.Array,                # (B, H, Sq, D)
+    k: jax.Array,                # (B, KVH, Sk, D)
+    v: jax.Array,                # (B, KVH, Sk, D)
+    kv_len: jax.Array | None = None,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    g = h // kvh
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (d ** -0.5)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= cols > rows - window
+    if kv_len is not None:
+        mask &= cols < kv_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,329 @@
+"""Multiplicity-aware HLO accounting for the roofline terms.
+
+``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE, which
+under-counts a 95-layer scanned transformer by ~100x. This module parses the
+post-SPMD HLO text instead and weights every op by its *execution
+multiplicity* (product of enclosing loop trip counts):
+
+* computations are split by header; ``while`` ops carry ``body=%B`` /
+  ``condition=%C``; the trip count is the limit constant in the condition
+  (scan induction always starts at 0);
+* **dot FLOPs**: ``2 * numel(result) * contracted_size`` per dot, weighted —
+  the compute term (matmul-dominated; elementwise flops are memory-bound and
+  accounted by the bytes term);
+* **HBM bytes**: for ops at loop-body/entry level (fusion internals excluded
+  — a fusion reads its operands and writes its result through HBM exactly
+  once), operand+result bytes, weighted;
+* **collective bytes**: result bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, weighted.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# Ops that stream HBM on TPU. Excluded on purpose: copy / broadcast /
+# transpose / reshape / get-tuple-element — XLA:TPU aliases or fuses these
+# (the CPU HLO text keeps loop-carried copies that no real backend executes),
+# counting them inflates the memory term ~50-100x.
+_HBM_OPS = {
+    "dot", "fusion", "convolution", "reduce", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "select-and-scatter", "sort",
+    "rng", "cholesky", "triangular-solve", "reduce-window", "pad", "iota",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"^\(?\s*(\w+)\[([\d,]*)\]")
+_TUPLE_SHAPES_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPNAME_RE = re.compile(r"^(?:\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+([\w\-]+)")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    dtype: str
+    dims: str
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list = field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line or line.lstrip().startswith("//"):
+            continue
+        h = _HEADER_RE.match(line)
+        if h and line.endswith("{"):
+            cur = Computation(h.group(2), bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.groups()
+        sm = _SHAPE_RE.match(rhs)
+        dtype, dims = (sm.group(1), sm.group(2)) if sm else ("", "")
+        om = _OPNAME_RE.match(rhs)
+        kind = om.group(1) if om else ""
+        cur.ops.append(Op(name, kind, dtype, dims, rhs))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop limit = the constant in the condition (induction starts at 0)."""
+    consts = []
+    for op in cond.ops:
+        consts += [int(c) for c in _CONST_RE.findall(op.rhs)]
+    return max(consts) if consts else 1
+
+
+def multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution count per computation; fusion-internal comps get the parent
+    multiplicity but are flagged separately by callers via `fusion_called`."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    mult = {c: 0.0 for c in comps}
+    fusion_called: set[str] = set()
+    if entry is None:
+        return mult, fusion_called
+
+    # build edges
+    while_edges: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    call_edges: dict[str, list[str]] = {c: [] for c in comps}
+    for c in comps.values():
+        for op in c.ops:
+            wm = _WHILE_RE.search(op.rhs)
+            if wm:
+                cond_name, body_name = wm.groups()
+                trip = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                while_edges[c.name].append((body_name, trip))
+                call_edges[c.name].append(cond_name)  # cond runs trip+1, ~trip
+                continue
+            for m in _CALLS_RE.finditer(op.rhs):
+                if m.group(1) in comps:
+                    call_edges[c.name].append(m.group(1))
+                    fusion_called.add(m.group(1))
+            for m in _TO_APPLY_RE.finditer(op.rhs):
+                if m.group(1) in comps:
+                    fusion_called.add(m.group(1))
+
+    # BFS from entry
+    mult[entry.name] = 1.0
+    frontier = [entry.name]
+    seen_edges = set()
+    while frontier:
+        cn = frontier.pop()
+        for body, trip in while_edges[cn]:
+            if (cn, body) in seen_edges:
+                continue
+            seen_edges.add((cn, body))
+            if body in mult:
+                mult[body] += mult[cn] * trip
+                frontier.append(body)
+        for callee in call_edges[cn]:
+            if (cn, callee, "c") in seen_edges:
+                continue
+            seen_edges.add((cn, callee, "c"))
+            mult[callee] += mult[cn]
+            frontier.append(callee)
+    return mult, fusion_called
+
+
+def _operand_names(rhs: str) -> list[str]:
+    m = _OPERANDS_RE.search(rhs[rhs.find(" "):] if " " in rhs else rhs)
+    # take the first (...) after the op name — operands list
+    om = _OPNAME_RE.match(rhs)
+    if not om:
+        return []
+    tail = rhs[om.end():]
+    m = _OPERANDS_RE.search(tail)
+    if not m:
+        return []
+    out = []
+    for part in m.group(1).split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            out.append(part[1:])
+        else:
+            toks = part.split("%")
+            if len(toks) > 1:
+                out.append(toks[-1].strip())
+    return out
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_param_reads(comp: Computation) -> dict[int, int]:
+    """Bytes actually READ per parameter index inside a fusion computation.
+
+    A scan body receives the full stacked (L, ...) parameter tensor but a
+    dynamic-slice inside the fusion reads one layer's slice; counting the
+    full operand inflates HBM traffic by ~L*mb. For every parameter that is
+    consumed (only) through dynamic-slice / dynamic-update-slice, charge the
+    slice/update bytes instead of the full tensor.
+    """
+    idx_of: dict[str, int] = {}
+    for op in comp.ops:
+        m = _PARAM_IDX_RE.search(op.rhs)
+        if op.kind == "parameter" and m:
+            idx_of[op.name] = int(m.group(1))
+    sliced: dict[int, int] = {}
+    full_use: set[int] = set()
+    shapes = {op.name: (op.dtype, op.dims) for op in comp.ops}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            continue
+        operands = _operand_names(op.rhs)
+        for pos, o in enumerate(operands):
+            if o not in idx_of:
+                continue
+            i = idx_of[o]
+            if op.kind == "dynamic-slice" and pos == 0:
+                sliced[i] = sliced.get(i, 0) + _shape_bytes(op.dtype, op.dims)
+            elif op.kind == "dynamic-update-slice" and pos == 0:
+                upd = operands[1] if len(operands) > 1 else None
+                b = _shape_bytes(*shapes[upd]) if upd in shapes else 0
+                sliced[i] = sliced.get(i, 0) + b
+            else:
+                full_use.add(i)
+    return {i: b for i, b in sliced.items() if i not in full_use}
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    mult, fusion_called = multiplicities(comps)
+
+    # name -> (dtype, dims) across all comps for operand resolution
+    shapes: dict[str, tuple[str, str]] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = (op.dtype, op.dims)
+
+    # fusion-computation name -> {param_idx: bytes actually read}
+    fusion_reads: dict[str, dict[int, int]] = {
+        name: _fusion_param_reads(c) for name, c in comps.items()}
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_by_op: dict[str, float] = {}
+    coll_counts: dict[str, int] = {}
+    # HBM bytes attributable to kernel-fusable scopes (flash attention, SSD
+    # chunks, mLSTM chunks): on TPU these live in VMEM inside a Pallas
+    # kernel; the XLA-only lowering streams them. Reported separately so the
+    # roofline can show both the XLA baseline and the kernelized projection.
+    scope_bytes: dict[str, float] = {}
+    scope_re = re.compile(r'op_name="[^"]*?(\w+_scope)')
+
+    for c in comps.values():
+        w = mult.get(c.name, 0.0)
+        if w <= 0:
+            continue
+        body_level = c.name not in fusion_called
+        for op in c.ops:
+            if op.kind == "dot":
+                cm = _CONTRACT_RE.search(op.rhs)
+                operands = _operand_names(op.rhs)
+                csize = 1
+                if cm and operands and operands[0] in shapes:
+                    ldims = shapes[operands[0]][1].split(",")
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(ldims) and ldims[int(ci)]:
+                            csize *= int(ldims[int(ci)])
+                dot_flops += w * 2.0 * _shape_numel(op.dims) * csize
+            base = op.kind.replace("-start", "")
+            if base in _COLL_OPS and not op.kind.endswith("-done"):
+                if op.dims or op.dtype:
+                    b = _shape_bytes(op.dtype, op.dims)
+                else:  # tuple result
+                    b = sum(_shape_bytes(d, s)
+                            for d, s in _TUPLE_SHAPES_RE.findall(op.rhs.split(base)[0]))
+                coll_bytes += w * b
+                coll_by_op[base] = coll_by_op.get(base, 0.0) + w * b
+                coll_counts[base] = coll_counts.get(base, 0) + 1
+            if body_level and op.kind in _HBM_OPS:
+                b = _shape_bytes(op.dtype, op.dims) if op.dims or op.dtype else 0
+                operands = _operand_names(op.rhs)
+                reads = None
+                if op.kind == "fusion":
+                    cm = _CALLS_RE.search(op.rhs)
+                    if cm and cm.group(1) in fusion_reads:
+                        reads = fusion_reads[cm.group(1)]
+                if op.kind == "dynamic-slice":
+                    # read = the slice (result), not the sliced-into tensor
+                    b += _shape_bytes(op.dtype, op.dims)
+                    operands = []
+                elif op.kind == "dynamic-update-slice":
+                    upd = operands[1] if len(operands) > 1 else None
+                    b += 2 * (_shape_bytes(*shapes[upd]) if upd in shapes else 0)
+                    operands = []
+                for pos, o in enumerate(operands):
+                    if o not in shapes:
+                        continue
+                    if reads is not None and pos in reads:
+                        b += reads[pos]
+                    else:
+                        b += _shape_bytes(*shapes[o])
+                hbm_bytes += w * b
+                if op.kind != "dot":  # dots stay in the kernelized projection
+                    sm = scope_re.search(op.rhs)
+                    if sm:
+                        scope_bytes[sm.group(1)] = scope_bytes.get(sm.group(1), 0.0) + w * b
+
+    return {"dot_flops": dot_flops, "hbm_bytes": hbm_bytes,
+            "collective_bytes": coll_bytes, "coll_by_op": coll_by_op,
+            "coll_counts": coll_counts, "scope_bytes": scope_bytes}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Back-compat wrapper used by dryrun: multiplicity-weighted collectives."""
+    a = analyze(hlo_text)
+    return {"total": a["collective_bytes"], "by_op": a["coll_by_op"],
+            "counts": a["coll_counts"]}

@@ -1,0 +1,115 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all **per device** (cost_analysis is
+post-SPMD):
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per token — the
+"useful flops" yardstick that catches remat/redundancy waste, and the
+roofline fraction = useful_time / max(term)s.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (~per chip, 1 link active)
+
+TRAIN_FLOP_MULT = 3.0        # fwd + bwd = 3x forward matmul flops
+
+
+def tokens_of(shape_name: str) -> int:
+    from repro.configs.shapes import SHAPES
+    s = SHAPES[shape_name]
+    if s.kind == "train" or s.kind == "prefill":
+        return s.batch * s.seq
+    return s.batch                           # decode: one token per sequence
+
+
+def analyze_record(rec: dict, chips: int) -> dict:
+    from repro.configs.shapes import SHAPES
+    shape = SHAPES[rec["shape"]]
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    n_active = rec.get("active_params", rec.get("params", 0))
+    mult = TRAIN_FLOP_MULT if shape.kind == "train" else 1.0
+    useful = 2.0 * n_active * tokens_of(rec["shape"]) * mult  # 2ND fwd (6ND train)
+    useful_per_dev = useful / chips
+    hlo_flops = max(rec["flops_per_device"], 1.0)
+    t_bound = max(terms.values())
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": useful_per_dev,
+        "useful_ratio": useful_per_dev / hlo_flops,
+        "roofline_fraction": (useful_per_dev / PEAK_FLOPS) / t_bound if t_bound else 0.0,
+        "step_time_bound_s": t_bound,
+    }
+
+
+def load(path: str, mesh: str | None = None, tag: str = "baseline"):
+    recs = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if not r.get("ok"):
+                continue
+            if mesh and r["mesh"] != mesh:
+                continue
+            if tag and r.get("tag", "baseline") != tag:
+                continue
+            seen[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return list(seen.values())
+
+
+def table(path: str, mesh: str = "16x16", tag: str = "baseline") -> list[dict]:
+    chips = 512 if mesh == "2x16x16" else 256
+    rows = []
+    for r in load(path, mesh, tag):
+        a = analyze_record(r, chips)
+        rows.append({**r, **a})
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<20} {'shape':<12} {'bottleneck':<11} "
+           f"{'t_comp(ms)':>10} {'t_mem(ms)':>10} {'t_coll(ms)':>10} "
+           f"{'useful%':>8} {'roofline%':>9}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:<20} {r['shape']:<12} {r['bottleneck']:<11} "
+            f"{r['t_compute']*1e3:>10.2f} {r['t_memory']*1e3:>10.2f} "
+            f"{r['t_collective']*1e3:>10.2f} {r['useful_ratio']*100:>7.1f}% "
+            f"{r['roofline_fraction']*100:>8.1f}%")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = table(args.inp, args.mesh, args.tag)
+    print(render(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns (abstract_inputs, partition_specs) for the
+given (arch, input-shape) cell. Modality frontends are STUBS: the audio/vlm
+entries provide precomputed frame/patch embeddings, per the assignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import Shape
+from repro.models import model as Mdl
+from repro.models.config import ModelConfig
+from repro.models.module import ShardingRules
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules):
+    B, S = shape.batch, shape.seq
+    toks = S
+    batch = {}
+    specs = {}
+    if cfg.family == "vlm":
+        toks = S - cfg.num_patches
+        batch["frontend"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        specs["frontend"] = P(rules.batch, None, None)
+    if cfg.family == "audio":
+        batch["frontend"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        specs["frontend"] = P(rules.batch, None, None)
+    batch["tokens"] = _sds((B, toks), jnp.int32)
+    batch["targets"] = _sds((B, toks if cfg.family != "vlm" else toks), jnp.int32)
+    batch["loss_mask"] = _sds(batch["targets"].shape, jnp.float32)
+    for k in ("tokens", "targets", "loss_mask"):
+        specs[k] = P(rules.batch, None)
+    return batch, specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules):
+    B, S = shape.batch, shape.seq
+    toks = S - (cfg.num_patches if cfg.family == "vlm" else 0)
+    inputs = {"tokens": _sds((B, toks), jnp.int32)}
+    specs = {"tokens": P(rules.batch, None)}
+    if cfg.family == "vlm":
+        inputs["frontend"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        specs["frontend"] = P(rules.batch, None, None)
+    if cfg.family == "audio":
+        inputs["frontend"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        specs["frontend"] = P(rules.batch, None, None)
+    return inputs, specs
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules):
+    """decode_* cells: one new token with a KV cache of seq_len."""
+    B, S = shape.batch, shape.seq
+    cache = Mdl.init_cache(cfg, B, S, abstract=True)
+    cspecs = Mdl.cache_specs(cfg, rules)
+    inputs = {"cache": cache, "tokens": _sds((B, 1), jnp.int32)}
+    specs = {"cache": cspecs, "tokens": P(rules.batch, None)}
+    return inputs, specs

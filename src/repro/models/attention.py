@@ -1,0 +1,142 @@
+"""Attention implementations: ref / chunked (flash algorithm in pure JAX) /
+pallas (the TPU kernel), plus cache-decode attention.
+
+``chunked`` is the dry-run default: a ``lax.scan`` over KV blocks with online
+softmax, so the lowered HLO never materializes the (S, S) score matrix — the
+compiled bytes/flops match what the TPU flash kernel would do, which keeps
+the roofline honest at 32k/500k contexts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+NO_WINDOW = 1 << 30
+
+
+def _mask(rows, cols, causal: bool, window, kv_len):
+    """window may be a traced int32 (per-layer kinds select it inside scan);
+    NO_WINDOW (2^30) makes the clause a no-op."""
+    m = cols < kv_len
+    if causal:
+        m &= rows >= cols
+    m &= cols > rows - (NO_WINDOW if window is None else window)
+    return m
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, kv_len=None):
+    """Materialized-score GQA attention (oracle). q:(B,S,H,D) k/v:(B,S,KVH,D)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    rows = jnp.arange(sq)[:, None] + (sk - sq if causal else 0)
+    cols = jnp.arange(sk)[None, :]
+    m = _mask(rows, cols, causal, window, sk if kv_len is None else kv_len)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None, kv_len=None,
+                      chunk=1024, p_dtype=None):
+    """Flash algorithm as a lax.scan over KV chunks (no S^2 materialization).
+
+    Wrapped in a named_scope so the HLO accounting can attribute the
+    intermediate HBM traffic that the Pallas kernel keeps in VMEM on TPU."""
+    with jax.named_scope("flash_attention_scope"):
+        return _attention_chunked(q, k, v, causal=causal, window=window,
+                                  kv_len=kv_len, chunk=chunk, p_dtype=p_dtype)
+
+
+def _attention_chunked(q, k, v, *, causal, window, kv_len, chunk, p_dtype=None):
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkv = (sk + pad) // chunk
+    kv_len = jnp.asarray(sk if kv_len is None else kv_len, jnp.int32)
+
+    qf = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, sq, kvh, g, d)
+    kc = k.astype(jnp.float32).reshape(b, nkv, chunk, kvh, d).swapaxes(0, 1)
+    vc = v.astype(jnp.float32).reshape(b, nkv, chunk, kvh, d).swapaxes(0, 1)
+
+    rows = jnp.arange(sq)[:, None] + (sk - sq if causal else 0)
+
+    def step(carry, xs):
+        acc, m_prev, l_prev = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb)
+        cols = ci * chunk + jnp.arange(chunk)[None, :]
+        msk = _mask(rows, cols, causal, window, kv_len)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+        if p_dtype is not None:   # store/stream P at reduced precision
+            p = p.astype(p_dtype)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    m0 = jnp.full((b, kvh, g, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(nkv)))
+    o = acc / jnp.maximum(l, 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, kv_len, *, window=None):
+    """Single-step decode: q:(B,1,H,D) against cache:(B,S,KVH,D).
+
+    Softmax runs over the (possibly sequence-sharded) cache axis — GSPMD
+    turns the max/sum into the flash-decoding partial-softmax all-reduce.
+    """
+    b, _, h, d = q.shape
+    _, sk, kvh, _ = k_cache.shape
+    g = h // kvh
+    qf = (q.astype(jnp.float32) * (d ** -0.5)).reshape(b, kvh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    cols = jnp.arange(sk)[None, :]
+    m = cols < kv_len
+    m &= cols > kv_len - 1 - (NO_WINDOW if window is None else window)
+    s = jnp.where(m[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="chunked", causal=True, window=None,
+              kv_len=None, chunk=1024, p_dtype=None):
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window, kv_len=kv_len)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 kv_len=kv_len, chunk=chunk, p_dtype=p_dtype)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as kops
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        o = kops.flash_attention(qt, kt, vt, kv_len, causal=causal, window=window)
+        return o.transpose(0, 2, 1, 3)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,193 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, GQA attention block, MoE."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import attention, attention_decode
+from .config import ModelConfig
+from .module import Creator
+
+
+# ----------------------------------------------------------------- basics
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D). Rotates pairs (d, d + D/2)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- MLP / MoE
+def mlp_init(c: Creator, cfg: ModelConfig, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "gate": c("mlp.gate", (D, F), ("embed", "mlp")),
+        "up": c("mlp.up", (D, F), ("embed", "mlp")),
+        "down": c("mlp.down", (F, D), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, compute_dtype):
+    x = x.astype(compute_dtype)
+    g = jnp.einsum("bsd,df->bsf", x, p["gate"].astype(compute_dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(compute_dtype))
+
+
+def moe_init(c: Creator, cfg: ModelConfig):
+    D, E = cfg.d_model, cfg.num_experts
+    F = cfg.moe_d_ff or cfg.d_ff
+    return {
+        "router": c("moe.router", (D, E), ("embed", None)),
+        "gate": c("moe.gate", (E, D, F), ("expert", "embed", "mlp")),
+        "up": c("moe.up", (E, D, F), ("expert", "embed", "mlp")),
+        "down": c("moe.down", (E, F, D), ("expert", "mlp", "embed")),
+    }
+
+
+def moe_apply(p, x, cfg: ModelConfig, rules):
+    """MoE front door: dense GSPMD dispatch or explicit shard_map EP."""
+    if cfg.moe_impl == "shard_map":
+        from .moe_ep import moe_apply_ep
+        return moe_apply_ep(p, x, cfg, rules)
+    return moe_apply_dense(p, x, cfg, rules)
+
+
+def moe_apply_dense(p, x, cfg: ModelConfig, rules):
+    """Capacity-bounded scatter dispatch (GSPMD-friendly, static shapes).
+
+    tokens are flattened to (T, D), routed top-k, scattered into an
+    (E, C, D) buffer (C = capacity), expert-matmul'd as one batched einsum
+    over the expert dim (EP-sharded), and combined back with the router
+    weights. Overflowing tokens are dropped (standard capacity-factor MoE).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    F = cfg.moe_d_ff or cfg.d_ff
+    T = b * s
+    C = max(8, int(cfg.capacity_factor * T * K / E))
+    xt = x.reshape(T, D).astype(dt)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(dt)).astype(jnp.float32)
+    gates, idx = jax.lax.top_k(logits, K)                  # (T, K)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    flat_e = idx.reshape(-1)                               # (T*K,)
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (T*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)            # exclusive count
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < C
+    slot = jnp.where(keep, slot, C - 1)
+
+    src = jnp.repeat(jnp.arange(T), K)
+    disp = jnp.zeros((E, C, D), dt)
+    disp = disp.at[flat_e, slot].add(
+        jnp.where(keep[:, None], xt[src], 0).astype(dt), mode="drop")
+    from .transformer import maybe_constrain
+    # capacity dim shards over the batch axes: keeps the (E, C, D) dispatch
+    # buffer O(tokens/device) even when experts are replicated (mixtral)
+    disp = maybe_constrain(disp, P(rules.expert, rules.batch, None))
+
+    g = jnp.einsum("ecd,edf->ecf", disp, p["gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", disp, p["up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(dt))
+    out = maybe_constrain(out, P(rules.expert, rules.batch, None))
+
+    gathered = out[flat_e, slot]                           # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = gates.reshape(-1)[:, None].astype(dt)
+    combined = jnp.zeros((T, D), dt).at[src].add(gathered * w)
+    return combined.reshape(b, s, D)
+
+
+# ------------------------------------------------------- attention block
+def attn_init(c: Creator, cfg: ModelConfig, prefix="attn"):
+    D = cfg.d_model
+    return {
+        "wq": c(f"{prefix}.wq", (D, cfg.q_dim), ("embed", "heads")),
+        "wk": c(f"{prefix}.wk", (D, cfg.kv_dim), ("embed", "heads")),
+        "wv": c(f"{prefix}.wv", (D, cfg.kv_dim), ("embed", "heads")),
+        "wo": c(f"{prefix}.wo", (cfg.q_dim, D), ("heads", "embed")),
+    }
+
+
+def attn_qkv(p, x, cfg: ModelConfig, positions, theta):
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    x = x.astype(dt)
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt)).reshape(b, s, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt)).reshape(b, s, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt)).reshape(b, s, cfg.num_kv_heads, hd)
+    if theta is not None:   # theta may be traced (per-layer kind selection)
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, positions, theta, causal=True,
+               window=None, kv_len=None, collect=False):
+    q, k, v = attn_qkv(p, x, cfg, positions, theta)
+    pdt = None if cfg.attn_p_dtype == "float32" else jnp.dtype(cfg.attn_p_dtype)
+    o = attention(q, k, v, impl=cfg.attn_impl, causal=causal, window=window,
+                  kv_len=kv_len, chunk=cfg.attn_chunk, p_dtype=pdt)
+    b, s, _, _ = o.shape
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1), p["wo"].astype(dt))
+    if collect:
+        return out, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+    return out
+
+
+def attn_apply_cross(p, x, enc_h, cfg: ModelConfig, kv: tuple | None = None):
+    """Cross attention: queries from x, keys/values from encoder output
+    (or a precomputed (k, v) pair during decode). No RoPE, not causal."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x.astype(dt), p["wq"].astype(dt)).reshape(
+        b, s, cfg.num_heads, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,dh->bsh", enc_h.astype(dt), p["wk"].astype(dt)).reshape(
+            b, -1, cfg.num_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", enc_h.astype(dt), p["wv"].astype(dt)).reshape(
+            b, -1, cfg.num_kv_heads, hd)
+    else:
+        k, v = kv
+    o = attention(q, k, v, impl=cfg.attn_impl, causal=False, window=None,
+                  chunk=cfg.attn_chunk)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1), p["wo"].astype(dt))
+
+
+def attn_decode_apply(p, x, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                      theta, window=None):
+    """One-token decode against a (B, S, KVH, hd) cache; returns new kv too."""
+    q, k, v = attn_qkv(p, x, cfg, pos[:, None], theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos[0], axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos[0], axis=1)
+    o = attention_decode(q, cache_k, cache_v, pos[0] + 1, window=window)
+    b = x.shape[0]
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, -1), p["wo"].astype(dt))
+    return out, cache_k, cache_v

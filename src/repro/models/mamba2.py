@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) mixer: chunked parallel scan for train/prefill, recurrent
+step for decode. TPU adaptation: the chunk size is the MXU tile (128), so the
+intra-chunk quadratic term and the inter-chunk state propagation are all
+dense matmuls; the sequential dimension only appears in a lax.scan over
+chunks (S/128 steps), keeping both HLO size and VMEM pressure flat.
+
+State-space parameters follow the Mamba2 paper: per-head scalar decay
+``a = -exp(A_log)``, input-dependent ``dt`` (softplus), shared (G=1) B/C
+projections of size ``ssm_state``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .module import Creator
+
+_CONV_K = 4
+
+
+def mamba2_init(c: Creator, cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.resolved_ssm_heads
+    N = cfg.ssm_state
+    return {
+        # order: [z (gate) | x | B | C | dt]
+        "in_proj": c("mamba.in", (D, 2 * di + 2 * N + H), ("embed", "heads")),
+        "conv": c("mamba.conv", (_CONV_K, di + 2 * N), (None, "heads"), scale=0.5),
+        "A_log": c("mamba.A", (H,), (None,), scale="zeros"),
+        "D": c("mamba.D", (H,), (None,), scale="ones"),
+        "dt_bias": c("mamba.dtb", (H,), (None,), scale="zeros"),
+        "norm": c("mamba.norm", (di,), (None,), scale="zeros"),
+        "out_proj": c("mamba.out", (di, D), ("heads", "embed")),
+    }
+
+
+def _split(p, cfg, u):
+    """in_proj + causal depthwise conv; returns z, x, Bm, Cm, dt, raw xBC."""
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    proj = jnp.einsum("bsd,de->bse", u.astype(dt_c), p["in_proj"].astype(dt_c))
+    z, xBC_raw, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    # causal depthwise conv over (x|B|C)
+    k = p["conv"].astype(dt_c)
+    pad = jnp.pad(xBC_raw, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    xBC = sum(pad[:, i:i + xBC_raw.shape[1]] * k[i] for i in range(_CONV_K))
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    return z, x, Bm, Cm, dt, xBC_raw
+
+
+def _gates(p, cfg, dt):
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return a, dt                                            # dt: (B,S,H)
+
+
+def mamba2_apply(p, u, cfg: ModelConfig, return_state: bool = False):
+    """Chunked SSD forward. u: (B, S, D) -> (B, S, D) (+ final state)."""
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    B_, S, D = u.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    P = di // H
+    Q = cfg.ssm_chunk
+    pad = (-S) % Q
+    z, x, Bm, Cm, dt, xBC_raw = _split(p, cfg, u)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        # -1e9 -> softplus ~ 0: padded steps neither decay nor feed the state
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+    a, dtf = _gates(p, cfg, dt)                              # dtf (B,S',H)
+    Sp = S + pad
+    nc = Sp // Q
+
+    xh = x.reshape(B_, nc, Q, H, P).astype(jnp.float32)
+    Bh = Bm.reshape(B_, nc, Q, N).astype(jnp.float32)
+    Ch = Cm.reshape(B_, nc, Q, N).astype(jnp.float32)
+    ad = (a[None, None] * dtf).reshape(B_, nc, Q, H)         # log decay per step
+    dtc = dtf.reshape(B_, nc, Q, H)
+
+    def chunk(h, xs):
+        xq, bq, cq, adq, dtq = xs                            # (B,Q,...)
+        cum = jnp.cumsum(adq, axis=1)                        # (B,Q,H)
+        # intra-chunk: L_ij = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None] - cum[:, None, :]             # (B,Q,Q,H)
+        ii = jnp.arange(Q)
+        causal = ii[:, None] >= ii[None, :]
+        Lm = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)              # (B,Q,Q)
+        w = cb[..., None] * Lm * dtq[:, None]                # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhnp->bihp", cq, h) * jnp.exp(cum)[..., None]
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # (B,Q,H)
+        sb = jnp.einsum("bjn,bjh,bjhp->bhnp", bq, dtq * decay_to_end, xq)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + sb
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((B_, H, N, P), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bh, Ch, ad, dtc))
+    with jax.named_scope("ssd_chunk_scope"):
+        h_final, ys = jax.lax.scan(chunk, h0, xs)            # (nc,B,Q,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, Sp, H, P)[:, :S]
+    y = y + xh.reshape(B_, Sp, H, P)[:, :S] * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B_, S, di)
+    # gated RMSNorm then out-proj (mamba2 block tail)
+    zf = z.astype(jnp.float32)
+    y = y * jax.nn.silu(zf)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y * (1.0 + p["norm"].astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_c), p["out_proj"].astype(dt_c))
+    if return_state:
+        tail = xBC_raw[:, -(_CONV_K - 1):].astype(jnp.float32)
+        need = _CONV_K - 1 - tail.shape[1]
+        if need > 0:
+            tail = jnp.pad(tail, ((0, 0), (need, 0), (0, 0)))
+        return out, {"h": h_final, "conv": tail}
+    return out
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, N = cfg.resolved_ssm_heads, cfg.ssm_state
+    P = cfg.d_inner // H
+    return {
+        "h": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, _CONV_K - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_step(p, u, state, cfg: ModelConfig):
+    """Single-token recurrence. u: (B, 1, D). Constant memory in context."""
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    P = di // H
+    proj = jnp.einsum("bsd,de->bse", u.astype(dt_c), p["in_proj"].astype(dt_c))
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    hist = jnp.concatenate([state["conv"], xBC.astype(jnp.float32)[:, 0:1]], axis=1)
+    k = p["conv"].astype(jnp.float32)
+    xBC = sum(hist[:, i] * k[i] for i in range(_CONV_K))     # (B, di+2N)
+    new_conv = hist[:, 1:]
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    a, dtf = _gates(p, cfg, dt[:, 0])                        # dtf (B,H)
+    xh = x.reshape(-1, H, P).astype(jnp.float32)
+    decay = jnp.exp(a[None] * dtf)                           # (B,H)
+    h = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dtf, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(-1, 1, di)
+    zf = z.astype(jnp.float32)
+    y = y * jax.nn.silu(zf)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y * (1.0 + p["norm"].astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_c), p["out_proj"].astype(dt_c))
+    return out, {"h": h, "conv": new_conv}

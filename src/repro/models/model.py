@@ -1,0 +1,558 @@
+"""Unified model API: init / forward / prefill / decode for all families.
+
+Every entry point is a pure function of (cfg, params, inputs) so the same
+code path serves real training (Initializer params), sharding-spec derivation
+(SpecCreator), and the 512-device dry-run (AbstractCreator + jit.lower).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import mamba2 as M
+from . import xlstm as X
+from .attention import NO_WINDOW
+from .config import ModelConfig
+from .module import AbstractCreator, Creator, Initializer, ShardingRules, stack_init
+from .transformer import (block_apply, block_decode, block_init,
+                          hybrid_block_init, shared_attn_init,
+                          xlstm_group_init, _remat, _constrain)
+
+# =========================================================== param building
+
+def init_params(cfg: ModelConfig, creator: Creator):
+    D, V = cfg.d_model, cfg.vocab_size
+    p: dict[str, Any] = {
+        "embed": creator("embed", (V, D), ("vocab", "embed"), scale=1.0),
+        "final_norm": creator("final_norm", (D,), (None,), scale="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = creator("head", (D, V), ("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["layers"] = stack_init(creator, cfg.num_layers,
+                                 lambda c: block_init(c, cfg))
+    elif fam == "hybrid":
+        p["layers"] = stack_init(creator, cfg.num_layers,
+                                 lambda c: hybrid_block_init(c, cfg))
+        p["shared"] = shared_attn_init(creator, cfg)
+    elif fam == "ssm":
+        G = cfg.num_layers // cfg.slstm_every
+        p["groups"] = stack_init(creator, G,
+                                 lambda c: xlstm_group_init(c, cfg))
+    elif fam == "audio":
+        p["enc_layers"] = stack_init(creator, cfg.enc_layers,
+                                     lambda c: block_init(c, cfg))
+        p["enc_norm"] = creator("enc_norm", (D,), (None,), scale="zeros")
+        p["layers"] = stack_init(creator, cfg.num_layers,
+                                 lambda c: _dec_block_init(c, cfg))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _dec_block_init(c: Creator, cfg: ModelConfig):
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    return {
+        "ln1": c("ln1", (cfg.d_model,), (None,), scale="zeros"),
+        "attn": L.attn_init(c, cfg),
+        "lnx": c("lnx", (cfg.d_model,), (None,), scale="zeros"),
+        "xattn": L.attn_init(c, cfg, prefix="xattn"),
+        "ln2": c("ln2", (cfg.d_model,), (None,), scale="zeros"),
+        "mlp": L.mlp_init(c, cfg),
+    }
+
+
+def param_specs(cfg: ModelConfig, rules: ShardingRules):
+    from .module import SpecCreator
+    return init_params(cfg, SpecCreator(rules))
+
+
+def abstract_params(cfg: ModelConfig):
+    return init_params(cfg, AbstractCreator(cfg.param_dtype))
+
+
+# ============================================================= forward paths
+
+def _embed(cfg, params, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = params["embed"].astype(dt)[tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, dt)
+    return h
+
+
+def _head(cfg, params, h):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = L.rmsnorm(h, params["final_norm"])
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(dt)
+    return jnp.einsum("bsd,dv->bsv", h.astype(dt), w).astype(cfg.logit_dtype)
+
+
+def _kinds(cfg):
+    return jnp.asarray(cfg.layer_kinds(), jnp.int32)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, rules: ShardingRules,
+            frontend: jax.Array | None = None, collect_cache: bool = False):
+    """Causal-LM forward. Returns logits, or (logits, cache) for prefill."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _forward_stack(cfg, params, tokens, rules, frontend, collect_cache)
+    if fam == "hybrid":
+        return _forward_hybrid(cfg, params, tokens, rules, collect_cache)
+    if fam == "ssm":
+        return _forward_xlstm(cfg, params, tokens, rules, collect_cache)
+    if fam == "audio":
+        return _forward_encdec(cfg, params, tokens, rules, frontend, collect_cache)
+    raise ValueError(fam)
+
+
+def _forward_stack(cfg, params, tokens, rules, frontend, collect):
+    h = _embed(cfg, params, tokens)
+    if cfg.family == "vlm":
+        assert frontend is not None, "vlm needs patch embeddings"
+        h = jnp.concatenate([frontend.astype(h.dtype), h], axis=1)
+    h = _constrain(h, rules, False)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    kinds = _kinds(cfg)
+
+    def body(h, xs):
+        lp, kind = xs
+        if collect:
+            h, kv = block_apply(lp, h, cfg, rules, kind=kind,
+                                positions=positions, collect=True)
+            return h, kv
+        h = block_apply(lp, h, cfg, rules, kind=kind, positions=positions)
+        return h, None
+
+    body = _remat(body, cfg.remat_policy)
+    h, kv = jax.lax.scan(body, h, (params["layers"], kinds))
+    logits = _head(cfg, params, h)
+    if collect:
+        cache = {"k": kv[0], "v": kv[1], "pos": jnp.int32(S)}
+        return logits, cache
+    return logits
+
+
+def _hybrid_split(cfg, params):
+    """Split the stacked hybrid layers into [G, every, ...] groups + tail."""
+    every = cfg.shared_attn_every
+    G = cfg.num_layers // every
+    tail_n = cfg.num_layers - G * every
+    grouped = jax.tree.map(
+        lambda t: t[: G * every].reshape(G, every, *t.shape[1:]), params["layers"])
+    tail = jax.tree.map(lambda t: t[G * every:], params["layers"])
+    return grouped, tail, G, tail_n
+
+
+def _mamba_block(lp, h, cfg, rules):
+    h = h + M.mamba2_apply(lp["mamba"], L.rmsnorm(h, lp["ln"]), cfg)
+    return _constrain(h, rules, False)
+
+
+def _shared_attn_apply(sp, h, cfg, rules, positions):
+    a = L.attn_apply(sp["attn"], L.rmsnorm(h, sp["ln1"]), cfg,
+                     positions=positions, theta=cfg.rope_theta, causal=True,
+                     window=None)
+    h = h + a
+    h = h + L.mlp_apply(sp["mlp"], L.rmsnorm(h, sp["ln2"]), cfg.compute_dtype)
+    return _constrain(h, rules, False)
+
+
+def _forward_hybrid(cfg, params, tokens, rules, collect):
+    h = _embed(cfg, params, tokens)
+    h = _constrain(h, rules, False)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    grouped, tail, G, tail_n = _hybrid_split(cfg, params)
+    sp = params["shared"]
+    every = cfg.shared_attn_every
+
+    def group(h, gp):
+        def inner(h, lp):
+            return _mamba_block(lp, h, cfg, rules), None
+        pre = jax.tree.map(lambda t: t[: every - 1], gp)
+        h, _ = jax.lax.scan(inner, h, pre)
+        h = _shared_attn_apply(sp, h, cfg, rules, positions)
+        last = jax.tree.map(lambda t: t[every - 1], gp)
+        h = _mamba_block(last, h, cfg, rules)
+        return h, None
+
+    h, _ = jax.lax.scan(_remat(group, cfg.remat_policy), h, grouped)
+    for i in range(tail_n):
+        lp = jax.tree.map(lambda t: t[i], tail)
+        h = _mamba_block(lp, h, cfg, rules)
+    logits = _head(cfg, params, h)
+    if collect:
+        raise NotImplementedError("hybrid prefill uses prefill()")
+    return logits
+
+
+def _forward_xlstm(cfg, params, tokens, rules, collect):
+    h = _embed(cfg, params, tokens)
+    h = _constrain(h, rules, False)
+
+    def group(h, gp):
+        def inner(h, xs):
+            ln, lp = xs
+            y = X.mlstm_apply(lp, L.rmsnorm(h, ln), cfg)
+            return _constrain(h + y, rules, False), None
+        h, _ = jax.lax.scan(inner, h, (gp["mlstm_ln"], gp["mlstm"]))
+        y, _ = X.slstm_apply(gp["slstm"], L.rmsnorm(h, gp["slstm_ln"]), cfg)
+        return _constrain(h + y, rules, False), None
+
+    h, _ = jax.lax.scan(_remat(group, cfg.remat_policy), h, params["groups"])
+    logits = _head(cfg, params, h)
+    if collect:
+        raise NotImplementedError("ssm prefill uses prefill()")
+    return logits
+
+
+def _forward_encdec(cfg, params, tokens, rules, frames, collect):
+    assert frames is not None, "audio family needs frame embeddings"
+    dt = jnp.dtype(cfg.compute_dtype)
+    enc_h = _constrain(frames.astype(dt), rules, False)
+    enc_pos = jnp.arange(enc_h.shape[1])
+
+    def enc_body(h, lp):
+        h = block_apply(lp, h, cfg, rules, kind=jnp.int32(0),
+                        positions=enc_pos, causal=False)
+        return h, None
+
+    enc_h, _ = jax.lax.scan(_remat(enc_body, cfg.remat_policy),
+                            enc_h, params["enc_layers"])
+    enc_h = L.rmsnorm(enc_h, params["enc_norm"])
+
+    h = _embed(cfg, params, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    def dec_body(h, lp):
+        a = L.attn_apply(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                         positions=positions, theta=cfg.rope_theta,
+                         causal=True, window=None)
+        h = h + a
+        x = L.attn_apply_cross(lp["xattn"], L.rmsnorm(h, lp["lnx"]), enc_h, cfg)
+        h = h + x
+        h = h + L.mlp_apply(lp["mlp"], L.rmsnorm(h, lp["ln2"]), cfg.compute_dtype)
+        return _constrain(h, rules, False), None
+
+    h, _ = jax.lax.scan(_remat(dec_body, cfg.remat_policy), h, params["layers"])
+    logits = _head(cfg, params, h)
+    if collect:
+        raise NotImplementedError("audio prefill uses prefill()")
+    return logits
+
+
+# ============================================================ serving paths
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, abstract: bool = False):
+    """Decode-state pytree. KV caches are bf16; SSM states f32."""
+    z = ((lambda s, d: jax.ShapeDtypeStruct(s, jnp.dtype(d))) if abstract
+         else (lambda s, d: jnp.zeros(s, d)))
+    hd = cfg.resolved_head_dim
+    Lc, B, S = cfg.num_layers, batch, max_len
+    KVH = cfg.num_kv_heads
+    fam = cfg.family
+    cache: dict[str, Any] = {"pos": z((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        cache["k"] = z((Lc, B, S, KVH, hd), jnp.bfloat16)
+        cache["v"] = z((Lc, B, S, KVH, hd), jnp.bfloat16)
+    elif fam == "hybrid":
+        H = cfg.resolved_ssm_heads
+        N = cfg.ssm_state
+        Pd = cfg.d_inner // H
+        G = cfg.num_layers // cfg.shared_attn_every
+        cache["mamba_h"] = z((Lc, B, H, N, Pd), jnp.float32)
+        cache["mamba_conv"] = z((Lc, B, M._CONV_K - 1, cfg.d_inner + 2 * N), jnp.float32)
+        cache["k"] = z((G, B, S, KVH, hd), jnp.bfloat16)
+        cache["v"] = z((G, B, S, KVH, hd), jnp.bfloat16)
+    elif fam == "ssm":
+        G = cfg.num_layers // cfg.slstm_every
+        nm = cfg.slstm_every - 1
+        H = cfg.num_heads
+        Pm = 2 * cfg.d_model // H
+        Ps = cfg.d_model // H
+        cache["mlstm_h"] = z((G, nm, B, H, Pm, Pm + 1), jnp.float32)
+        cache["mlstm_m"] = z((G, nm, B, H), jnp.float32)
+        for nm_ in ("h", "c", "n", "m"):
+            cache[f"slstm_{nm_}"] = z((G, B, H, Ps), jnp.float32)
+    elif fam == "audio":
+        cache["k"] = z((Lc, B, S, KVH, hd), jnp.bfloat16)
+        cache["v"] = z((Lc, B, S, KVH, hd), jnp.bfloat16)
+        cache["xk"] = z((Lc, B, cfg.enc_seq, KVH, hd), jnp.bfloat16)
+        cache["xv"] = z((Lc, B, cfg.enc_seq, KVH, hd), jnp.bfloat16)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules):
+    """PartitionSpecs mirroring init_cache. KV caches are sequence-sharded on
+    the model axis (flash-decoding layout) + batch-sharded on data axes —
+    uniform across archs regardless of kv-head count, and the only viable
+    layout at 500k context."""
+    bx, sx = rules.batch, rules.heads  # seq dim of caches -> model axis
+    fam = cfg.family
+    specs: dict[str, Any] = {"pos": P()}
+    if fam in ("dense", "moe", "vlm", "audio"):
+        specs["k"] = P(None, bx, sx, None, None)
+        specs["v"] = P(None, bx, sx, None, None)
+        if fam == "audio":
+            specs["xk"] = P(None, bx, sx, None, None)
+            specs["xv"] = P(None, bx, sx, None, None)
+    elif fam == "hybrid":
+        specs["mamba_h"] = P(None, bx, sx, None, None)      # shard SSM heads
+        specs["mamba_conv"] = P(None, bx, None, sx)
+        specs["k"] = P(None, bx, sx, None, None)
+        specs["v"] = P(None, bx, sx, None, None)
+    elif fam == "ssm":
+        specs["mlstm_h"] = P(None, None, bx, None, sx, None)  # shard memory P
+        specs["mlstm_m"] = P(None, None, bx, None)
+        for nm_ in ("h", "c", "n", "m"):
+            specs[f"slstm_{nm_}"] = P(None, bx, None, sx)
+    return specs
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, rules: ShardingRules,
+            frontend=None):
+    """Process a prompt; returns (last-token logits, cache at len(prompt))."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        logits, cache = _forward_stack(cfg, params, tokens, rules, frontend, True)
+        return logits[:, -1], cache
+    if fam == "hybrid":
+        return _prefill_hybrid(cfg, params, tokens, rules)
+    if fam == "ssm":
+        return _prefill_xlstm(cfg, params, tokens, rules)
+    if fam == "audio":
+        return _prefill_encdec(cfg, params, tokens, rules, frontend)
+    raise ValueError(fam)
+
+
+def _prefill_hybrid(cfg, params, tokens, rules):
+    h = _embed(cfg, params, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    grouped, tail, G, tail_n = _hybrid_split(cfg, params)
+    sp = params["shared"]
+    every = cfg.shared_attn_every
+
+    def group(h, gp):
+        def inner(h, lp):
+            y, st = M.mamba2_apply(lp["mamba"], L.rmsnorm(h, lp["ln"]), cfg,
+                                   return_state=True)
+            return _constrain(h + y, rules, False), st
+        pre = jax.tree.map(lambda t: t[: every - 1], gp)
+        h, sts_pre = jax.lax.scan(inner, h, pre)
+        a, kv = L.attn_apply(sp["attn"], L.rmsnorm(h, sp["ln1"]), cfg,
+                             positions=positions, theta=cfg.rope_theta,
+                             causal=True, window=None, collect=True)
+        h = h + a
+        h = h + L.mlp_apply(sp["mlp"], L.rmsnorm(h, sp["ln2"]), cfg.compute_dtype)
+        h = _constrain(h, rules, False)
+        h, st_last = inner(h, jax.tree.map(lambda t: t[every - 1], gp))
+        sts = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_[None]]),
+                           sts_pre, st_last)
+        return h, (sts, kv)
+
+    h, (sts_g, kvs) = jax.lax.scan(group, h, grouped)
+    # tail layers (unrolled)
+    tail_sts = []
+    for i in range(tail_n):
+        lp = jax.tree.map(lambda t: t[i], tail)
+        y, st = M.mamba2_apply(lp["mamba"], L.rmsnorm(h, lp["ln"]), cfg,
+                               return_state=True)
+        h = _constrain(h + y, rules, False)
+        tail_sts.append(st)
+    logits = _head(cfg, params, h)
+    # assemble cache: group states (G, every, ...) -> (L, ...)
+    sts_flat = jax.tree.map(lambda t: t.reshape(-1, *t.shape[2:]), sts_g)
+    if tail_sts:
+        tail_stack = jax.tree.map(lambda *t: jnp.stack(t), *tail_sts)
+        sts_flat = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_]),
+                                sts_flat, tail_stack)
+    cache = {"mamba_h": sts_flat["h"], "mamba_conv": sts_flat["conv"],
+             "k": kvs[0], "v": kvs[1], "pos": jnp.int32(S)}
+    return logits[:, -1], cache
+
+
+def _prefill_xlstm(cfg, params, tokens, rules):
+    h = _embed(cfg, params, tokens)
+
+    def group(h, gp):
+        def inner(h, xs):
+            ln, lp = xs
+            y, st = X.mlstm_apply(lp, L.rmsnorm(h, ln), cfg, return_state=True)
+            return _constrain(h + y, rules, False), st
+        h, m_sts = jax.lax.scan(inner, h, (gp["mlstm_ln"], gp["mlstm"]))
+        y, s_st = X.slstm_apply(gp["slstm"], L.rmsnorm(h, gp["slstm_ln"]), cfg)
+        return _constrain(h + y, rules, False), (m_sts, s_st)
+
+    h, (m_sts, s_sts) = jax.lax.scan(group, h, params["groups"])
+    logits = _head(cfg, params, h)
+    cache = {"mlstm_h": m_sts["h"], "mlstm_m": m_sts["m"],
+             "slstm_h": s_sts["h"], "slstm_c": s_sts["c"],
+             "slstm_n": s_sts["n"], "slstm_m": s_sts["m"],
+             "pos": jnp.int32(tokens.shape[1])}
+    return logits[:, -1], cache
+
+
+def _prefill_encdec(cfg, params, tokens, rules, frames):
+    dt = jnp.dtype(cfg.compute_dtype)
+    enc_h = _constrain(frames.astype(dt), rules, False)
+    enc_pos = jnp.arange(enc_h.shape[1])
+
+    def enc_body(h, lp):
+        return block_apply(lp, h, cfg, rules, kind=jnp.int32(0),
+                           positions=enc_pos, causal=False), None
+
+    enc_h, _ = jax.lax.scan(enc_body, enc_h, params["enc_layers"])
+    enc_h = L.rmsnorm(enc_h, params["enc_norm"])
+
+    h = _embed(cfg, params, tokens)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    hd = cfg.resolved_head_dim
+
+    def dec_body(h, lp):
+        a, kv = L.attn_apply(lp["attn"], L.rmsnorm(h, lp["ln1"]), cfg,
+                             positions=positions, theta=cfg.rope_theta,
+                             causal=True, window=None, collect=True)
+        h = h + a
+        xp = lp["xattn"]
+        b = h.shape[0]
+        xk = jnp.einsum("bsd,dh->bsh", enc_h, xp["wk"].astype(enc_h.dtype)).reshape(
+            b, -1, cfg.num_kv_heads, hd).astype(jnp.bfloat16)
+        xv = jnp.einsum("bsd,dh->bsh", enc_h, xp["wv"].astype(enc_h.dtype)).reshape(
+            b, -1, cfg.num_kv_heads, hd).astype(jnp.bfloat16)
+        x = L.attn_apply_cross(xp, L.rmsnorm(h, lp["lnx"]), None, cfg, kv=(xk, xv))
+        h = h + x
+        h = h + L.mlp_apply(lp["mlp"], L.rmsnorm(h, lp["ln2"]), cfg.compute_dtype)
+        return _constrain(h, rules, False), (kv[0], kv[1], xk, xv)
+
+    h, (ks, vs, xks, xvs) = jax.lax.scan(dec_body, h, params["layers"])
+    logits = _head(cfg, params, h)
+    cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs, "pos": jnp.int32(S)}
+    return logits[:, -1], cache
+
+
+# ------------------------------------------------------------- decode step
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, rules: ShardingRules):
+    """One token for every sequence. tokens: (B, 1). Returns (logits, cache)."""
+    fam = cfg.family
+    pos = cache["pos"]
+    h = _embed(cfg, params, tokens)
+    B = tokens.shape[0]
+    pos_vec = jnp.full((B,), pos, jnp.int32)
+    new_cache = dict(cache)
+    kinds = None
+
+    if fam in ("dense", "moe", "vlm"):
+        kinds = _kinds(cfg)
+
+        def body(h, xs):
+            lp, kind, ck, cv = xs
+            h, ck, cv = block_decode(lp, h, cfg, rules, ck, cv, pos_vec, kind=kind)
+            return h, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], kinds,
+                                             cache["k"], cache["v"]))
+        new_cache.update(k=ks, v=vs)
+
+    elif fam == "hybrid":
+        grouped, tail, G, tail_n = _hybrid_split(cfg, params)
+        sp = params["shared"]
+        every = cfg.shared_attn_every
+        Lg = G * every
+        mh = cache["mamba_h"]
+        mc = cache["mamba_conv"]
+        g_st = jax.tree.map(lambda t: t[:Lg].reshape(G, every, *t.shape[1:]),
+                            {"h": mh, "conv": mc})
+
+        def group(h, xs):
+            gp, st, ck, cv = xs
+
+            def inner(h_, xs_):
+                lp, st_ = xs_
+                y, st2 = M.mamba2_step(lp["mamba"], L.rmsnorm(h_, lp["ln"]), st_, cfg)
+                return h_ + y, st2
+
+            pre = jax.tree.map(lambda t: t[: every - 1], gp)
+            pre_st = jax.tree.map(lambda t: t[: every - 1], st)
+            h, new_pre = jax.lax.scan(inner, h, (pre, pre_st))
+            a, ck, cv = L.attn_decode_apply(sp["attn"], L.rmsnorm(h, sp["ln1"]),
+                                            cfg, ck, cv, pos_vec,
+                                            theta=cfg.rope_theta)
+            h = h + a
+            h = h + L.mlp_apply(sp["mlp"], L.rmsnorm(h, sp["ln2"]), cfg.compute_dtype)
+            h, new_last = inner(h, (jax.tree.map(lambda t: t[every - 1], gp),
+                                    jax.tree.map(lambda t: t[every - 1], st)))
+            new_st = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_[None]]),
+                                  new_pre, new_last)
+            return h, (new_st, ck, cv)
+
+        h, (new_g_st, ks, vs) = jax.lax.scan(
+            group, h, (grouped, g_st, cache["k"], cache["v"]))
+        flat = jax.tree.map(lambda t: t.reshape(-1, *t.shape[2:]), new_g_st)
+        tails = []
+        for i in range(tail_n):
+            lp = jax.tree.map(lambda t: t[i], tail)
+            st_i = {"h": mh[Lg + i], "conv": mc[Lg + i]}
+            y, st2 = M.mamba2_step(lp["mamba"], L.rmsnorm(h, lp["ln"]), st_i, cfg)
+            h = h + y
+            tails.append(st2)
+        if tails:
+            tstack = jax.tree.map(lambda *t: jnp.stack(t), *tails)
+            flat = jax.tree.map(lambda a_, b_: jnp.concatenate([a_, b_]), flat, tstack)
+        new_cache.update(mamba_h=flat["h"], mamba_conv=flat["conv"], k=ks, v=vs)
+
+    elif fam == "ssm":
+        def group(h, xs):
+            gp, mh, mm, sh, sc, sn, sm = xs
+
+            def inner(h_, xs_):
+                ln, lp, st_h, st_m = xs_
+                y, st2 = X.mlstm_step(lp, L.rmsnorm(h_, ln), {"h": st_h, "m": st_m}, cfg)
+                return h_ + y, (st2["h"], st2["m"])
+
+            h, (nh, nm_) = jax.lax.scan(inner, h, (gp["mlstm_ln"], gp["mlstm"], mh, mm))
+            st = {"h": sh, "c": sc, "n": sn, "m": sm}
+            y, st2 = X.slstm_step(gp["slstm"], L.rmsnorm(h, gp["slstm_ln"]), st, cfg)
+            return h + y, (nh, nm_, st2["h"], st2["c"], st2["n"], st2["m"])
+
+        h, outs = jax.lax.scan(group, h, (params["groups"], cache["mlstm_h"],
+                                          cache["mlstm_m"], cache["slstm_h"],
+                                          cache["slstm_c"], cache["slstm_n"],
+                                          cache["slstm_m"]))
+        new_cache.update(mlstm_h=outs[0], mlstm_m=outs[1], slstm_h=outs[2],
+                         slstm_c=outs[3], slstm_n=outs[4], slstm_m=outs[5])
+
+    elif fam == "audio":
+        def body(h, xs):
+            lp, ck, cv, xk, xv = xs
+            a, ck, cv = L.attn_decode_apply(lp["attn"], L.rmsnorm(h, lp["ln1"]),
+                                            cfg, ck, cv, pos_vec,
+                                            theta=cfg.rope_theta)
+            h = h + a
+            x = L.attn_apply_cross(lp["xattn"], L.rmsnorm(h, lp["lnx"]), None,
+                                   cfg, kv=(xk, xv))
+            h = h + x
+            h = h + L.mlp_apply(lp["mlp"], L.rmsnorm(h, lp["ln2"]), cfg.compute_dtype)
+            return h, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"],
+                                             cache["v"], cache["xk"], cache["xv"]))
+        new_cache.update(k=ks, v=vs)
+    else:
+        raise ValueError(fam)
+
+    logits = _head(cfg, params, h)
+    new_cache["pos"] = pos + 1
+    return logits[:, 0], new_cache

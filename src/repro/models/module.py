@@ -1,0 +1,114 @@
+"""Param-pytree module plumbing: one structural definition, three readings.
+
+Model code builds parameters through a ``Creator``. Interpreting the same
+structure with different creators yields:
+
+* ``Initializer``    — real arrays (truncated-normal fan-in init),
+* ``SpecCreator``    — a matching pytree of ``PartitionSpec`` (sharding rules),
+* ``AbstractCreator``— ``ShapeDtypeStruct`` stand-ins (dry-run, no allocation).
+
+Logical axes name *what* a dimension is; ``ShardingRules`` maps logical axes
+to mesh axes. This is the MaxText "logical axis rules" pattern distilled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Logical axis vocabulary.
+#   "embed"  — the residual/d_model dim (FSDP-sharded)
+#   "vocab"  — vocabulary dim (TP-sharded: big softmaxes)
+#   "heads"  — flattened attention heads*head_dim dim (TP)
+#   "mlp"    — feed-forward hidden dim (TP)
+#   "expert" — MoE expert dim (EP)
+#   "layers" — scan-stacked layer dim (never sharded)
+#   None     — replicated
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    embed: Any = "data"
+    vocab: Any = "model"
+    heads: Any = "model"
+    mlp: Any = "model"
+    expert: Any = "model"
+    layers: Any = None
+    seq: Any = None          # activation seq dim (SP when = "model")
+    batch: Any = ("pod", "data")
+
+    def spec(self, axes: tuple[str | None, ...]) -> P:
+        return P(*[getattr(self, a) if a else None for a in axes])
+
+
+# Baseline rule sets used by the configs.
+RULES_2D = ShardingRules()                                # (data, model) pod-less
+RULES_EP = ShardingRules()                                # expert -> model (qwen3)
+RULES_TP_FF = ShardingRules(expert=None)                  # mixtral: experts replicated, mlp TP
+
+
+class Creator:
+    def __call__(self, name, shape, axes, dtype, scale): ...
+
+
+class Initializer(Creator):
+    """Materializes truncated-normal params (fan-in scaled)."""
+
+    def __init__(self, rng: jax.Array, dtype: str = "float32"):
+        self.rng = rng
+        self.dtype = dtype
+        self._i = 0
+
+    def __call__(self, name, shape, axes, dtype=None, scale=None):
+        self._i += 1
+        key = jax.random.fold_in(self.rng, self._i)
+        dtype = dtype or self.dtype
+        if scale == "zeros":
+            return jnp.zeros(shape, dtype)
+        if scale == "ones":
+            return jnp.ones(shape, dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = (1.0 / max(fan_in, 1)) ** 0.5 if scale is None else scale
+        return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(dtype)
+
+
+class SpecCreator(Creator):
+    """Yields PartitionSpec leaves from the logical axes."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __call__(self, name, shape, axes, dtype=None, scale=None):
+        assert len(axes) == len(shape), (name, shape, axes)
+        return self.rules.spec(axes)
+
+
+class AbstractCreator(Creator):
+    """Yields ShapeDtypeStructs (no device allocation — dry-run params)."""
+
+    def __init__(self, dtype: str = "float32"):
+        self.dtype = dtype
+
+    def __call__(self, name, shape, axes, dtype=None, scale=None):
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype or self.dtype))
+
+
+def stack_init(creator: Creator, n: int, init_fn):
+    """Build scan-stacked params: leading 'layers' dim on every leaf.
+
+    ``init_fn(sub_creator) -> params`` defines ONE layer; we re-interpret it
+    with a creator that prepends the layer axis. For the Initializer we still
+    materialize layers independently (vmapped fold-in) to decorrelate.
+    """
+    class _Stacked(Creator):
+        def __call__(self, name, shape, axes, dtype=None, scale=None):
+            return creator(name, (n, *shape), ("layers", *axes), dtype, scale)
+
+    return init_fn(_Stacked())
+
+
+def cast_leaves(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)

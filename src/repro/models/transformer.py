@@ -1,0 +1,151 @@
+"""Block definitions + scan-over-layers assembly for all families.
+
+One stacked ``lax.scan`` over layers keeps HLO size O(1) in depth (deepseek:
+95 layers). Heterogeneous patterns (gemma3 local/global) ride through the
+scan as a per-layer integer ``kind`` with *traced* window/theta selection —
+same param shapes, branch-free. Genuinely different blocks (zamba2's shared
+attention, xlstm's sLSTM) use shared closures / grouped scans.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import mamba2 as M
+from . import xlstm as X
+from .config import ModelConfig
+from .module import Creator, ShardingRules
+
+NO_WINDOW = 1 << 30
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def maybe_constrain(x, spec: P):
+    """with_sharding_constraint that no-ops on an unsharded spec (so model
+    code runs outside any mesh context, e.g. CPU smoke tests)."""
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _constrain(h, rules: ShardingRules, seq_sharded: bool):
+    spec = P(rules.batch, rules.seq if seq_sharded else None, None)
+    return maybe_constrain(h, spec)
+
+
+# ------------------------------------------------------------ dense / moe
+def block_init(c: Creator, cfg: ModelConfig):
+    p = {
+        "ln1": c("ln1", (cfg.d_model,), (None,), scale="zeros"),
+        "attn": L.attn_init(c, cfg),
+        "ln2": c("ln2", (cfg.d_model,), (None,), scale="zeros"),
+    }
+    if cfg.num_experts:
+        p["moe"] = L.moe_init(c, cfg)
+    else:
+        p["mlp"] = L.mlp_init(c, cfg)
+    return p
+
+
+def layer_window_theta(cfg: ModelConfig, kind):
+    window = jnp.where(kind == 1,
+                       jnp.int32(cfg.local_window or cfg.window or NO_WINDOW),
+                       jnp.int32(cfg.window or NO_WINDOW))
+    theta = jnp.where(kind == 1, cfg.rope_theta,
+                      cfg.global_rope_theta or cfg.rope_theta)
+    return window, theta
+
+
+def block_apply(p, h, cfg: ModelConfig, rules, *, kind, positions,
+                kv_len=None, causal=True, collect=False):
+    """kind: 0 = global/full attn, 1 = local/windowed (traced ok)."""
+    window, theta = layer_window_theta(cfg, kind)
+    a = L.attn_apply(p["attn"], L.rmsnorm(h, p["ln1"]), cfg,
+                     positions=positions, theta=theta, causal=causal,
+                     window=window, kv_len=kv_len, collect=collect)
+    if collect:
+        a, kv = a
+    h = h + a
+    h = _constrain(h, rules, cfg.seq_parallel)
+    x = L.rmsnorm(h, p["ln2"])
+    if cfg.num_experts:
+        m = L.moe_apply(p["moe"], x, cfg, rules)
+    else:
+        m = L.mlp_apply(p["mlp"], x, cfg.compute_dtype)
+    h = h + m
+    h = _constrain(h, rules, cfg.seq_parallel)
+    return (h, kv) if collect else h
+
+
+def block_decode(p, h, cfg, rules, cache_k, cache_v, pos, *, kind):
+    window = jnp.where(kind == 1,
+                       jnp.int32(cfg.local_window or cfg.window or NO_WINDOW),
+                       jnp.int32(cfg.window or NO_WINDOW))
+    theta = jnp.where(kind == 1, cfg.rope_theta,
+                      cfg.global_rope_theta or cfg.rope_theta)
+    a, ck, cv = L.attn_decode_apply(p["attn"], L.rmsnorm(h, p["ln1"]), cfg,
+                                    cache_k, cache_v, pos, theta=theta,
+                                    window=window)
+    h = h + a
+    x = L.rmsnorm(h, p["ln2"])
+    if cfg.num_experts:
+        m = L.moe_apply(p["moe"], x, cfg, rules)
+    else:
+        m = L.mlp_apply(p["mlp"], x, cfg.compute_dtype)
+    return h + m, ck, cv
+
+
+# ------------------------------------------------------------ hybrid (zamba2)
+def hybrid_block_init(c: Creator, cfg: ModelConfig):
+    return {
+        "ln": c("ln", (cfg.d_model,), (None,), scale="zeros"),
+        "mamba": M.mamba2_init(c, cfg),
+    }
+
+
+def shared_attn_init(c: Creator, cfg: ModelConfig):
+    return {
+        "ln1": c("sln1", (cfg.d_model,), (None,), scale="zeros"),
+        "attn": L.attn_init(c, cfg, prefix="shared_attn"),
+        "ln2": c("sln2", (cfg.d_model,), (None,), scale="zeros"),
+        "mlp": L.mlp_init(c, cfg),
+    }
+
+
+# ------------------------------------------------------------ ssm (xlstm)
+def xlstm_group_init(c: Creator, cfg: ModelConfig):
+    """One group = (slstm_every - 1) stacked mLSTM blocks + 1 sLSTM block."""
+    from .module import stack_init
+    n_m = cfg.slstm_every - 1
+    return {
+        "mlstm_ln": c("gln", (n_m, cfg.d_model), ("layers", None), scale="zeros"),
+        "mlstm": stack_init(c, n_m, lambda cc: X.mlstm_init(cc, cfg)),
+        "slstm_ln": c("sln", (cfg.d_model,), (None,), scale="zeros"),
+        "slstm": X.slstm_init(c, cfg),
+    }
+
+
+# ------------------------------------------------------------ stacks
+def scan_or_loop(body, carry, xs, cfg: ModelConfig, length: int):
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    ys = (jax.tree.map(lambda *t: jnp.stack(t), *ys) if ys and ys[0] is not None
+          else None)
+    return carry, ys

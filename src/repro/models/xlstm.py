@@ -1,0 +1,239 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, strictly recurrent with hidden-to-gate feedback).
+
+TPU adaptation: mLSTM is a special case of the SSD chunked machinery — the
+forget gate is a per-head scalar decay (like Mamba2's ``exp(a*dt)``) and the
+input gate weights the ``v k^T`` outer products. We compute numerator and
+normalizer in ONE chunked pass by appending a ones-channel to ``v``
+(state (N, P+1)); all chunk math is MXU matmuls. sLSTM's cross-step gate
+recurrence is inherently sequential -> lax.scan over time (only every 8th
+block; documented cost in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .module import Creator
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_init(c: Creator, cfg: ModelConfig):
+    D = cfg.d_model
+    di = 2 * D                       # up-projection factor 2 (xLSTM paper)
+    return {
+        "up": c("mlstm.up", (D, 2 * di), ("embed", "heads")),     # [x | z]
+        "wq": c("mlstm.wq", (di, di), ("heads", None)),
+        "wk": c("mlstm.wk", (di, di), ("heads", None)),
+        "wv": c("mlstm.wv", (di, di), ("heads", None)),
+        "wif": c("mlstm.wif", (di, 2 * cfg.num_heads), ("heads", None)),
+        "norm": c("mlstm.norm", (di,), (None,), scale="zeros"),
+        "down": c("mlstm.down", (di, D), ("heads", "embed")),
+    }
+
+
+def _mlstm_qkvg(p, cfg, u):
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    D = cfg.d_model
+    di = 2 * D
+    H = cfg.num_heads
+    P = di // H
+    proj = jnp.einsum("bsd,de->bse", u.astype(dt_c), p["up"].astype(dt_c))
+    x, z = jnp.split(proj, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", x, p["wq"].astype(dt_c))
+    k = jnp.einsum("bse,ef->bsf", x, p["wk"].astype(dt_c)) * (P ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", x, p["wv"].astype(dt_c))
+    gate = jnp.einsum("bse,eg->bsg", x, p["wif"].astype(dt_c)).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gate, 2, axis=-1)               # (B,S,H)
+    b, s, _ = q.shape
+    shp = (b, s, H, P)
+    return (q.reshape(shp).astype(jnp.float32), k.reshape(shp).astype(jnp.float32),
+            v.reshape(shp).astype(jnp.float32), i_raw, f_raw, z)
+
+
+def _mlstm_tail(p, cfg, y, z, b, s):
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    di = y.shape[-1]
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y * (1.0 + p["norm"].astype(jnp.float32))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bse,ed->bsd", y.astype(dt_c), p["down"].astype(dt_c))
+
+
+def mlstm_apply(p, u, cfg: ModelConfig, state=None, return_state: bool = False):
+    """Chunked-parallel mLSTM. u: (B,S,D) -> (B,S,D) (+ final state)."""
+    b, S, D = u.shape
+    H = cfg.num_heads
+    Q = cfg.ssm_chunk or 128
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(p, cfg, u)
+    P = q.shape[-1]
+    pad = (-S) % Q
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        # +30 -> log_sigmoid ~ 0: padded steps do not decay the carried state
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+    Sp = S + pad
+    nc = Sp // Q
+    logf = jax.nn.log_sigmoid(f_raw)                          # (B,S',H)
+    logi = i_raw                                              # exp input gate (stabilized below)
+    # ones-channel trick: state tracks [v | 1] so the normalizer rides along.
+    v1 = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)   # (B,S',H,P+1)
+
+    shp = lambda t: jnp.moveaxis(t.reshape(b, nc, Q, *t.shape[2:]), 1, 0)
+    qc, kc, vc, lfc, lic = map(shp, (q, k, v1, logf, logi))
+
+    def chunk(carry, xs):
+        # h is stored stabilized: h_true = h * exp(m).  m: (B,H)
+        h, m = carry                                          # h:(B,H,P,P+1)
+        qq, kk, vv, lf, li = xs
+        cum = jnp.cumsum(lf, axis=1)                          # (B,Q,H)
+        # per-row stabilizer: m_row_i = cum_i + max(m, cummax_{j<=i}(li_j - cum_j))
+        gj = li - cum                                         # (B,Q,H)
+        Mi = jax.lax.cummax(gj, axis=1)
+        m_row = cum + jnp.maximum(Mi, m[:, None])             # (B,Q,H)
+        # intra-chunk: w_ij = exp(cum_i - cum_j + li_j - m_row_i)
+        diff = cum[:, :, None] - cum[:, None, :] + li[:, None] - m_row[:, :, None]
+        ii = jnp.arange(Q)
+        causal = ii[:, None] >= ii[None, :]
+        w = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        qk = jnp.einsum("bihp,bjhp->bijh", qq, kk)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", qk * w, vv)
+        # inter-chunk (carried state, decayed into this chunk)
+        dec_in = jnp.exp(cum + m[:, None] - m_row)            # (B,Q,H)
+        y_inter = jnp.einsum("bihp,bhpr->bihr", qq, h) * dec_in[..., None]
+        y = y_intra + y_inter                                 # (B,Q,H,P+1)
+        # state update to end of chunk
+        m_new = cum[:, -1] + jnp.maximum(Mi[:, -1], m)        # (B,H)
+        dec_end = jnp.exp(cum[:, -1:] - cum + li - m_new[:, None])
+        hb = jnp.einsum("bjhp,bjhr->bhpr", kk * dec_end[..., None], vv)
+        h = h * jnp.exp(cum[:, -1] + m - m_new)[..., None, None] + hb
+        return (h, m_new), (y, m_row)
+
+    if state is None:
+        h0 = jnp.zeros((b, H, P, P + 1), jnp.float32)
+        m0 = jnp.full((b, H), -30.0, jnp.float32)
+    else:
+        h0, m0 = state["h"], state["m"]
+    with jax.named_scope("mlstm_chunk_scope"):
+        (hf, mf), (ys, mrows) = jax.lax.scan(chunk, (h0, m0), (qc, kc, vc, lfc, lic))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, Sp, H, P + 1)[:, :S]
+    m_row = jnp.moveaxis(mrows, 0, 1).reshape(b, Sp, H)[:, :S]
+    num, den = y[..., :P], y[..., P:]
+    floor = jnp.exp(jnp.clip(-m_row, -60.0, 60.0))[..., None]
+    out = num / jnp.maximum(jnp.abs(den), floor)
+    out = out.reshape(b, S, H * P)
+    y = _mlstm_tail(p, cfg, out, z[:, :S], b, S)
+    if return_state:
+        return y, {"h": hf, "m": mf}
+    return y
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    H = cfg.num_heads
+    P = 2 * D // H
+    return {"h": jnp.zeros((batch, H, P, P + 1), jnp.float32),
+            "m": jnp.full((batch, H), -30.0, jnp.float32)}
+
+
+def mlstm_step(p, u, state, cfg: ModelConfig):
+    """Single-token mLSTM recurrence (constant-memory decode)."""
+    b = u.shape[0]
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(p, cfg, u)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                       # (B,H,P)
+    P = q.shape[-1]
+    lf = jax.nn.log_sigmoid(f_raw[:, 0])                      # (B,H)
+    li = i_raw[:, 0]
+    m_new = jnp.maximum(state["m"] + lf, li)
+    fw = jnp.exp(state["m"] + lf - m_new)[..., None, None]
+    iw = jnp.exp(li - m_new)[..., None, None]
+    v1 = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    h = state["h"] * fw + iw * jnp.einsum("bhp,bhr->bhpr", k, v1)
+    y = jnp.einsum("bhp,bhpr->bhr", q, h)
+    num, den = y[..., :P], y[..., P:]
+    floor = jnp.exp(jnp.clip(-m_new, -60.0, 60.0))[..., None]
+    out = (num / jnp.maximum(jnp.abs(den), floor)).reshape(b, 1, -1)
+    return _mlstm_tail(p, cfg, out, z, b, 1), {"h": h, "m": m_new}
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_init(c: Creator, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.num_heads
+    P = D // H
+    f = int(D * 4 / 3 / 64) * 64 or 64
+    return {
+        "w": c("slstm.w", (D, 4 * D), ("embed", "heads")),        # z i f o
+        "r": c("slstm.r", (H, P, 4 * P), (None, None, None), scale=0.05),
+        "norm": c("slstm.norm", (D,), (None,), scale="zeros"),
+        "ff_up": c("slstm.ffu", (D, 2 * f), ("embed", "mlp")),
+        "ff_down": c("slstm.ffd", (f, D), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, state):
+    """One sLSTM step. wx_t: (B,4D) precomputed input projection."""
+    H = cfg.num_heads
+    D = cfg.d_model
+    P = D // H
+    h, cell, n, m = state
+    rdt = jnp.bfloat16 if cfg.slstm_bf16 else jnp.float32
+    rx = jnp.einsum("bhp,hpq->bhq", h.astype(rdt), p["r"].astype(rdt),
+                    preferred_element_type=jnp.float32).reshape(-1, 4 * D)
+    zifo = (wx_t + rx).reshape(-1, H, 4, P)
+    zt = jnp.tanh(zifo[:, :, 0])
+    it = zifo[:, :, 1]
+    ft = zifo[:, :, 2]
+    ot = jax.nn.sigmoid(zifo[:, :, 3])
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(lf + m - m_new)
+    cell = fw * cell + iw * zt
+    n = fw * n + iw
+    h_new = ot * cell / jnp.maximum(jnp.abs(n), 1.0)
+    return (h_new, cell, n, m_new)
+
+
+def slstm_apply(p, u, cfg: ModelConfig, state=None):
+    """Recurrent sLSTM over time + gated FFN tail. u: (B,S,D)."""
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    b, S, D = u.shape
+    H = cfg.num_heads
+    P = D // H
+    wx = jnp.einsum("bsd,dg->bsg", u.astype(dt_c), p["w"].astype(dt_c)).astype(jnp.float32)
+    if state is None:
+        state = slstm_init_state(cfg, b)
+    st = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, wx_t):
+        carry = _slstm_cell(p, cfg, wx_t, carry)
+        return carry, carry[0]
+
+    with jax.named_scope("slstm_rec_scope"):
+        # unroll lets XLA read the loop-invariant recurrent matrix R once per
+        # unrolled block instead of once per step (8x less R traffic at 8).
+        st, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0),
+                              unroll=cfg.slstm_unroll)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, S, D)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y * (1.0 + p["norm"].astype(jnp.float32))
+    g, v = jnp.split(jnp.einsum("bsd,df->bsf", y.astype(dt_c),
+                                p["ff_up"].astype(dt_c)), 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * v, p["ff_down"].astype(dt_c))
+    new_state = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+    return y, new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, P), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, H, P), -30.0)}
+
+
+def slstm_step(p, u, state, cfg: ModelConfig):
+    y, new_state = slstm_apply(p, u, cfg, state)
+    return y, new_state

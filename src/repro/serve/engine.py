@@ -1,0 +1,69 @@
+"""Batched serving engine: prefill + decode loop with a preallocated KV cache.
+
+The production layout (see ``Mdl.cache_specs``) shards caches over batch
+(data axes) and *sequence* (model axis — flash-decoding). On CPU this engine
+drives the same step functions unsharded; the dry-run proves the sharded
+lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as Mdl
+from repro.models.config import ModelConfig
+from repro.models.module import ShardingRules
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, steps)
+    prefill_logits: np.ndarray  # (B, V)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, rules: ShardingRules | None = None,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules or ShardingRules(
+            embed=None, vocab=None, heads=None, mlp=None, expert=None,
+            batch=None, seq=None)
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t, f: Mdl.prefill(cfg, p, t, rules=self.rules, frontend=f),
+            static_argnums=())
+        self._decode = jax.jit(
+            lambda p, c, t: Mdl.decode_step(cfg, p, c, t, rules=self.rules))
+
+    def _grow_cache(self, cache):
+        """Pad KV caches from prompt length to max_len (SSM states are O(1))."""
+        out = dict(cache)
+        for k in ("k", "v"):
+            if k in out and out[k].ndim >= 3:
+                cur = out[k].shape[2]
+                if cur < self.max_len:
+                    pad = [(0, 0)] * out[k].ndim
+                    pad[2] = (0, self.max_len - cur)
+                    out[k] = jnp.pad(out[k], pad)
+        return out
+
+    def generate(self, prompts: np.ndarray, steps: int, *,
+                 frontend=None, greedy: bool = True, rng=None) -> GenerationResult:
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts), frontend)
+        cache = self._grow_cache(cache)
+        toks = []
+        tok = jnp.argmax(logits, -1)[:, None]
+        for i in range(steps):
+            toks.append(np.asarray(tok)[:, 0])
+            logits, cache = self._decode(self.params, cache, tok)
+            if greedy:
+                tok = jnp.argmax(logits, -1)[:, None]
+            else:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits)[:, None]
+        return GenerationResult(np.stack(toks, 1), np.asarray(logits))

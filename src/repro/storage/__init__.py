@@ -1,0 +1,3 @@
+from . import edf, rowlog, xes
+
+__all__ = ["edf", "rowlog", "xes"]

@@ -1,0 +1,124 @@
+"""EDF — a columnar event-log container (the Parquet/ORC role of the paper).
+
+Layout::
+
+    [8B magic "EDFV0001"] [4B header_len] [header json] [column blocks...]
+
+The header carries, per column: name, dtype, kind (numeric | dict), codec
+(raw | zlib1 | zlib6 | zlib9), byte offset and compressed/raw sizes, plus the
+dictionary tables of dict-encoded (string) columns. Reading supports
+**column projection** — only the requested columns' byte ranges are read and
+decoded (the paper's "attribute selection at load time"), and per-column
+compression exploits type homogeneity exactly as Parquet does (Snappy ~
+zlib1, Gzip ~ zlib9 in our codec ladder).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core.eventframe import EventFrame
+
+MAGIC = b"EDFV0001"
+CODECS = ("raw", "zlib1", "zlib6", "zlib9")
+
+
+def _encode(buf: bytes, codec: str) -> bytes:
+    if codec == "raw":
+        return buf
+    if codec.startswith("zlib"):
+        return zlib.compress(buf, int(codec[4:]))
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _decode(buf: bytes, codec: str) -> bytes:
+    return buf if codec == "raw" else zlib.decompress(buf)
+
+
+def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None,
+          codec: str = "zlib1") -> dict:
+    """Serialize an EventFrame. Returns the header (for size accounting)."""
+    tables = tables or {}
+    cols = []
+    blobs = []
+    offset = 0
+    data = frame.to_numpy()
+    valid = {k: np.asarray(v) for k, v in frame.valid.items()}
+    for name in sorted(data):
+        arr = np.ascontiguousarray(data[name])
+        raw = arr.tobytes()
+        enc = _encode(raw, codec)
+        meta = {
+            "name": name, "dtype": str(arr.dtype), "codec": codec,
+            "offset": offset, "nbytes": len(enc), "raw_nbytes": len(raw),
+            "kind": "dict" if name in tables else "numeric",
+        }
+        if name in tables:
+            meta["table"] = list(tables[name])
+        if name in valid:
+            venc = _encode(np.packbits(valid[name]).tobytes(), codec)
+            meta["valid_offset"] = offset + len(enc)
+            meta["valid_nbytes"] = len(venc)
+            blobs.append(enc + venc)
+            offset += len(enc) + len(venc)
+        else:
+            blobs.append(enc)
+            offset += len(enc)
+        cols.append(meta)
+    header = {"nrows": frame.nrows, "columns": cols}
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+    return header
+
+
+def read_header(path: str) -> dict:
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "not an EDF file"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        return json.loads(f.read(hlen)), 12 + hlen
+
+
+def read(path: str, columns: Iterable[str] | None = None
+         ) -> tuple[EventFrame, dict[str, list]]:
+    """Load an EventFrame; ``columns`` projects at read time (partial I/O)."""
+    header, base = read_header(path)
+    want = set(columns) if columns is not None else None
+    cols: dict[str, np.ndarray] = {}
+    valid: dict[str, np.ndarray] = {}
+    tables: dict[str, list] = {}
+    nrows = header["nrows"]
+    with open(path, "rb") as f:
+        for meta in header["columns"]:
+            name = meta["name"]
+            if want is not None and name not in want:
+                continue
+            f.seek(base + meta["offset"])
+            raw = _decode(f.read(meta["nbytes"]), meta["codec"])
+            cols[name] = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).copy()
+            if "valid_offset" in meta:
+                f.seek(base + meta["valid_offset"])
+                vraw = _decode(f.read(meta["valid_nbytes"]), meta["codec"])
+                valid[name] = np.unpackbits(
+                    np.frombuffer(vraw, np.uint8), count=nrows).astype(bool)
+            if "table" in meta:
+                tables[name] = meta["table"]
+    return EventFrame.from_numpy(cols, valid), tables
+
+
+def file_sizes(path: str) -> dict:
+    """Per-column compressed/raw byte accounting (Table 2 style)."""
+    header, _ = read_header(path)
+    out = {"total": sum(c["nbytes"] for c in header["columns"]),
+           "raw": sum(c["raw_nbytes"] for c in header["columns"])}
+    for c in header["columns"]:
+        out[c["name"]] = c["nbytes"]
+    return out

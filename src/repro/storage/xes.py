@@ -1,0 +1,59 @@
+"""Minimal XES XML interop (the IEEE-standard format of the paper §2).
+
+Intentionally simple: traces > events > string/int/float/date attributes.
+XES is row-structured XML — its size/parse overheads versus EDF columns are
+exactly the Table 1/2 comparison of the paper.
+"""
+from __future__ import annotations
+
+import xml.etree.ElementTree as ET
+from xml.sax.saxutils import escape
+
+from repro.core.classic_log import ClassicEventLog
+from repro.core.eventframe import ACTIVITY, CASE, TIMESTAMP
+
+
+def write(path: str, log: ClassicEventLog) -> None:
+    by_case: dict = {}
+    for e in log.events:
+        by_case.setdefault(e[CASE], []).append(e)
+    with open(path, "w") as f:
+        f.write('<?xml version="1.0" encoding="UTF-8" ?>\n<log xes.version="1.0">\n')
+        for cid, evs in by_case.items():
+            f.write(f'  <trace>\n    <string key="concept:name" value="{escape(str(cid))}"/>\n')
+            for e in evs:
+                f.write("    <event>\n")
+                for k, v in e.items():
+                    if k == CASE:
+                        continue
+                    tag = "int" if isinstance(v, int) else "float" if isinstance(v, float) else "string"
+                    f.write(f'      <{tag} key="{escape(k)}" value="{escape(str(v))}"/>\n')
+                f.write("    </event>\n")
+            f.write("  </trace>\n")
+        f.write("</log>\n")
+
+
+def read(path: str) -> ClassicEventLog:
+    tree = ET.parse(path)
+    events = []
+    order = 0
+    for trace in tree.getroot().iter("trace"):
+        cid = None
+        for child in trace:
+            if child.tag == "string" and child.get("key") == "concept:name":
+                cid = child.get("value")
+        for ev in trace.iter("event"):
+            e = {CASE: cid}
+            for a in ev:
+                k, v = a.get("key"), a.get("value")
+                if a.tag == "int":
+                    e[k] = int(v)
+                elif a.tag == "float":
+                    e[k] = float(v)
+                else:
+                    e[k] = v
+            e.setdefault(TIMESTAMP, float(order))
+            events.append(e)
+            order += 1
+    events.sort(key=lambda e: e[TIMESTAMP])
+    return ClassicEventLog(events)

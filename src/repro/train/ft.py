@@ -1,0 +1,95 @@
+"""Fault tolerance: failure injection, straggler mitigation, elastic re-mesh.
+
+On a real multi-pod deployment these hooks sit around the train loop:
+
+* **Failure detection**: each step runs under a deadline; a step that throws
+  (XLA halt, ICI timeout) or exceeds ``deadline_s`` marks the step failed.
+* **Restart policy**: reload the latest complete checkpoint (see
+  ``checkpoint.py``) and continue — the data pipeline is a pure function of
+  (epoch, step) so it re-seeks deterministically.
+* **Straggler mitigation**: per-step wall times feed an EWMA; a step slower
+  than ``straggler_factor`` x EWMA is logged and counted. On TPU pods the
+  mitigation is re-sharding around the slow pod (elastic re-mesh below) —
+  within-step work stealing is not possible under SPMD.
+* **Elastic re-mesh**: on permanent device loss, rebuild the mesh from the
+  surviving device count (largest (data, model) factorization that keeps
+  the model axis intact), re-derive shardings, and restore the checkpoint
+  into the new topology (checkpoints are topology-free).
+
+The CPU container cannot kill real TPU nodes, so tests drive these with a
+``FailureInjector`` that raises on chosen steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+
+class FailureInjector:
+    """Deterministically raise at chosen steps (simulated node failure)."""
+
+    def __init__(self, fail_at: set[int]):
+        self.fail_at = set(fail_at)
+        self.failed: list[int] = []
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            self.failed.append(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 2.0
+    alpha: float = 0.2
+    ewma: float | None = None
+    stragglers: int = 0
+
+    def observe(self, dt: float) -> bool:
+        is_straggler = self.ewma is not None and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma is None else (1 - self.alpha) * self.ewma + self.alpha * dt
+        if is_straggler:
+            self.stragglers += 1
+        return is_straggler
+
+
+def elastic_mesh(num_devices: int, model_parallel: int, devices=None):
+    """Largest (data, model) mesh from surviving devices; drops remainders.
+
+    Keeps the model axis intact (a model shard cannot run degraded); shrinks
+    the data axis —训 throughput degrades, correctness doesn't.
+    """
+    devices = devices if devices is not None else jax.devices()
+    devices = devices[:num_devices]
+    data = max(1, len(devices) // model_parallel)
+    usable = devices[: data * model_parallel]
+    import numpy as np
+
+    arr = np.array(usable).reshape(data, model_parallel)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"))
+
+
+def run_with_restarts(train_loop: Callable[[int], int], *, max_restarts: int = 5,
+                      on_restart: Callable[[int], None] | None = None) -> int:
+    """Drive ``train_loop(start_step) -> last_step`` through failures.
+
+    ``train_loop`` must checkpoint internally and raise on failure; we resume
+    it from the step after the latest checkpoint.
+    """
+    restarts = 0
+    start = 0
+    while True:
+        try:
+            return train_loop(start)
+        except RuntimeError as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart:
+                on_restart(restarts)
+            start = -1  # sentinel: loop re-reads latest checkpoint

@@ -1,0 +1,66 @@
+"""AdamW + cosine schedule + global-norm clipping (pure pytree ops).
+
+Optimizer state shards exactly like the parameters (same specs), giving
+ZeRO/FSDP behaviour for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(oc: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    prog = (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params):
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state):
+    step = opt_state["step"] + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = oc.beta1, oc.beta2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt_state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + oc.eps)
+        u = u + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gnorm}

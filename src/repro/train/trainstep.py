@@ -1,0 +1,92 @@
+"""Train step builder: loss, microbatched grad accumulation, AdamW update.
+
+Microbatching is a ``lax.scan`` over microbatches — the natural structure for
+activation-memory control AND compute/comm overlap (XLA pipelines the psum of
+microbatch k with the compute of k+1 when latency hiding is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as Mdl
+from repro.models.config import ModelConfig
+from repro.models.module import ShardingRules
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rules: ShardingRules):
+    logits = Mdl.forward(cfg, params, batch["tokens"], rules=rules,
+                         frontend=batch.get("frontend"))
+    if cfg.family == "vlm":                 # drop vision-prefix positions
+        logits = logits[:, cfg.num_patches:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules, oc: OptConfig,
+                    num_microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": {m, v, step}}; batch leaves have leading
+    dim = global_batch, reshaped to (num_microbatches, -1, ...) inside.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, rules))(params)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(num_microbatches, -1, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def mb_step(acc, mb):
+                loss_acc, g_acc = acc
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(mb_step, zero, mbs)
+            inv = 1.0 / num_microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        new_params, new_opt, om = adamw_update(oc, params, grads, state["opt"])
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(cfg: ModelConfig, params):
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def state_specs(cfg: ModelConfig, rules: ShardingRules):
+    from jax.sharding import PartitionSpec as P
+    pspecs = Mdl.param_specs(cfg, rules)
+    return {"params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+
+
+def abstract_state(cfg: ModelConfig):
+    params = Mdl.abstract_params(cfg)
+    like = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {"params": params,
+            "opt": {"m": like(params), "v": like(params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly ONE CPU device (the 512-device flag is set only
+# inside launch/dryrun.py and subprocess-based tests).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+assert len(jax.devices()) >= 1

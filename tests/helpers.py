@@ -1,0 +1,32 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ACTIVITY, CASE, TIMESTAMP, ClassicEventLog, make_classic_log
+from repro.core import ops
+from repro.models.module import ShardingRules
+
+LOCAL_RULES = ShardingRules(embed=None, vocab=None, heads=None, mlp=None,
+                            expert=None, batch=None, seq=None)
+
+
+def random_log(rng: np.random.Generator, n_cases=20, n_acts=6, max_len=10,
+               extra_attrs=0) -> ClassicEventLog:
+    acts = [chr(ord("A") + i) for i in range(n_acts)]
+    cases = []
+    t = 0.0
+    for c in range(n_cases):
+        ln = int(rng.integers(1, max_len + 1))
+        trace = []
+        for _ in range(ln):
+            t += float(rng.random())
+            trace.append((acts[int(rng.integers(0, n_acts))], t))
+        cases.append((c, trace))
+    return make_classic_log(cases, extra_attrs=extra_attrs)
+
+
+def sorted_frame(log: ClassicEventLog):
+    frame, tables = log.to_eventframe()
+    frame = ops.sort(frame, (TIMESTAMP, CASE))
+    return frame, tables

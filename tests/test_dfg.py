@@ -1,0 +1,95 @@
+"""DFG: all three dataframe lowerings vs the classic-log oracle (paper §5.4).
+
+Property-based: any random log, the dense count matrix of every method must
+equal the iteration-on-attr-maps baseline (Def. 1 / Table 4 comparison).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ACTIVITY, CASE, dfg
+from repro.core.dfg import dfg_matmul, dfg_segment, dfg_shift_count
+
+from helpers import random_log, sorted_frame
+
+
+def oracle_matrix(log, tables):
+    acts = tables[ACTIVITY]
+    a = len(acts)
+    ref = log.dfg_iterative()
+    m = np.zeros((a, a), np.int32)
+    for (x, y), c in ref.items():
+        m[acts.index(x), acts.index(y)] = c
+    return m
+
+
+@pytest.mark.parametrize("method", ["shift", "segment", "matmul", "kernel"])
+def test_methods_match_oracle(method):
+    rng = np.random.default_rng(0)
+    log = random_log(rng, n_cases=40, n_acts=7, max_len=12)
+    frame, tables = sorted_frame(log)
+    d = dfg(frame, len(tables[ACTIVITY]), method=method)
+    np.testing.assert_array_equal(np.asarray(d.counts), oracle_matrix(log, tables))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_cases=st.integers(1, 30),
+       n_acts=st.integers(1, 8), max_len=st.integers(1, 9))
+def test_property_all_methods_agree(seed, n_cases, n_acts, max_len):
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=n_cases, n_acts=n_acts, max_len=max_len)
+    frame, tables = sorted_frame(log)
+    a = max(len(tables.get(ACTIVITY, [])), 1)
+    ref = oracle_matrix(log, tables) if ACTIVITY in tables else None
+    d1 = dfg_shift_count(frame, a)
+    d2 = dfg_segment(frame, a)
+    d3 = dfg_matmul(frame, a)
+    np.testing.assert_array_equal(np.asarray(d1.counts), np.asarray(d2.counts))
+    np.testing.assert_array_equal(np.asarray(d2.counts), np.asarray(d3.counts))
+    if ref is not None:
+        np.testing.assert_array_equal(np.asarray(d2.counts), ref)
+    np.testing.assert_array_equal(np.asarray(d1.starts), np.asarray(d2.starts))
+    np.testing.assert_array_equal(np.asarray(d1.ends), np.asarray(d2.ends))
+
+
+def test_start_end_activities():
+    rng = np.random.default_rng(3)
+    log = random_log(rng, n_cases=25, n_acts=5)
+    frame, tables = sorted_frame(log)
+    acts = tables[ACTIVITY]
+    d = dfg_segment(frame, len(acts))
+    s_ref, e_ref = log.start_end_activities()
+    starts = {acts[i]: int(v) for i, v in enumerate(np.asarray(d.starts)) if v}
+    ends = {acts[i]: int(v) for i, v in enumerate(np.asarray(d.ends)) if v}
+    assert starts == s_ref
+    assert ends == e_ref
+    # invariant: starts and ends both sum to #cases
+    assert int(d.starts.sum()) == len(log.case_ids)
+    assert int(d.ends.sum()) == len(log.case_ids)
+
+
+def test_counts_sum_invariant():
+    """sum(counts) == N - #cases (each case of length L yields L-1 pairs)."""
+    rng = np.random.default_rng(7)
+    log = random_log(rng, n_cases=30, n_acts=6)
+    frame, tables = sorted_frame(log)
+    d = dfg_segment(frame, len(tables[ACTIVITY]))
+    assert int(d.counts.sum()) == len(log.events) - len(log.case_ids)
+
+
+def test_event_filter_then_dfg():
+    """Filtering events and compacting reconnects directly-follows pairs."""
+    rng = np.random.default_rng(11)
+    log = random_log(rng, n_cases=20, n_acts=5)
+    frame, tables = sorted_frame(log)
+    acts = tables[ACTIVITY]
+    from repro.core import filtering
+    drop = acts.index("A")
+    filtered = filtering.filter_attr_values(frame, ACTIVITY, [drop], keep=False)
+    d = dfg_segment(filtered.compact(), len(acts))
+    # oracle: same filter on the classic log
+    ref_log = log.filter_events(ACTIVITY, set(a for a in acts if a != "A"))
+    m = np.zeros((len(acts), len(acts)), np.int32)
+    for (x, y), c in ref_log.dfg_iterative().items():
+        m[acts.index(x), acts.index(y)] = c
+    np.testing.assert_array_equal(np.asarray(d.counts), m)

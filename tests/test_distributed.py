@@ -1,0 +1,114 @@
+"""Distributed DFG / sort / compression: validated in an 8-device subprocess
+(the XLA device-count flag must never leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(code: str, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+_PRE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.core import dfg
+from repro.core.eventframe import ACTIVITY, CASE, EventFrame
+from repro.data import synthetic
+
+frame, tables = synthetic.generate(num_cases=5000, num_activities=13, seed=9)
+n = frame.nrows
+pad = (-n) % 8
+cols = {k: jnp.pad(v, (0, pad), constant_values=-1) for k, v in frame.columns.items()}
+frame = EventFrame(cols, {}, jnp.pad(frame.rows_valid(), (0, pad)))
+"""
+
+
+def test_sharded_dfg_matches_local():
+    out = run_child(_PRE + """
+from repro.distributed.dfg import dfg_sharded_host
+ref = np.asarray(dfg(frame, 13, method="segment").counts)
+for shards in (1, 2, 4, 8):
+    got = np.asarray(dfg_sharded_host(frame, 13, shards))
+    assert (got == ref).all(), f"mismatch at {shards} shards"
+print("OK", ref.sum())
+""")
+    assert out.startswith("OK")
+
+
+def test_distributed_sort_by_case():
+    out = run_child(_PRE + """
+from repro.distributed.sort import sort_by_case_sharded
+perm = np.random.default_rng(0).permutation(frame.nrows)
+scrambled = frame.take(jnp.asarray(perm))
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+case_s, act_s, ts_s, overflow = sort_by_case_sharded(scrambled, mesh)
+assert not bool(overflow)
+rows = np.asarray(case_s).reshape(8, -1)
+for i, row in enumerate(rows):
+    real = row[row >= 0]
+    assert (np.diff(real) >= 0).all()
+    assert (np.unique(real) % 8 == i).all()
+# no case lost
+total = sum(len(np.unique(r[r >= 0])) for r in rows)
+orig = len(np.unique(np.asarray(frame[CASE])[np.asarray(frame.rows_valid())]))
+assert total == orig, (total, orig)
+print("OK")
+""")
+    assert out.strip().endswith("OK")
+
+
+def test_psum_compressed_multidevice():
+    out = run_child("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.train import compression
+
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pod",))
+g = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) / 100.0
+
+def f(gl):
+    errs = compression.init_errors({"g": gl})
+    mean, _ = compression.psum_compressed({"g": gl}, errs, "pod")
+    return mean["g"]
+
+got = shard_map(f, mesh=mesh, in_specs=(P("pod", None),), out_specs=P("pod", None))(g)
+# every shard's result approximates the cross-pod mean
+ref = g.mean(axis=0)
+err = float(jnp.max(jnp.abs(got - ref[None])))
+assert err < 0.05, err
+print("OK", err)
+""")
+    assert out.startswith("OK")
+
+
+def test_elastic_mesh_shrinks():
+    out = run_child("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.train.ft import elastic_mesh
+m = elastic_mesh(8, model_parallel=2)
+assert dict(m.shape) == {"data": 4, "model": 2}
+m = elastic_mesh(7, model_parallel=2)   # lost a device -> 3x2, 1 idle
+assert dict(m.shape) == {"data": 3, "model": 2}
+print("OK")
+""")
+    assert out.startswith("OK")

@@ -1,0 +1,95 @@
+"""Paper §5.3 transformation functions + conversion §5.2 round trip."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ACTIVITY, CASE, TIMESTAMP, ClassicEventLog, EventFrame
+from repro.core import ops
+
+from helpers import random_log, sorted_frame
+
+
+def test_conversion_roundtrip():
+    rng = np.random.default_rng(0)
+    log = random_log(rng, n_cases=10, n_acts=4, extra_attrs=2)
+    frame, tables = log.to_eventframe()
+    back = ClassicEventLog.from_eventframe(frame, tables)
+    assert len(back.events) == len(log.events)
+    for a, b in zip(back.events, log.events):
+        assert set(a) == set(b)
+        for k in a:
+            if isinstance(b[k], float):   # timestamps pass through float32
+                assert abs(a[k] - b[k]) <= 1e-5 * max(1.0, abs(b[k]))
+            else:
+                assert a[k] == b[k], (k, a[k], b[k])
+
+
+def test_shift_concat_proj_mergstrv_compose():
+    """The shifting-and-counting pipeline of Fig. 3, step by step."""
+    rng = np.random.default_rng(1)
+    log = random_log(rng, n_cases=8, n_acts=4)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    sh = ops.shift(frame)
+    assert np.asarray(sh[ACTIVITY])[:-1].tolist() == np.asarray(frame[ACTIVITY])[1:].tolist()
+    assert not bool(sh.rows_valid()[-1])
+    both = ops.concat(frame, sh, ".2")
+    assert CASE + ".2" in both
+    kept = ops.proj(both, both[CASE] == both[CASE + ".2"])
+    merged = ops.mergstrv(kept, "pair", ACTIVITY, ACTIVITY + ".2", a)
+    pairs = np.asarray(merged["pair"])[np.asarray(kept.rows_valid())]
+    src, dst = pairs // a, pairs % a
+    assert (src < a).all() and (dst < a).all()
+
+
+def test_sort_stability_and_order():
+    rng = np.random.default_rng(2)
+    log = random_log(rng, n_cases=12, n_acts=3)
+    frame, _ = log.to_eventframe()
+    s = ops.sort(frame, (TIMESTAMP, CASE))
+    case = np.asarray(s[CASE])
+    ts = np.asarray(s[TIMESTAMP])
+    assert (np.diff(case) >= 0).all()
+    for c in np.unique(case):
+        assert (np.diff(ts[case == c]) >= 0).all()
+
+
+def test_group_segments():
+    rng = np.random.default_rng(3)
+    log = random_log(rng, n_cases=9, n_acts=3)
+    frame, _ = log.to_eventframe()
+    sf, seg, starts = ops.group_segments(frame, CASE)
+    case = np.asarray(sf[CASE])
+    seg = np.asarray(seg)
+    # same case <-> same segment
+    assert len(np.unique(seg)) == len(np.unique(case))
+    for s_id in np.unique(seg):
+        assert len(np.unique(case[seg == s_id])) == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_proj_idempotent_and_monotone(seed):
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=10, n_acts=5)
+    frame, _ = log.to_eventframe()
+    m1 = np.asarray(frame[ACTIVITY]) % 2 == 0
+    f1 = ops.proj(frame, m1)
+    f2 = ops.proj(f1, m1)
+    np.testing.assert_array_equal(np.asarray(f1.rows_valid()),
+                                  np.asarray(f2.rows_valid()))
+    # projection can only shrink
+    assert int(f1.rows_valid().sum()) <= frame.nrows
+
+
+def test_select_column_projection():
+    rng = np.random.default_rng(4)
+    log = random_log(rng, n_cases=5, n_acts=3, extra_attrs=3)
+    frame, _ = log.to_eventframe()
+    two = frame.select([CASE, ACTIVITY])
+    assert set(two.names) == {CASE, ACTIVITY}
+
+
+def test_value_counts():
+    import jax.numpy as jnp
+    col = jnp.asarray([0, 1, 1, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(ops.value_counts(col, 4)), [1, 2, 3, 0])

@@ -1,0 +1,85 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.dfg_count import dfg_count_pallas, dfg_count_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("a,e", [(4, 100), (11, 1000), (42, 4096), (130, 2000),
+                                 (256, 512), (11, 1)])
+def test_dfg_count_shapes(a, e):
+    src = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    w = jnp.asarray(rng.random(e) < 0.7, jnp.float32)
+    got = dfg_count_pallas(src, dst, w, a, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(dfg_count_ref(src, dst, w, a)))
+
+
+@pytest.mark.parametrize("be,ba", [(256, 128), (1024, 256)])
+def test_dfg_count_blocks(be, ba):
+    a, e = 100, 3000
+    src = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, a, e), jnp.int32)
+    w = jnp.ones((e,), jnp.float32)
+    got = dfg_count_pallas(src, dst, w, a, block_e=be, block_a=ba, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(dfg_count_ref(src, dst, w, a)))
+
+
+def test_dfg_count_weighted():
+    a = 8
+    src = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    dst = jnp.asarray([1, 2, 3, 1], jnp.int32)
+    w = jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32)
+    got = np.asarray(dfg_count_pallas(src, dst, w, a, interpret=True))
+    assert got[0, 1] == 2 and got[1, 2] == 0 and got[2, 3] == 1
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,sq,sk,d,causal,win",
+    [(1, 4, 2, 128, 128, 64, True, None),
+     (2, 8, 2, 256, 256, 64, True, 512),
+     (1, 4, 4, 200, 200, 32, True, None),
+     (1, 4, 1, 1, 384, 64, False, None),
+     (1, 2, 2, 96, 96, 128, True, 32),
+     (2, 4, 2, 64, 64, 16, False, None)])
+def test_flash_attention_shapes(b, h, kvh, sq, sk, d, causal, win):
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kvh, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kvh, sk, d)), jnp.float32)
+    kvlen = jnp.int32(sk - 17) if sk > 64 else None
+    got = flash_attention_pallas(q, k, v, kvlen, causal=causal, window=win,
+                                 interpret=True)
+    ref = attention_ref(q, k, v, kvlen, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    b, h, kvh, s, d = 1, 4, 2, 128, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, kvh, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, kvh, s, d)), dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_flash_attention_blocks():
+    b, h, kvh, s, d = 1, 2, 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kvh, s, d)), jnp.float32)
+    ref = attention_ref(q, k, v)
+    for bq, bk in [(64, 64), (128, 64), (64, 128)]:
+        got = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,107 @@
+"""Launch layer: spec sanitization, rules resolution, HLO accounting,
+roofline math, and a real (reduced-mesh) lower+compile in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import roofline as RL
+from repro.launch.hlo import analyze, collective_bytes
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_sanitize_spec_divisibility():
+    from repro.launch.mesh import sanitize_spec
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # vocab 51865 not divisible by 16 -> dropped
+    s = sanitize_spec((51865, 1024), P("model", "data"), mesh)
+    assert s == P(None, "data")
+    # batch 1 can't shard at all
+    s = sanitize_spec((1, 524288), P(("pod", "data"), "model"), mesh)
+    assert s == P(None, "model")
+    # batch 8 keeps the 'pod' prefix of ('pod','data')
+    s = sanitize_spec((8, 128), P(("pod", "data"), None), mesh)
+    assert s == P("pod", None)
+    # fully divisible is untouched
+    s = sanitize_spec((512, 4096), P(("pod", "data"), "model"), mesh)
+    assert s == P(("pod", "data"), "model")
+
+
+def test_rules_moe_resolution():
+    from repro.launch.mesh import make_rules
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    r_q = make_rules(mesh, get_config("qwen3-moe-30b-a3b"))
+    assert r_q.expert == "model" and r_q.mlp is None     # EP
+    r_m = make_rules(mesh, get_config("mixtral-8x7b"))
+    assert r_m.expert is None and r_m.mlp == "model"     # TP d_ff
+    r_d = make_rules(mesh, get_config("yi-6b"))
+    assert r_d.mlp == "model"
+
+
+def test_hlo_analyze_counts_loops():
+    hlo = """
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %gte = f32[8,8] get-tuple-element((s32[], f32[8,8]) %p), index=1
+  %ar = f32[8,8] all-reduce(%gte), to_apply=%add
+  %dot.1 = f32[8,8] dot(%ar, %gte), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+%add (x: f32[], y: f32[]) -> f32[] {
+  ROOT %a = f32[] add(f32[] %x, f32[] %y)
+}
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %t), condition=%cond, body=%body
+}
+"""
+    a = analyze(hlo)
+    # dot: 2 * 64 * 8 = 1024 flops, x7 iterations
+    assert a["dot_flops"] == 1024 * 7
+    assert a["collective_bytes"] == 8 * 8 * 4 * 7
+    assert a["coll_by_op"] == {"all-reduce": 8 * 8 * 4 * 7}
+
+
+def test_roofline_math():
+    rec = {"arch": "yi-6b", "shape": "train_4k",
+           "flops_per_device": 197e12,          # exactly 1s of compute
+           "bytes_per_device": 819e9 / 2,       # 0.5s of HBM
+           "collective_bytes_per_device": 50e9 / 4,  # 0.25s of ICI
+           "params": 6e9, "active_params": 6e9}
+    a = RL.analyze_record(rec, chips=256)
+    assert a["bottleneck"] == "compute"
+    assert abs(a["t_compute"] - 1.0) < 1e-9
+    assert abs(a["t_memory"] - 0.5) < 1e-9
+    assert abs(a["t_collective"] - 0.25) < 1e-9
+    useful = 6 * 6e9 * 256 * 4096 / 256
+    assert abs(a["useful_ratio"] - useful / 197e12) < 1e-6
+    assert 0 < a["roofline_fraction"] <= 1.0
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """A real lower+compile of the smallest cell on the production mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-medium",
+         "--shape", "decode_32k", "--out", "/tmp/test_dryrun_cell.jsonl"],
+        capture_output=True, text=True, env=env, timeout=560, cwd="/tmp")
+    assert res.returncode == 0, res.stdout + res.stderr[-2000:]
+    rec = json.loads(open("/tmp/test_dryrun_cell.jsonl").read().splitlines()[-1])
+    assert rec["ok"] and rec["flops_per_device"] > 0
+    assert rec["memory"]["temp_bytes"] < 16 * 2**30   # fits v5e HBM

@@ -1,0 +1,60 @@
+"""Performance DFG / eventually-follows / remaining-time (timed relations)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ACTIVITY, CASE, TIMESTAMP
+from repro.core.performance import (eventually_follows, performance_dfg,
+                                    remaining_time_targets)
+
+from helpers import random_log, sorted_frame
+
+
+def _efg_oracle(log, acts):
+    a = len(acts)
+    m = np.zeros((a, a), np.int64)
+    for cid, idxs in log.case_ev().items():
+        seq = [acts.index(log.act(i)) for i in idxs]
+        for i in range(len(seq)):
+            for j in range(i + 1, len(seq)):
+                m[seq[i], seq[j]] += 1
+    return m
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_eventually_follows_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=12, n_acts=5, max_len=8)
+    frame, tables = sorted_frame(log)
+    acts = tables[ACTIVITY]
+    got = np.asarray(eventually_follows(frame, len(acts)))
+    np.testing.assert_array_equal(got, _efg_oracle(log, acts))
+
+
+def test_performance_dfg():
+    rng = np.random.default_rng(1)
+    log = random_log(rng, n_cases=10, n_acts=4)
+    frame, tables = sorted_frame(log)
+    acts = tables[ACTIVITY]
+    counts, mean = performance_dfg(frame, len(acts))
+    # counts agree with the plain DFG
+    from repro.core import dfg
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.asarray(dfg(frame, len(acts)).counts))
+    # waits are nonnegative (sorted timestamps) and zero where no edge
+    m = np.asarray(mean)
+    c = np.asarray(counts)
+    assert (m >= -1e-5).all()
+    assert (m[c == 0] == 0).all()
+
+
+def test_remaining_time():
+    rng = np.random.default_rng(2)
+    log = random_log(rng, n_cases=8, n_acts=3)
+    frame, tables = sorted_frame(log)
+    rt = np.asarray(remaining_time_targets(frame))
+    assert (rt >= -1e-5).all()
+    # last event of each case has remaining time 0
+    case = np.asarray(frame[CASE])
+    ends = np.concatenate([case[1:] != case[:-1], [True]])
+    np.testing.assert_allclose(rt[ends], 0.0, atol=1e-5)

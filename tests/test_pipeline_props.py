@@ -1,0 +1,95 @@
+"""Data pipeline + variants/stats/conformance property tests (hypothesis)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ACTIVITY, CASE, TIMESTAMP, conformance, dfg, stats, variants
+from repro.core import ops
+from repro.data import pipeline, synthetic, tokenizer
+
+from helpers import random_log, sorted_frame
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), n_cases=st.integers(1, 40))
+def test_stream_structure(seed, n_cases):
+    frame, tables = synthetic.generate(num_cases=n_cases, num_activities=8,
+                                       seed=seed)
+    tok = tokenizer.ActivityTokenizer(tables[ACTIVITY])
+    stream = pipeline.frame_to_token_stream(frame, tok)
+    # one BOS and one EOS per case; activities survive the round trip
+    assert (stream == tokenizer.BOS).sum() == n_cases
+    assert (stream == tokenizer.EOS).sum() == n_cases
+    assert len(stream) == frame.nrows + 2 * n_cases
+    body = stream[stream >= tokenizer.NUM_SPECIALS] - tokenizer.NUM_SPECIALS
+    np.testing.assert_array_equal(body, np.asarray(frame[ACTIVITY]))
+
+
+def test_host_sharding_partition():
+    frame, tables = synthetic.generate(num_cases=100, num_activities=6, seed=1)
+    tok = tokenizer.ActivityTokenizer(tables[ACTIVITY])
+    full = pipeline.frame_to_token_stream(frame, tok)
+    parts = [pipeline.frame_to_token_stream(frame, tok, h, 4) for h in range(4)]
+    # partitions cover all events exactly once
+    n_events = sum((p >= tokenizer.NUM_SPECIALS).sum() for p in parts)
+    assert n_events == (full >= tokenizer.NUM_SPECIALS).sum()
+
+
+def test_batches_next_token_alignment():
+    stream = np.arange(3, 300, dtype=np.int32)
+    for b in pipeline.batches(stream, 4, 16):
+        flat_x = b.tokens.reshape(-1)
+        flat_y = b.targets.reshape(-1)
+        np.testing.assert_array_equal(flat_y[:-1], flat_x[1:])
+
+
+def test_variants_distinguish_and_group():
+    rng = np.random.default_rng(2)
+    log = random_log(rng, n_cases=30, n_acts=4, max_len=6)
+    frame, tables = sorted_frame(log)
+    counts = variants.variant_counts(frame)
+    # number of variant classes == number of distinct activity sequences
+    seqs = {}
+    for cid, idxs in log.case_ev().items():
+        seqs.setdefault(tuple(log.act(i) for i in idxs), 0)
+    assert len(counts) == len(seqs)
+    assert sum(counts.values()) == len(log.case_ids)
+
+
+def test_case_stats():
+    rng = np.random.default_rng(3)
+    log = random_log(rng, n_cases=12, n_acts=4)
+    frame, tables = sorted_frame(log)
+    sizes = np.asarray(stats.case_sizes(frame, 12))
+    ref = {cid: len(ix) for cid, ix in log.case_ev().items()}
+    # case ids are dictionary-encoded in order of first appearance; compare sorted multisets
+    assert sorted(sizes.tolist()) == sorted(ref.values())
+    durs = np.asarray(stats.case_durations(frame, 12))
+    assert (durs >= 0).all()
+
+
+def test_conformance_detects_deviation():
+    rng = np.random.default_rng(4)
+    log = random_log(rng, n_cases=20, n_acts=5)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    d = dfg(frame, a)
+    model = conformance.discover_model(d)
+    assert float(conformance.footprint_fitness(d, model)) == 1.0
+    # forbid the most frequent edge -> fitness drops accordingly
+    c = np.asarray(d.counts)
+    i, j = np.unravel_index(c.argmax(), c.shape)
+    model2 = np.asarray(model).copy()
+    model2[i, j] = False
+    fit = float(conformance.footprint_fitness(d, jnp.asarray(model2)))
+    assert abs(fit - (1 - c[i, j] / c.sum())) < 1e-5
+    dev = conformance.footprint_deviations(d, jnp.asarray(model2))
+    assert int(np.asarray(dev)[i, j]) == int(c[i, j])
+
+
+def test_sojourn_times_positive():
+    rng = np.random.default_rng(5)
+    log = random_log(rng, n_cases=15, n_acts=4)
+    frame, tables = sorted_frame(log)
+    s = np.asarray(stats.sojourn_times(frame, len(tables[ACTIVITY])))
+    assert (s >= 0).all()

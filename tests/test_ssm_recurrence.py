@@ -1,0 +1,80 @@
+"""Chunked parallel forms == sequential recurrences (mamba2 / mLSTM / sLSTM)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.module import Initializer
+from repro.models import mamba2 as M
+from repro.models import xlstm as X
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="hybrid", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=100,
+                ssm_state=16, ssm_chunk=8, compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("S,chunk", [(37, 8), (16, 16), (65, 16), (5, 8)])
+def test_mamba2_chunked_equals_recurrent(S, chunk):
+    cfg = _cfg(ssm_chunk=chunk)
+    p = M.mamba2_init(Initializer(jax.random.PRNGKey(0)), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, S, 64)) * 0.5
+    y_chunk, st_chunk = M.mamba2_apply(p, u, cfg, return_state=True)
+    st = M.mamba2_init_state(cfg, 2)
+    ys = []
+    for t in range(S):
+        yt, st = M.mamba2_step(p, u[:, t:t + 1], st, cfg)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_chunk["h"]), np.asarray(st["h"]),
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_chunk["conv"]),
+                               np.asarray(st["conv"]), atol=2e-3)
+
+
+@pytest.mark.parametrize("S,chunk", [(37, 8), (24, 8), (8, 8)])
+def test_mlstm_chunked_equals_recurrent(S, chunk):
+    cfg = _cfg(family="ssm", d_ff=0, ssm_chunk=chunk)
+    p = X.mlstm_init(Initializer(jax.random.PRNGKey(2)), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(3), (2, S, 64)) * 0.5
+    y_chunk, st_c = X.mlstm_apply(p, u, cfg, return_state=True)
+    st = X.mlstm_init_state(cfg, 2)
+    ys = []
+    for t in range(S):
+        yt, st = X.mlstm_step(p, u[:, t:t + 1], st, cfg)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_c["h"]), np.asarray(st["h"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_state_carry():
+    cfg = _cfg(family="ssm", d_ff=0)
+    p = X.slstm_init(Initializer(jax.random.PRNGKey(4)), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(5), (2, 30, 64)) * 0.5
+    full, _ = X.slstm_apply(p, u, cfg)
+    y1, st = X.slstm_apply(p, u[:, :13], cfg)
+    y2, _ = X.slstm_apply(p, u[:, 13:], cfg, st)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([y1, y2], 1)), atol=1e-5)
+
+
+def test_attention_chunked_equals_ref():
+    from repro.models.attention import attention_chunked, attention_ref
+    rng = np.random.default_rng(0)
+    for (b, s, h, kvh, d, causal, win, chunk) in [
+            (2, 96, 8, 2, 32, True, None, 32),
+            (1, 128, 4, 4, 64, True, 48, 64),
+            (2, 100, 8, 4, 32, True, None, 64)]:
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, kvh, d)), jnp.float32)
+        r = attention_ref(q, k, v, causal=causal, window=win)
+        c = attention_chunked(q, k, v, causal=causal, window=win, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(r), np.asarray(c), atol=1e-5)

@@ -1,0 +1,166 @@
+"""Training runtime: loss goes down, microbatch equivalence, checkpoint
+save/restore/auto-resume, failure injection, straggler monitor, compression."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as Mdl
+from repro.models.module import Initializer
+from repro.train import compression
+from repro.train.checkpoint import CheckpointManager
+from repro.train.ft import FailureInjector, StragglerMonitor
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state, schedule
+from repro.train import trainstep as TS
+
+from helpers import LOCAL_RULES
+
+
+def _setup(seed=0, arch="eventlm-100m"):
+    cfg = reduced_config(get_config(arch))
+    params = Mdl.init_params(cfg, Initializer(jax.random.PRNGKey(seed)))
+    return cfg, params
+
+
+def _batch(cfg, B=4, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(3, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+            "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+
+def test_loss_decreases():
+    losses = []
+    cfg, params = _setup()
+    state = TS.init_state(cfg, params)
+    step = jax.jit(TS.make_train_step(cfg, LOCAL_RULES,
+                                      OptConfig(lr=1e-3, warmup_steps=2,
+                                                total_steps=40), 1))
+    b = _batch(cfg)  # overfit one batch
+    for i in range(30):
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_microbatch_equivalence():
+    """num_microbatches=4 must give the same update as 1 (same global batch)."""
+    cfg, params = _setup()
+    b = _batch(cfg, B=8)
+    oc = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    s1 = TS.init_state(cfg, params)
+    s4 = jax.tree.map(jnp.copy, s1)
+    st1, m1 = jax.jit(TS.make_train_step(cfg, LOCAL_RULES, oc, 1))(s1, b)
+    st4, m4 = jax.jit(TS.make_train_step(cfg, LOCAL_RULES, oc, 4))(s4, b)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    for a, c in zip(jax.tree.leaves(st1["params"]), jax.tree.leaves(st4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+def test_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(schedule(oc, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones((4,))}
+    opt = init_opt_state(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, m = adamw_update(OptConfig(clip_norm=1.0), params, huge, opt)
+    assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg, params = _setup()
+    state = TS.init_state(cfg, params)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, state)
+    mgr.save(20, state)
+    mgr.save(30, state)
+    assert mgr.all_steps() == [20, 30]  # keep=2 gc'd step 10
+    step, restored = mgr.restore_latest(state)
+    assert step == 30
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async(tmp_path):
+    cfg, params = _setup()
+    state = TS.init_state(cfg, params)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, state)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_training_resume_bitexact(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + restore + 3: same params."""
+    cfg, params = _setup()
+    oc = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    step = jax.jit(TS.make_train_step(cfg, LOCAL_RULES, oc, 1))
+    batches = [_batch(cfg, seed=i) for i in range(6)]
+
+    s = TS.init_state(cfg, params)
+    for b in batches:
+        s, _ = step(s, b)
+
+    s2 = TS.init_state(cfg, params)
+    mgr = CheckpointManager(str(tmp_path))
+    for b in batches[:3]:
+        s2, _ = step(s2, b)
+    mgr.save(3, s2)
+    _, s3 = mgr.restore_latest(s2)
+    for b in batches[3:]:
+        s3, _ = step(s3, b)
+    for a, b_ in zip(jax.tree.leaves(s["params"]), jax.tree.leaves(s3["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_failure_injection_and_restart_loop():
+    inj = FailureInjector({3})
+    done = []
+    for step_i in range(5):
+        try:
+            inj.check(step_i)
+            done.append(step_i)
+        except RuntimeError:
+            pass
+    assert 3 not in done and inj.failed == [3]
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=2.0)
+    for _ in range(5):
+        assert not mon.observe(1.0)
+    assert mon.observe(5.0)      # 5x the EWMA
+    assert mon.stragglers == 1
+
+
+def test_int8_error_feedback_converges():
+    """Repeated compressed transmission of the same gradient loses nothing
+    on average thanks to error feedback."""
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+    errors = compression.init_errors(g)
+    acc = jnp.zeros(256)
+    n = 50
+    for _ in range(n):
+        q, s, errors = compression.compress_tree(g, errors)
+        acc = acc + compression.dequantize(q["w"], s["w"])
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                               atol=1e-2)
+
+
+def test_quantize_roundtrip_bounds():
+    x = jnp.asarray([-3.0, 0.0, 1.5, 3.0])
+    q, s = compression.quantize(x)
+    back = compression.dequantize(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-7
