@@ -38,7 +38,7 @@ for shards in (1, 2, 4, 8):
     f = lambda: jax.block_until_ready(dfg_sharded_host(frame, 26, shards))
     f()
     t0 = time.perf_counter(); f(); dt = time.perf_counter() - t0
-    got = np.asarray(dfg_sharded_host(frame, 26, shards))
+    got = np.asarray(dfg_sharded_host(frame, 26, shards).counts)
     out[f"shards_{shards}"] = {"seconds": dt, "events_per_s": n / dt,
                                "correct": bool((got == ref).all())}
 print(json.dumps(out))

@@ -9,8 +9,8 @@ import sys
 import traceback
 
 from . import (bench_complexity, bench_distributed_dfg, bench_kernels,
-               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
-               bench_table6_biglogs)
+               bench_streaming, bench_table1_loading, bench_table2_sizes,
+               bench_table5_ops, bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -26,6 +26,8 @@ SUITES = {
         else (2_000, 8_000, 32_000)),
     "kernels": lambda full: bench_kernels.run(),
     "distributed": lambda full: bench_distributed_dfg.run(),
+    "streaming": lambda full: bench_streaming.run(
+        num_cases=2_000_000 if full else 100_000),
 }
 
 

@@ -38,7 +38,7 @@ print(f"log: {n:,} events, sharded 8 ways")
 ref = np.asarray(dfg(frame, 26, method="segment").counts)
 t0 = time.time(); local = np.asarray(dfg(frame, 26, method="segment").counts)
 t_local = time.time() - t0
-t0 = time.time(); got = np.asarray(dfg_sharded_host(frame, 26, 8))
+t0 = time.time(); got = np.asarray(dfg_sharded_host(frame, 26, 8).counts)
 t_dist = time.time() - t0
 assert (got == ref).all(), "distributed DFG mismatch!"
 print(f"DFG single-device: {t_local*1e3:.1f}ms   sharded x8 (map+psum): "

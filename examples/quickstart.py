@@ -26,9 +26,9 @@ def main():
 
     d = tempfile.mkdtemp()
     path = os.path.join(d, "log.edf")
-    hdr = edf.write(path, frame, tables, codec="zlib1")
+    edf.write(path, frame, tables, codec="zlib1")
     print(f"EDF on disk: {os.path.getsize(path)/2**20:.1f} MiB "
-          f"({sum(c['raw_nbytes'] for c in hdr['columns'])/2**20:.1f} MiB raw)")
+          f"({edf.file_sizes(path)['raw']/2**20:.1f} MiB raw)")
 
     t0 = time.time()
     frame2, tables2 = edf.read(path, columns=[CASE, ACTIVITY])

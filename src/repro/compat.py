@@ -1,0 +1,64 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The repo targets recent jax, but the pinned toolchain in some environments
+ships 0.4.x where ``shard_map`` still lives under ``jax.experimental``,
+``jax.sharding.AxisType`` / ``jax.set_mesh`` / ``get_abstract_mesh`` do not
+exist yet, and ``shard_map`` spells its replication check ``check_rep``
+instead of ``check_vma``. Import the names from here instead of from jax.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+    _NEW_SHARD_MAP = True
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEW_SHARD_MAP = False
+
+try:  # jax >= 0.6
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:
+    AxisType = None  # type: ignore[assignment]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename papered
+    over (we only use keyword form at call sites)."""
+    if not _NEW_SHARD_MAP and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, explicit: bool = False):
+    """``jax.make_mesh`` with ``axis_types`` only where the API supports it."""
+    if AxisType is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    kind = AxisType.Explicit if explicit else AxisType.Auto
+    return jax.make_mesh(axis_shapes, axis_names,
+                         axis_types=(kind,) * len(axis_names))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    New jax: ``jax.set_mesh``. Old jax: ``Mesh`` is itself a context
+    manager entering the thread-local physical mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or an empty mesh when none is installed."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh

@@ -7,27 +7,30 @@ formulation used by the Pallas kernel:
    composed from the §5.3 transformation functions: ``concat(D, shift(D))``,
    keep rows with equal case id, ``mergstrv`` the two activity columns, count.
 2. ``dfg_segment``      — *map-reduce* (§5.4 strategy 1): pair keys reduced via
-   scatter-add (``segment_sum``-style); this is the per-shard "map" used by the
-   distributed version (``repro.distributed.dfg``), whose "reduce" is a psum.
+   scatter-add (``segment_sum``-style).
 3. ``dfg_matmul``       — counts as a matrix product ``C = X^T Y`` with one-hot
    operands; the systolic MXU does the counting. This is the reference for
    ``repro.kernels.dfg_count`` and the fastest TPU path for small alphabets.
 
-All variants assume the frame is sorted by (case, time) — the paper's stated
-precondition ("the strategy assumes that the dataframe is sorted"). Start/end
-activities (needed to convert a DFG into a Petri net / IMDF input) come free
-from segment boundaries.
+The segment/matmul/kernel lowerings are expressed as a mergeable chunk-kernel
+(:func:`dfg_kernel`, see ``core.engine``): the whole-log jitted entry points
+are the single-chunk special case, the streaming out-of-core path folds the
+same update over EDF row groups, and ``repro.distributed.dfg`` runs the same
+update per shard with a ``ppermute`` halo as the carry and ``psum`` as the
+merge.  All variants assume the frame is sorted by (case, time) — the paper's
+stated precondition.  Start/end activities (needed to convert a DFG into a
+Petri net / IMDF input) come free from segment boundaries.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from .eventframe import ACTIVITY, CASE, EventFrame
-from . import ops
+from . import engine, ops
 
 
 @jax.tree_util.register_pytree_node_class
@@ -59,15 +62,6 @@ class DFG:
         return [((int(a), int(b)), int(c[a, b])) for a, b in zip(src, dst)]
 
 
-def _pair_arrays(frame: EventFrame):
-    """(src_act, dst_act, pair_mask, case, act, rv) for adjacent rows."""
-    case = frame[CASE]
-    act = frame[ACTIVITY]
-    rv = frame.rows_valid()
-    same_case = (case[1:] == case[:-1]) & rv[1:] & rv[:-1]
-    return act[:-1], act[1:], same_case, case, act, rv
-
-
 def _boundaries(case: jax.Array, rv: jax.Array):
     n = case.shape[0]
     is_start = jnp.concatenate([jnp.ones((1,), bool), case[1:] != case[:-1]]) & rv
@@ -75,11 +69,104 @@ def _boundaries(case: jax.Array, rv: jax.Array):
     return is_start, is_end
 
 
+# ----------------------------------------------------- pair-count reducers
+def _count_pairs_segment(counts, src, dst, mask, num_activities):
+    """Scatter-add of pair keys; masked pairs hit a scratch bucket."""
+    a = num_activities
+    key = jnp.where(mask, src * a + dst, a * a)
+    flat = counts.reshape(-1)
+    flat = jnp.concatenate([flat, jnp.zeros((1,), counts.dtype)])
+    flat = flat.at[key].add(1)
+    return flat[:-1].reshape(a, a)
+
+
+def _count_pairs_matmul(counts, src, dst, mask, num_activities, block=2048):
+    """Blockwise one-hot matmul: ``C += (onehot(src) * w)^T @ onehot(dst)``."""
+    a = num_activities
+    n = src.shape[0]
+    pad = (-n) % block
+    src = jnp.pad(src, (0, pad))
+    dst = jnp.pad(dst, (0, pad))
+    w = jnp.pad(mask.astype(jnp.float32), (0, pad))
+    nblk = (n + pad) // block
+
+    def body(c, xs):
+        s, d, ww = xs
+        x = (jax.nn.one_hot(s, a, dtype=jnp.float32) * ww[:, None])
+        y = jax.nn.one_hot(d, a, dtype=jnp.float32)
+        return c + jnp.dot(x.T, y, preferred_element_type=jnp.float32), None
+
+    c, _ = jax.lax.scan(
+        body, jnp.zeros((a, a), jnp.float32),
+        (src.reshape(nblk, block), dst.reshape(nblk, block), w.reshape(nblk, block)),
+    )
+    return counts + c.astype(counts.dtype)
+
+
+def _count_pairs_kernel(counts, src, dst, mask, num_activities):
+    """Pallas MXU kernel (``repro.kernels.dfg_count``) as the reducer."""
+    from repro.kernels.dfg_count import ops as kops
+
+    return counts + kops.dfg_count(src, dst, mask, num_activities)
+
+
+_REDUCERS = {
+    "segment": _count_pairs_segment,
+    "matmul": _count_pairs_matmul,
+    "kernel": _count_pairs_kernel,
+}
+
+
+# ------------------------------------------------------------ chunk kernel
+@lru_cache(maxsize=None)
+def dfg_kernel(num_activities: int, method: str = "segment") -> engine.ChunkKernel:
+    """DFG as a mergeable chunk-kernel (init / update / merge / finalize).
+
+    The carry is the one-row halo: the directly-follows pair straddling a
+    chunk boundary is (carry.act -> first row), a case continuing across the
+    boundary produces no start/end, and the stream's final end activity is
+    resolved in ``finalize`` from the last carry.  Any chunking of a sorted
+    log therefore yields counts identical to the whole-log pass.
+    """
+    a = num_activities
+    if method not in _REDUCERS:
+        raise ValueError(f"unknown DFG chunk method {method!r}")
+    reduce_pairs = _REDUCERS[method]
+
+    def init():
+        state = DFG(jnp.zeros((a, a), jnp.int32),
+                    jnp.zeros((a,), jnp.int32),
+                    jnp.zeros((a,), jnp.int32))
+        return state, engine.init_row_carry()
+
+    @jax.jit
+    def update(state, carry, chunk):
+        adj = engine.adjacent(chunk, carry)
+        counts = reduce_pairs(state.counts, adj.prev_act, adj.act, adj.pair, a)
+        starts = state.starts + ops.value_counts(
+            jnp.where(adj.is_start, adj.act, a), a + 1)[:-1]
+        ends = state.ends + ops.value_counts(
+            jnp.where(adj.end_prev, adj.prev_act, a), a + 1)[:-1]
+        return DFG(counts, starts, ends), engine.next_row_carry(carry, chunk)
+
+    @jax.jit
+    def finalize(state, carry):
+        last_end = (carry["exists"] & carry["rv"]).astype(jnp.int32)
+        ends = state.ends.at[carry["act"]].add(last_end, mode="drop")
+        return DFG(state.counts, state.starts, ends)
+
+    return engine.ChunkKernel(f"dfg[{method}]", init, update,
+                              engine.tree_sum, finalize)
+
+
+# ------------------------------------------------- whole-log entry points
 @partial(jax.jit, static_argnames=("num_activities",))
 def dfg_shift_count(frame: EventFrame, num_activities: int) -> DFG:
     """Paper §5.4 strategy 2, composed from the §5.3 ops verbatim.
 
     sort -> shift -> concat -> proj(case == case.2) -> mergstrv -> value_counts.
+    Kept in its literal whole-log form for paper fidelity; the streaming
+    equivalent is ``dfg_kernel(..., method="segment")``.
     """
     shifted = ops.shift(frame)
     both = ops.concat(frame, shifted, ".2")
@@ -101,56 +188,18 @@ def dfg_shift_count(frame: EventFrame, num_activities: int) -> DFG:
 
 @partial(jax.jit, static_argnames=("num_activities",))
 def dfg_segment(frame: EventFrame, num_activities: int) -> DFG:
-    """Paper §5.4 strategy 1 (map-reduce): scatter-add of pair keys.
-
-    The "map" groups by case implicitly (sorted segments); the "reduce" is a
-    scatter-add into the dense count matrix. ``repro.distributed.dfg`` runs
-    this per shard and psums — the paper's Spark shuffle becomes one
-    all-reduce of an (A, A) matrix.
-    """
-    src, dst, mask, case, act, rv = _pair_arrays(frame)
-    a = num_activities
-    key = jnp.where(mask, src * a + dst, a * a)
-    flat = jnp.zeros((a * a + 1,), jnp.int32).at[key].add(1)
-    counts = flat[:-1].reshape(a, a)
-    is_start, is_end = _boundaries(case, rv)
-    starts = ops.value_counts(jnp.where(is_start, act, a), a + 1)[:-1]
-    ends = ops.value_counts(jnp.where(is_end, act, a), a + 1)[:-1]
-    return DFG(counts, starts, ends)
+    """Paper §5.4 strategy 1 (map-reduce): the single-chunk special case of
+    ``dfg_kernel(..., "segment")``.  ``repro.distributed.dfg`` runs the same
+    update per shard and psums — the paper's Spark shuffle becomes one
+    all-reduce of an (A, A) matrix."""
+    return engine.run_single(dfg_kernel(num_activities, "segment"), frame)
 
 
-@partial(jax.jit, static_argnames=("num_activities", "block"))
-def dfg_matmul(frame: EventFrame, num_activities: int, block: int = 2048) -> DFG:
-    """TPU-native: counts as one-hot matmuls on the MXU (kernel reference).
-
-    ``C = sum_i w_i * e[src_i] e[dst_i]^T`` computed blockwise:
-    ``C += (onehot(src_blk) * w_blk)^T @ onehot(dst_blk)``. The Pallas kernel
-    (``repro.kernels.dfg_count``) is this loop with explicit VMEM tiling.
-    """
-    src, dst, mask, case, act, rv = _pair_arrays(frame)
-    a = num_activities
-    n = src.shape[0]
-    pad = (-n) % block
-    src = jnp.pad(src, (0, pad))
-    dst = jnp.pad(dst, (0, pad))
-    w = jnp.pad(mask.astype(jnp.float32), (0, pad))
-    nblk = (n + pad) // block
-
-    def body(c, xs):
-        s, d, ww = xs
-        x = (jax.nn.one_hot(s, a, dtype=jnp.float32) * ww[:, None])
-        y = jax.nn.one_hot(d, a, dtype=jnp.float32)
-        return c + jnp.dot(x.T, y, preferred_element_type=jnp.float32), None
-
-    c0 = jnp.zeros((a, a), jnp.float32)
-    c, _ = jax.lax.scan(
-        body, c0,
-        (src.reshape(nblk, block), dst.reshape(nblk, block), w.reshape(nblk, block)),
-    )
-    is_start, is_end = _boundaries(case, rv)
-    starts = ops.value_counts(jnp.where(is_start, act, a), a + 1)[:-1]
-    ends = ops.value_counts(jnp.where(is_end, act, a), a + 1)[:-1]
-    return DFG(c.astype(jnp.int32), starts, ends)
+@partial(jax.jit, static_argnames=("num_activities",))
+def dfg_matmul(frame: EventFrame, num_activities: int) -> DFG:
+    """TPU-native: counts as one-hot matmuls on the MXU (kernel reference);
+    the single-chunk special case of ``dfg_kernel(..., "matmul")``."""
+    return engine.run_single(dfg_kernel(num_activities, "matmul"), frame)
 
 
 def dfg(frame: EventFrame, num_activities: int, method: str = "segment") -> DFG:
@@ -162,14 +211,5 @@ def dfg(frame: EventFrame, num_activities: int, method: str = "segment") -> DFG:
     if method == "matmul":
         return dfg_matmul(frame, num_activities)
     if method == "kernel":
-        from repro.kernels.dfg_count import ops as kops
-
-        src, dst, mask, case, act, rv = _pair_arrays(frame)
-        counts = kops.dfg_count(src, dst, mask, num_activities)
-        is_start, is_end = _boundaries(case, rv)
-        starts = ops.value_counts(jnp.where(is_start, act, num_activities),
-                                  num_activities + 1)[:-1]
-        ends = ops.value_counts(jnp.where(is_end, act, num_activities),
-                                num_activities + 1)[:-1]
-        return DFG(counts, starts, ends)
+        return engine.run_single(dfg_kernel(num_activities, "kernel"), frame)
     raise ValueError(f"unknown DFG method {method!r}")

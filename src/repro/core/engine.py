@@ -1,0 +1,248 @@
+"""Chunked out-of-core execution engine — mergeable chunk-kernels.
+
+The paper's headline scenario (Table 6) is a log that does *not* fit in
+device memory.  This module restructures every log algorithm around
+device-sized partitions of a (case, time)-sorted log: an algorithm is a
+:class:`ChunkKernel` — a 4-tuple ``(init, update, merge, finalize)``::
+
+    state, carry = kernel.init()
+    for chunk in chunks:                      # EventFrame chunks, in order
+        state, carry = kernel.update(state, carry, chunk)
+    result = kernel.finalize(state, carry)
+
+* ``state`` is the mergeable partial result (count matrices, histograms,
+  min/max accumulators).  ``merge(a, b)`` combines the states of two runs
+  over consecutive log partitions whose boundary rows were stitched with
+  carries; in the distributed lowering the merge is a ``psum``
+  (``repro.distributed.dfg``) — one all-reduce whose payload is
+  independent of N.
+* ``carry`` is the one-row halo: the last row of the previous chunk
+  (case id, activity, timestamp, row-validity, and an ``exists`` flag that
+  is False only before the first row), plus kernel-specific streaming
+  state (open global segment id, rolling variant hash, EFG prefix
+  vector).  The carry is what stitches directly-follows pairs, case
+  starts/ends, and case-local scans across chunk boundaries, so *any*
+  chunking of a sorted log yields results identical to the whole-log pass
+  — including cases split across many chunks.
+
+The whole-log jitted entry points in ``core.dfg`` / ``core.stats`` /
+``core.variants`` / ``core.performance`` / ``core.filtering`` are the
+single-chunk special case of these kernels.  :func:`run_streaming` drives
+a kernel over any iterable of chunks (``core.chunked.ChunkedEventFrame``:
+EDF row groups on disk, an in-memory frame, or the synthetic generator)
+with peak residency of one chunk's columns plus an O(1) carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+
+State = Any
+Carry = dict
+Chunk = EventFrame
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkKernel:
+    """A log algorithm in mergeable chunk form (see module docstring).
+
+    ``update`` is jit-compiled by the factory that builds the kernel; it
+    retraces once per distinct chunk shape (a fixed-size chunk stream plus
+    one tail shape compiles exactly twice).
+    """
+
+    name: str
+    init: Callable[[], tuple[State, Carry]]
+    update: Callable[[State, Carry, Chunk], tuple[State, Carry]]
+    merge: Callable[[State, State], State]
+    finalize: Callable[[State, Carry], Any]
+
+
+# --------------------------------------------------------------- carries
+def init_row_carry(**extra) -> Carry:
+    """The halo before the first row: ``exists=False`` masks everything."""
+    carry = {
+        "case": jnp.int32(-1),
+        "act": jnp.int32(0),
+        "ts": jnp.float32(0.0),
+        "rv": jnp.bool_(False),
+        "exists": jnp.bool_(False),
+    }
+    carry.update(extra)
+    return carry
+
+
+def next_row_carry(carry: Carry, frame: Chunk, **extra) -> Carry:
+    """Carry for the next chunk: this chunk's last row + kernel extras."""
+    out = dict(carry)
+    out["case"] = frame[CASE][-1].astype(jnp.int32)
+    out["act"] = frame[ACTIVITY][-1].astype(jnp.int32)
+    if TIMESTAMP in frame:
+        out["ts"] = frame[TIMESTAMP][-1].astype(jnp.float32)
+    out["rv"] = frame.rows_valid()[-1]
+    out["exists"] = jnp.bool_(True)
+    out.update(extra)
+    return out
+
+
+class Adjacent(NamedTuple):
+    """Per-row arrays pairing each row with its predecessor (carry at row 0).
+
+    Semantics match the whole-log adjacency exactly: ``pair`` marks
+    directly-follows pairs (same case, both rows valid), ``new_seg`` marks
+    case-segment starts *ignoring* validity (as ``ops.segment_ids_sorted``
+    does), ``is_start``/``end_prev`` are the start/end-activity events.
+    ``end_prev[i]`` says row ``i-1`` (the carry for ``i=0``) ended its case;
+    the final row's end is resolved by ``finalize`` from the last carry.
+    """
+
+    case: jax.Array
+    act: jax.Array
+    rv: jax.Array
+    ts: jax.Array
+    prev_case: jax.Array
+    prev_act: jax.Array
+    prev_rv: jax.Array
+    prev_ts: jax.Array
+    prev_exists: jax.Array
+    new_seg: jax.Array      # bool — row starts a new case segment
+    pair: jax.Array         # bool — (prev row -> row) is a valid DF pair
+    is_start: jax.Array     # bool — row is a start activity
+    end_prev: jax.Array     # bool — previous row was an end activity
+
+
+def adjacent(frame: Chunk, carry: Carry, *, need_ts: bool = False) -> Adjacent:
+    case = frame[CASE]
+    act = frame[ACTIVITY]
+    rv = frame.rows_valid()
+    n = case.shape[0]
+    if TIMESTAMP in frame:
+        ts = frame[TIMESTAMP].astype(jnp.float32)
+    elif need_ts:
+        raise KeyError(TIMESTAMP)   # timed kernel on an untimed frame
+    else:
+        ts = jnp.zeros((n,), jnp.float32)
+    prev_case = jnp.concatenate([carry["case"][None].astype(case.dtype), case[:-1]])
+    prev_act = jnp.concatenate([carry["act"][None].astype(act.dtype), act[:-1]])
+    prev_ts = jnp.concatenate([carry["ts"][None].astype(ts.dtype), ts[:-1]])
+    prev_rv = jnp.concatenate([carry["rv"][None], rv[:-1]])
+    prev_exists = jnp.concatenate(
+        [carry["exists"][None], jnp.ones((n - 1,), bool)])
+    new_seg = (case != prev_case) | ~prev_exists
+    pair = (case == prev_case) & prev_exists & rv & prev_rv
+    is_start = new_seg & rv
+    end_prev = (case != prev_case) & prev_exists & prev_rv
+    return Adjacent(case, act, rv, ts, prev_case, prev_act, prev_rv, prev_ts,
+                    prev_exists, new_seg, pair, is_start, end_prev)
+
+
+def global_segments(adj: Adjacent, carry: Carry) -> jax.Array:
+    """Global case-segment ids for a chunk: ``carry['seg']`` continues the
+    numbering (``-1`` before the first row, so the first segment is 0)."""
+    return carry["seg"] + jnp.cumsum(adj.new_seg.astype(jnp.int32))
+
+
+# --------------------------------------------------------------- drivers
+def run_streaming(kernel: ChunkKernel, chunks: Iterable[Chunk]):
+    """Fold a kernel over an ordered chunk stream; O(chunk) residency."""
+    state, carry = kernel.init()
+    for chunk in chunks:
+        if chunk.nrows == 0:        # empty source / empty tail group
+            continue
+        state, carry = kernel.update(state, carry, chunk)
+    return kernel.finalize(state, carry)
+
+
+def run_single(kernel: ChunkKernel, frame: Chunk):
+    """The single-chunk special case: how the whole-log jitted entry points
+    route through the same kernel code as the streaming/distributed paths."""
+    state, carry = kernel.init()
+    state, carry = kernel.update(state, carry, frame)
+    return kernel.finalize(state, carry)
+
+
+def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
+    """Fuse kernels into one that shares a single pass over the stream.
+
+    States/carries are dicts keyed like ``kernels``; ``finalize`` returns a
+    dict of results. One disk scan computes DFG + stats + variants at once.
+    """
+    names = tuple(kernels)
+
+    def init():
+        pairs = {k: kernels[k].init() for k in names}
+        return ({k: s for k, (s, _) in pairs.items()},
+                {k: c for k, (_, c) in pairs.items()})
+
+    def update(state, carry, chunk):
+        out_s, out_c = {}, {}
+        for k in names:
+            out_s[k], out_c[k] = kernels[k].update(state[k], carry[k], chunk)
+        return out_s, out_c
+
+    def merge(a, b):
+        return {k: kernels[k].merge(a[k], b[k]) for k in names}
+
+    def finalize(state, carry):
+        return {k: kernels[k].finalize(state[k], carry[k]) for k in names}
+
+    return ChunkKernel("compose(" + ",".join(names) + ")",
+                       init, update, merge, finalize)
+
+
+def tree_sum(a, b):
+    """The common merge: leafwise addition of two partial states."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+# --------------------------------------------- convenience streaming API
+# Thin front doors; kernel factories live next to their whole-log twins
+# (lazy imports keep core.<algo> -> engine one-directional).
+def streaming_dfg(chunks, num_activities: int, method: str = "segment"):
+    from .dfg import dfg_kernel
+    return run_streaming(dfg_kernel(num_activities, method=method), chunks)
+
+
+def streaming_activity_counts(chunks, num_activities: int):
+    from .stats import activity_counts_kernel
+    return run_streaming(activity_counts_kernel(num_activities), chunks)
+
+
+def streaming_case_sizes(chunks, num_cases: int):
+    from .stats import case_sizes_kernel
+    return run_streaming(case_sizes_kernel(num_cases), chunks)
+
+
+def streaming_case_durations(chunks, num_cases: int):
+    from .stats import case_durations_kernel
+    return run_streaming(case_durations_kernel(num_cases), chunks)
+
+
+def streaming_sojourn_times(chunks, num_activities: int):
+    from .stats import sojourn_times_kernel
+    return run_streaming(sojourn_times_kernel(num_activities), chunks)
+
+
+def streaming_variant_fingerprints(chunks, num_cases: int):
+    from .variants import variants_kernel
+    return run_streaming(variants_kernel(num_cases), chunks)
+
+
+def streaming_variant_counts(chunks, num_cases: int):
+    from .variants import streaming_variant_counts as _svc
+    return _svc(chunks, num_cases)
+
+
+def streaming_performance_dfg(chunks, num_activities: int):
+    from .performance import performance_dfg_kernel
+    return run_streaming(performance_dfg_kernel(num_activities), chunks)
+
+
+def streaming_eventually_follows(chunks, num_activities: int):
+    from .performance import eventually_follows_kernel
+    return run_streaming(eventually_follows_kernel(num_activities), chunks)

@@ -1,20 +1,25 @@
 """Event- and case-level filters on EventFrames (paper §6 / PM4Py parity).
 
-Event-level filtering is the paper's O(N) columnar op. Case-level filtering
-("keep every event of any case that has property P") is the operation the
-paper calls out as needing custom dataframe techniques — here it is a
-two-phase mask broadcast: per-case predicate via segment reduction, then
-expansion back to events through the case segment ids.
+Event-level filtering is the paper's O(N) columnar op — stateless, so it
+chunks trivially. Case-level filtering ("keep every event of any case that
+has property P") is the operation the paper calls out as needing custom
+dataframe techniques — a two-phase mask broadcast: per-case predicate via
+segment reduction, then expansion back to events through the case segment
+ids.  Both phases are expressed over the chunk-kernels of ``core.engine``:
+phase one is a mergeable scatter-or/size reduction (streams over EDF row
+groups), phase two is a second pass that re-derives global segment ids per
+chunk from a carry and narrows each chunk's ``row_valid``.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from .eventframe import ACTIVITY, CASE, EventFrame
-from . import ops
+from . import engine, ops
+from .stats import case_sizes_kernel
 
 
 def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
@@ -35,22 +40,89 @@ def _case_mask_to_event_mask(case_seg: jax.Array, case_keep: jax.Array, num_case
     return case_keep[case_seg]
 
 
+# --------------------------------------------------- case-level, phase one
+def cases_containing_kernel(activity: int, num_cases: int) -> engine.ChunkKernel:
+    """Per-case predicate "case contains ``activity``" as a chunk-kernel;
+    state is the (num_cases,) keep mask, merged by logical or."""
+    return _cases_containing_kernel(int(activity), int(num_cases))
+
+
+@lru_cache(maxsize=None)
+def _cases_containing_kernel(activity: int, num_cases: int) -> engine.ChunkKernel:
+
+    def init():
+        return (jnp.zeros((num_cases,), bool),
+                engine.init_row_carry(seg=jnp.int32(-1)))
+
+    @jax.jit
+    def update(state, carry, chunk):
+        adj = engine.adjacent(chunk, carry)
+        seg = engine.global_segments(adj, carry)
+        hit = (adj.act == activity) & adj.rv
+        state = state.at[seg].max(hit, mode="drop")
+        return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
+
+    return engine.ChunkKernel(f"cases_containing[{activity}]", init, update,
+                              jnp.logical_or, lambda s, c: s)
+
+
+def streaming_cases_containing(chunks, activity: int, num_cases: int) -> jax.Array:
+    """Phase one over a chunk stream: the per-case keep mask."""
+    return engine.run_streaming(cases_containing_kernel(activity, num_cases),
+                                chunks)
+
+
+def streaming_case_size_keep(chunks, min_events: int, max_events: int,
+                             num_cases: int) -> jax.Array:
+    sizes = engine.run_streaming(case_sizes_kernel(num_cases), chunks)
+    return (sizes >= min_events) & (sizes <= max_events)
+
+
+# --------------------------------------------------- case-level, phase two
+def stream_apply_case_mask(chunks, case_keep: jax.Array):
+    """Second pass: narrow each chunk's ``row_valid`` by its case's verdict.
+
+    Re-derives global segment ids with the same carry logic as phase one, so
+    a case split across chunks is consistently kept or dropped.  Yields
+    chunks lazily — peak residency stays one chunk.
+    """
+    @jax.jit
+    def one(carry, chunk):
+        adj = engine.adjacent(chunk, carry)
+        seg = engine.global_segments(adj, carry)
+        keep = case_keep[jnp.clip(seg, 0, case_keep.shape[0] - 1)] & (seg < case_keep.shape[0])
+        return engine.next_row_carry(carry, chunk, seg=seg[-1]), keep
+
+    carry = engine.init_row_carry(seg=jnp.int32(-1))
+    for chunk in chunks:
+        if chunk.nrows == 0:
+            yield chunk
+            continue
+        carry, keep = one(carry, chunk)
+        yield ops.proj(chunk, keep)
+
+
+# ------------------------------------------------- whole-log entry points
 def filter_cases_containing(frame: EventFrame, activity: int, num_cases: int) -> EventFrame:
     """Case-level: keep all events of cases that contain ``activity``.
 
-    Requires frame sorted by (case, time); uses segment ids + scatter-or.
+    Requires frame sorted by (case, time); the single-chunk special case of
+    ``cases_containing_kernel`` + mask broadcast.
     """
+    kernel = cases_containing_kernel(activity, num_cases)
+    state, carry = kernel.init()
+    case_keep, _ = kernel.update(state, carry, frame)
     seg, _ = ops.segment_ids_sorted(frame[CASE])
-    hit = (frame[ACTIVITY] == activity) & frame.rows_valid()
-    case_keep = jnp.zeros((num_cases,), bool).at[seg].max(hit)
     return ops.proj(frame, _case_mask_to_event_mask(seg, case_keep, num_cases))
 
 
 def filter_case_size(frame: EventFrame, min_events: int, max_events: int, num_cases: int) -> EventFrame:
     """Case-level: keep cases whose (valid-)event count is within bounds."""
-    seg, _ = ops.segment_ids_sorted(frame[CASE])
-    sizes = jnp.zeros((num_cases,), jnp.int32).at[seg].add(frame.rows_valid().astype(jnp.int32))
+    from .stats import case_sizes
+
+    sizes = case_sizes(frame, num_cases)
     case_keep = (sizes >= min_events) & (sizes <= max_events)
+    seg, _ = ops.segment_ids_sorted(frame[CASE])
     return ops.proj(frame, case_keep[seg])
 
 
@@ -59,3 +131,10 @@ def most_common_activity(frame: EventFrame, num_activities: int) -> jax.Array:
     act = jnp.where(frame.rows_valid(), frame[ACTIVITY], num_activities)
     counts = ops.value_counts(act, num_activities + 1)[:-1]
     return jnp.argmax(counts)
+
+
+def streaming_most_common_activity(chunks, num_activities: int) -> int:
+    from .stats import activity_counts_kernel
+
+    counts = engine.run_streaming(activity_counts_kernel(num_activities), chunks)
+    return int(jnp.argmax(counts))

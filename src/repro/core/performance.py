@@ -3,75 +3,108 @@
 The paper's motivating analyses ("bottleneck analysis, remaining time
 prediction, logical-temporal checking", §1) need *timed* relations, not just
 counts. Both structures below are single-pass columnar reductions, keeping
-the Table-3/4 complexity story:
+the Table-3/4 complexity story, and both are expressed as mergeable
+chunk-kernels (``core.engine``) so they stream over logs larger than device
+memory:
 
 * ``performance_dfg`` — mean/total inter-event waiting time per
-  directly-follows edge (the classic performance overlay);
+  directly-follows edge (the classic performance overlay); the boundary
+  pair of two chunks is stitched by the carry's (case, act, ts) halo.
 * ``eventually_follows`` — counts of (a ... b) pairs within a case, the
-  relation used by LTL-style checks; computed with a per-case suffix-count
-  trick: for each event, the number of *later* events of each activity in
-  the same case, O(N·A) via reversed segmented cumsum.
+  relation used by LTL-style checks.  Computed with a per-case *prefix*
+  count vector: for each event of activity b, add the count of earlier
+  same-case events of every activity a — O(N·A) via one forward segmented
+  scan whose carry (the open case's prefix vector) streams across chunks.
+  Counts stay < 2^24 per cell in float32, so the accumulation is exact.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
-from . import ops
+from . import engine, ops
 
 
+# ------------------------------------------------------------ chunk kernels
+@lru_cache(maxsize=None)
+def performance_dfg_kernel(num_activities: int) -> engine.ChunkKernel:
+    """(counts, total wait) per directly-follows edge; mean at finalize."""
+    a = num_activities
+
+    def init():
+        state = (jnp.zeros((a * a + 1,), jnp.int32),
+                 jnp.zeros((a * a + 1,), jnp.float32))
+        return state, engine.init_row_carry()
+
+    @jax.jit
+    def update(state, carry, chunk):
+        counts, total = state
+        adj = engine.adjacent(chunk, carry, need_ts=True)
+        key = jnp.where(adj.pair, adj.prev_act * a + adj.act, a * a)
+        dt = jnp.where(adj.pair, adj.ts - adj.prev_ts, 0.0)
+        counts = counts.at[key].add(1)
+        total = total.at[key].add(dt)
+        return (counts, total), engine.next_row_carry(carry, chunk)
+
+    @jax.jit
+    def finalize(state, carry):
+        counts = state[0][:-1].reshape(a, a)
+        total = state[1][:-1].reshape(a, a)
+        return counts, total / jnp.maximum(counts, 1)
+
+    return engine.ChunkKernel(f"performance_dfg[{a}]", init, update,
+                              engine.tree_sum, finalize)
+
+
+@lru_cache(maxsize=None)
+def eventually_follows_kernel(num_activities: int) -> engine.ChunkKernel:
+    """EFG as a forward segmented scan; carry = open case's prefix vector."""
+    a = num_activities
+
+    def init():
+        state = jnp.zeros((a, a), jnp.float32)
+        return state, engine.init_row_carry(prefix=jnp.zeros((a,), jnp.float32))
+
+    @jax.jit
+    def update(state, carry, chunk):
+        adj = engine.adjacent(chunk, carry)
+        onehot = (jax.nn.one_hot(adj.act, a, dtype=jnp.float32)
+                  * adj.rv[:, None].astype(jnp.float32))
+
+        def step(prefix, xs):
+            oh, is_start = xs
+            prefix = jnp.where(is_start, jnp.zeros_like(prefix), prefix)
+            out = prefix                 # earlier-events count, exclusive
+            return prefix + oh, out
+
+        last, prefixes = jax.lax.scan(step, carry["prefix"],
+                                      (onehot, adj.new_seg))
+        state = state + jnp.einsum("ia,ib->ab", prefixes, onehot)
+        return state, engine.next_row_carry(carry, chunk, prefix=last)
+
+    @jax.jit
+    def finalize(state, carry):
+        return state.astype(jnp.int32)
+
+    return engine.ChunkKernel(f"eventually_follows[{a}]", init, update,
+                              engine.tree_sum, finalize)
+
+
+# ------------------------------------------------- whole-log entry points
 @partial(jax.jit, static_argnames=("num_activities",))
 def performance_dfg(frame: EventFrame, num_activities: int):
     """(counts, mean_wait) per edge; frame sorted by (case, time)."""
-    a = num_activities
-    case = frame[CASE]
-    act = frame[ACTIVITY]
-    ts = frame[TIMESTAMP].astype(jnp.float32)
-    rv = frame.rows_valid()
-    same = (case[1:] == case[:-1]) & rv[1:] & rv[:-1]
-    key = jnp.where(same, act[:-1] * a + act[1:], a * a)
-    dt = jnp.where(same, ts[1:] - ts[:-1], 0.0)
-    counts = jnp.zeros((a * a + 1,), jnp.int32).at[key].add(1)[:-1].reshape(a, a)
-    total = jnp.zeros((a * a + 1,), jnp.float32).at[key].add(dt)[:-1].reshape(a, a)
-    mean = total / jnp.maximum(counts, 1)
-    return counts, mean
+    return engine.run_single(performance_dfg_kernel(num_activities), frame)
 
 
 @partial(jax.jit, static_argnames=("num_activities",))
 def eventually_follows(frame: EventFrame, num_activities: int) -> jax.Array:
-    """EFG counts: efg[a, b] = #(event pairs i<j, same case, act_i=a, act_j=b).
-
-    Reversed segmented cumulative one-hot: suffix[i, b] = number of events of
-    activity b after i within the case; then efg[a] += suffix[i] for each
-    event i of activity a. O(N*A) work, one scan.
-    """
-    a = num_activities
-    case = frame[CASE]
-    act = frame[ACTIVITY]
-    rv = frame.rows_valid()
-    onehot = (jax.nn.one_hot(act, a, dtype=jnp.float32)
-              * rv[:, None].astype(jnp.float32))
-    is_case_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)])
-
-    def step(suffix, xs):
-        oh, end = xs
-        # reversed scan: a forward case-END is the first element of its case
-        # we meet — the carry belongs to the previous (different) case.
-        suffix = jnp.where(end, jnp.zeros_like(suffix), suffix)
-        out = suffix                     # later-events count, exclusive of i
-        suffix = suffix + oh
-        return suffix, out
-
-    # scan right-to-left
-    _, suffixes = jax.lax.scan(
-        step, jnp.zeros((a,), jnp.float32),
-        (onehot[::-1], is_case_end[::-1]))
-    suffixes = suffixes[::-1]          # suffixes[i, b] = later-b count (excl.)
-    efg = jnp.einsum("ia,ib->ab", onehot, suffixes)
-    return efg.astype(jnp.int32)
+    """EFG counts: efg[a, b] = #(event pairs i<j, same case, act_i=a, act_j=b);
+    the single-chunk special case of :func:`eventually_follows_kernel`."""
+    return engine.run_single(eventually_follows_kernel(num_activities), frame)
 
 
 def remaining_time_targets(frame: EventFrame) -> jax.Array:

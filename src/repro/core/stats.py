@@ -1,48 +1,140 @@
-"""Case/event statistics on EventFrames (segment reductions, all O(N))."""
+"""Case/event statistics on EventFrames (segment reductions, all O(N)).
+
+Each statistic is a mergeable chunk-kernel (``core.engine``): the public
+whole-log jitted functions are the single-chunk special case, and the same
+update streams over EDF row groups for logs larger than device memory.
+Cases split across chunk boundaries are stitched by the carry (global
+segment id + last-row halo), so any chunking of a (case,time)-sorted log
+matches the whole-log result.
+"""
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
-from . import ops
+from . import engine, ops
+
+_FBIG = jnp.float32(3.4028235e38)   # finfo(float32).max, as a literal
 
 
+# ------------------------------------------------------------ chunk kernels
+@lru_cache(maxsize=None)
+def case_sizes_kernel(num_cases: int) -> engine.ChunkKernel:
+    """Valid-event count per case, indexed by global segment id."""
+
+    def init():
+        return (jnp.zeros((num_cases,), jnp.int32),
+                engine.init_row_carry(seg=jnp.int32(-1)))
+
+    @jax.jit
+    def update(state, carry, chunk):
+        adj = engine.adjacent(chunk, carry)
+        seg = engine.global_segments(adj, carry)
+        state = state.at[seg].add(adj.rv.astype(jnp.int32), mode="drop")
+        return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
+
+    return engine.ChunkKernel(f"case_sizes[{num_cases}]", init, update,
+                              engine.tree_sum, lambda s, c: s)
+
+
+@lru_cache(maxsize=None)
+def case_durations_kernel(num_cases: int) -> engine.ChunkKernel:
+    """max(ts) - min(ts) per case; state = (tmin, tmax) accumulators."""
+
+    def init():
+        state = (jnp.full((num_cases,), _FBIG),
+                 jnp.full((num_cases,), -_FBIG))
+        return state, engine.init_row_carry(seg=jnp.int32(-1))
+
+    @jax.jit
+    def update(state, carry, chunk):
+        tmin, tmax = state
+        adj = engine.adjacent(chunk, carry, need_ts=True)
+        seg = engine.global_segments(adj, carry)
+        tmin = tmin.at[seg].min(jnp.where(adj.rv, adj.ts, _FBIG), mode="drop")
+        tmax = tmax.at[seg].max(jnp.where(adj.rv, adj.ts, -_FBIG), mode="drop")
+        return (tmin, tmax), engine.next_row_carry(carry, chunk, seg=seg[-1])
+
+    def merge(a, b):
+        return (jnp.minimum(a[0], b[0]), jnp.maximum(a[1], b[1]))
+
+    @jax.jit
+    def finalize(state, carry):
+        tmin, tmax = state
+        return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
+
+    return engine.ChunkKernel(f"case_durations[{num_cases}]", init, update,
+                              merge, finalize)
+
+
+@lru_cache(maxsize=None)
+def activity_counts_kernel(num_activities: int) -> engine.ChunkKernel:
+    """Per-activity histogram — stateless per chunk, carry only pro forma."""
+    a = num_activities
+
+    def init():
+        return jnp.zeros((a,), jnp.int32), engine.init_row_carry()
+
+    @jax.jit
+    def update(state, carry, chunk):
+        act = jnp.where(chunk.rows_valid(), chunk[ACTIVITY], a)
+        state = state + ops.value_counts(act, a + 1)[:-1]
+        return state, engine.next_row_carry(carry, chunk)
+
+    return engine.ChunkKernel(f"activity_counts[{a}]", init, update,
+                              engine.tree_sum, lambda s, c: s)
+
+
+@lru_cache(maxsize=None)
+def sojourn_times_kernel(num_activities: int) -> engine.ChunkKernel:
+    """Mean inter-event time by *source* activity; boundary pairs stitched
+    by the carry's (case, act, ts) halo."""
+    a = num_activities
+
+    def init():
+        state = (jnp.zeros((a + 1,), jnp.float32), jnp.zeros((a + 1,), jnp.int32))
+        return state, engine.init_row_carry()
+
+    @jax.jit
+    def update(state, carry, chunk):
+        tot, cnt = state
+        adj = engine.adjacent(chunk, carry, need_ts=True)
+        dt = jnp.where(adj.pair, adj.ts - adj.prev_ts, 0.0)
+        src = jnp.where(adj.pair, adj.prev_act, a)
+        tot = tot.at[src].add(dt)
+        cnt = cnt.at[src].add(adj.pair.astype(jnp.int32))
+        return (tot, cnt), engine.next_row_carry(carry, chunk)
+
+    @jax.jit
+    def finalize(state, carry):
+        tot, cnt = state
+        return (tot / jnp.maximum(cnt, 1))[:-1]
+
+    return engine.ChunkKernel(f"sojourn_times[{a}]", init, update,
+                              engine.tree_sum, finalize)
+
+
+# ------------------------------------------------- whole-log entry points
 @partial(jax.jit, static_argnames=("num_cases",))
 def case_sizes(frame: EventFrame, num_cases: int) -> jax.Array:
-    seg, _ = ops.segment_ids_sorted(frame[CASE])
-    return jnp.zeros((num_cases,), jnp.int32).at[seg].add(frame.rows_valid().astype(jnp.int32))
+    return engine.run_single(case_sizes_kernel(num_cases), frame)
 
 
 @partial(jax.jit, static_argnames=("num_cases",))
 def case_durations(frame: EventFrame, num_cases: int) -> jax.Array:
     """max(ts) - min(ts) per case (sorted frame)."""
-    seg, _ = ops.segment_ids_sorted(frame[CASE])
-    ts = frame[TIMESTAMP].astype(jnp.float32)
-    big = jnp.finfo(jnp.float32).max
-    rv = frame.rows_valid()
-    tmin = jnp.full((num_cases,), big).at[seg].min(jnp.where(rv, ts, big))
-    tmax = jnp.full((num_cases,), -big).at[seg].max(jnp.where(rv, ts, -big))
-    return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
+    return engine.run_single(case_durations_kernel(num_cases), frame)
 
 
 @partial(jax.jit, static_argnames=("num_activities",))
 def activity_counts(frame: EventFrame, num_activities: int) -> jax.Array:
-    act = jnp.where(frame.rows_valid(), frame[ACTIVITY], num_activities)
-    return ops.value_counts(act, num_activities + 1)[:-1]
+    return engine.run_single(activity_counts_kernel(num_activities), frame)
 
 
 @partial(jax.jit, static_argnames=("num_activities",))
 def sojourn_times(frame: EventFrame, num_activities: int) -> jax.Array:
     """Mean inter-event time by *source* activity (bottleneck analysis)."""
-    case = frame[CASE]
-    ts = frame[TIMESTAMP].astype(jnp.float32)
-    rv = frame.rows_valid()
-    same = (case[1:] == case[:-1]) & rv[1:] & rv[:-1]
-    dt = jnp.where(same, ts[1:] - ts[:-1], 0.0)
-    src = jnp.where(same, frame[ACTIVITY][:-1], num_activities)
-    tot = jnp.zeros((num_activities + 1,), jnp.float32).at[src].add(dt)
-    cnt = jnp.zeros((num_activities + 1,), jnp.int32).at[src].add(same.astype(jnp.int32))
-    return (tot / jnp.maximum(cnt, 1))[:-1]
+    return engine.run_single(sojourn_times_kernel(num_activities), frame)

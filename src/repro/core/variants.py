@@ -5,46 +5,126 @@ techniques taken into PM4Py. A variant is the sequence of activities of a
 case; we fingerprint it with *two* independent 32-bit polynomial rolling
 hashes computed by one segmented scan — O(N), no per-case Python loop, and
 x64-free (JAX default config). Collision probability ~ n_cases^2 / 2^64.
+
+The rolling hash is a left fold, so it streams: :func:`variants_kernel`
+carries the open case's hash state across chunk boundaries (``core.engine``)
+and scatters a case's fingerprint the moment its last event is seen — the
+whole-log ``variant_fingerprints`` is the single-chunk special case.
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 
 from .eventframe import ACTIVITY, CASE, EventFrame
-from . import ops
+from . import engine, ops
 
 _BASE1 = jnp.uint32(1_000_003)
 _BASE2 = jnp.uint32(16_777_619)  # FNV prime
 
 
+def _hash_scan(act: jax.Array, starts: jax.Array, h0):
+    """Segmented rolling hash ``h <- h * BASE + (act + 1)`` (mod 2^32),
+    restarting where ``starts`` is set; ``h0`` seeds the first segment."""
+    a = act.astype(jnp.uint32) + 1
+
+    def step(h, xs):
+        ai, is_start = xs
+        h1, h2 = h
+        h1 = jnp.where(is_start, jnp.uint32(0), h1) * _BASE1 + ai
+        h2 = jnp.where(is_start, jnp.uint32(0), h2) * _BASE2 + ai
+        return (h1, h2), (h1, h2)
+
+    return jax.lax.scan(step, h0, (a, starts))
+
+
+# ------------------------------------------------------------ chunk kernel
+@lru_cache(maxsize=None)
+def variants_kernel(num_cases: int) -> engine.ChunkKernel:
+    """Per-case variant fingerprints as a mergeable chunk-kernel.
+
+    State: ``(fp1, fp2)`` uint32 arrays indexed by global segment id.
+    Carry: the open case's rolling hash pair + its segment id.  A case's
+    fingerprint is scattered when its last event is identified — within the
+    chunk, at the next chunk's first row, or at ``finalize`` for the final
+    case of the stream.  Hashing ignores row validity, matching the
+    whole-log ``variant_fingerprints``.
+    """
+
+    def init():
+        state = (jnp.zeros((num_cases,), jnp.uint32),
+                 jnp.zeros((num_cases,), jnp.uint32))
+        carry = engine.init_row_carry(seg=jnp.int32(-1),
+                                      h1=jnp.uint32(0), h2=jnp.uint32(0))
+        return state, carry
+
+    @jax.jit
+    def update(state, carry, chunk):
+        fp1, fp2 = state
+        adj = engine.adjacent(chunk, carry)
+        seg = engine.global_segments(adj, carry)
+        (e1, e2), (hs1, hs2) = _hash_scan(adj.act, adj.new_seg,
+                                          (carry["h1"], carry["h2"]))
+        # the carry case ended iff this chunk opens a new segment at row 0
+        closed = adj.new_seg[0] & carry["exists"]
+        fp1 = fp1.at[carry["seg"]].max(jnp.where(closed, carry["h1"], 0),
+                                       mode="drop")
+        fp2 = fp2.at[carry["seg"]].max(jnp.where(closed, carry["h2"], 0),
+                                       mode="drop")
+        # in-chunk case ends: rows whose successor starts a new segment
+        ends = jnp.concatenate([adj.new_seg[1:], jnp.zeros((1,), bool)])
+        fp1 = fp1.at[seg].max(jnp.where(ends, hs1, 0), mode="drop")
+        fp2 = fp2.at[seg].max(jnp.where(ends, hs2, 0), mode="drop")
+        carry = engine.next_row_carry(carry, chunk, seg=seg[-1], h1=e1, h2=e2)
+        return (fp1, fp2), carry
+
+    def merge(a, b):
+        return (jnp.maximum(a[0], b[0]), jnp.maximum(a[1], b[1]))
+
+    @jax.jit
+    def finalize(state, carry):
+        """Returns (fp1, fp2, ncases) — ncases is the number of segments seen."""
+        fp1, fp2 = state
+        keep = carry["exists"]
+        fp1 = fp1.at[carry["seg"]].max(jnp.where(keep, carry["h1"], 0),
+                                       mode="drop")
+        fp2 = fp2.at[carry["seg"]].max(jnp.where(keep, carry["h2"], 0),
+                                       mode="drop")
+        return fp1, fp2, jnp.maximum(carry["seg"] + 1, 0)
+
+    return engine.ChunkKernel(f"variants[{num_cases}]", init, update,
+                              merge, finalize)
+
+
+# ------------------------------------------------- whole-log entry points
 @jax.jit
 def variant_fingerprints(frame: EventFrame) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Per-case (fp1, fp2) fingerprints + segment ids.
 
-    Frame must be sorted by (case, time). The rolling hashes
-    ``h <- h * BASE + (act + 1)`` (mod 2^32, free on uint32) restart at each
-    case boundary; the value at each case's last event is the variant
-    fingerprint. Returns arrays of length nrows; entries [0..ncases) of the
-    first two are the per-case fingerprints (scattered by segment id).
+    Frame must be sorted by (case, time). Returns arrays of length nrows;
+    entries [0..ncases) of the first two are the per-case fingerprints
+    (scattered by segment id) — the single-chunk form of
+    :func:`variants_kernel` with nrows as the case capacity.
     """
     seg, starts = ops.segment_ids_sorted(frame[CASE])
-    act = frame[ACTIVITY].astype(jnp.uint32) + 1
-
-    def step(h, xs):
-        a, is_start = xs
-        h1, h2 = h
-        h1 = jnp.where(is_start, jnp.uint32(0), h1) * _BASE1 + a
-        h2 = jnp.where(is_start, jnp.uint32(0), h2) * _BASE2 + a
-        return (h1, h2), (h1, h2)
-
-    _, (hs1, hs2) = jax.lax.scan(step, (jnp.uint32(0), jnp.uint32(0)), (act, starts))
+    (_, _), (hs1, hs2) = _hash_scan(frame[ACTIVITY], starts,
+                                    (jnp.uint32(0), jnp.uint32(0)))
     case = frame[CASE]
     is_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)])
     n = hs1.shape[0]
     fp1 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs1, 0))
     fp2 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs2, 0))
     return fp1, fp2, seg
+
+
+def _counts_from_fps(fp1, fp2, ncases: int) -> dict[tuple[int, int], int]:
+    import numpy as np
+
+    pairs = np.stack([np.asarray(fp1)[:ncases], np.asarray(fp2)[:ncases]], axis=1)
+    vals, counts = np.unique(pairs, axis=0, return_counts=True)
+    return {(int(v[0]), int(v[1])): int(c) for v, c in zip(vals, counts)}
 
 
 def variant_counts(frame: EventFrame) -> dict[tuple[int, int], int]:
@@ -54,6 +134,10 @@ def variant_counts(frame: EventFrame) -> dict[tuple[int, int], int]:
     fp1, fp2, seg = variant_fingerprints(frame)
     seg = np.asarray(seg)
     ncases = int(seg.max()) + 1 if len(seg) else 0
-    pairs = np.stack([np.asarray(fp1)[:ncases], np.asarray(fp2)[:ncases]], axis=1)
-    vals, counts = np.unique(pairs, axis=0, return_counts=True)
-    return {(int(v[0]), int(v[1])): int(c) for v, c in zip(vals, counts)}
+    return _counts_from_fps(fp1, fp2, ncases)
+
+
+def streaming_variant_counts(chunks, num_cases: int) -> dict[tuple[int, int], int]:
+    """Out-of-core 'Variants': one pass over the chunk stream."""
+    fp1, fp2, ncases = engine.run_streaming(variants_kernel(num_cases), chunks)
+    return _counts_from_fps(fp1, fp2, min(int(ncases), num_cases))

@@ -1,12 +1,17 @@
-"""Distributed DFG: the paper's map-reduce strategy as shard_map + psum.
+"""Distributed DFG: the streaming chunk-kernel with ``psum`` as its merge.
 
-Events are sharded over the data axes (columnar arrays cut into contiguous
-ranges). Each shard runs the *local* shifting-and-counting (the §5.4 matmul
-form), plus a one-row halo exchange: the pair that straddles a shard
-boundary (last event of shard i, first event of shard i+1) is recovered with
-a ``ppermute`` — the "shift" crossing the shard edge. The reduce phase is a
-single psum of the (A, A) count matrix: the paper's Spark shuffle collapses
+Events are sharded over the data axis (columnar arrays cut into contiguous
+ranges). Each shard runs the *same* ``core.dfg.dfg_kernel`` update that the
+single-shot and out-of-core paths use; the one-row halo that stitches the
+pair straddling a shard boundary is exactly the kernel's carry, recovered
+with a single ``ppermute`` (last row of shard i becomes shard i+1's carry).
+The reduce phase merges the per-shard states with one psum of the (A, A)
+count matrix (+ two (A,) histograms): the paper's Spark shuffle collapses
 into one all-reduce whose payload is independent of N.
+
+There is no bespoke halo code here any more — carry construction and
+boundary semantics live in ``core.engine`` and are shared verbatim with the
+streaming engine, so sharded == streamed == single-shot, bitwise.
 
 Complexity per device: O(N / devices) work, O(A^2) communication — compare
 Table 4's O(N) single-node bound.
@@ -17,39 +22,51 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+from repro.core.dfg import DFG, dfg_kernel
 from repro.core.eventframe import ACTIVITY, CASE, EventFrame
 
 
-def _local_counts(case, act, valid, num_activities, axis_name):
-    a = num_activities
-    # halo: receive the (case, act, valid) of the *previous* shard's last row
-    n_dev = jax.lax.axis_size(axis_name)
-    perm = [(i, i + 1) for i in range(n_dev - 1)]
-    prev_case = jax.lax.ppermute(case[-1:], axis_name, perm)
-    prev_act = jax.lax.ppermute(act[-1:], axis_name, perm)
-    prev_valid = jax.lax.ppermute(valid[-1:], axis_name, perm)
-    idx = jax.lax.axis_index(axis_name)
-    prev_valid = jnp.where(idx == 0, False, prev_valid[0])
+def _local_state(case, act, valid, *, num_activities, axis_name, n_dev):
+    kernel = dfg_kernel(num_activities)
+    state, carry = kernel.init()
 
-    src = jnp.concatenate([prev_act, act[:-1]])
-    src_case = jnp.concatenate([prev_case, case[:-1]])
-    src_valid = jnp.concatenate([prev_valid[None], valid[:-1]])
-    mask = (src_case == case) & src_valid & valid
-    key = jnp.where(mask, src * a + act, a * a)
-    flat = jnp.zeros((a * a + 1,), jnp.int32).at[key].add(1)
-    counts = flat[:-1].reshape(a, a)
-    return jax.lax.psum(counts, axis_name)
+    # carry = the previous shard's last row, via one ppermute; shard 0 keeps
+    # the kernel's init carry (exists=False masks everything).
+    perm = [(i, i + 1) for i in range(n_dev - 1)]
+    prev_case = jax.lax.ppermute(case[-1:], axis_name, perm)[0]
+    prev_act = jax.lax.ppermute(act[-1:], axis_name, perm)[0]
+    prev_valid = jax.lax.ppermute(valid[-1:], axis_name, perm)[0]
+    idx = jax.lax.axis_index(axis_name)
+    carry = dict(carry,
+                 case=prev_case.astype(jnp.int32),
+                 act=prev_act.astype(jnp.int32),
+                 rv=prev_valid,
+                 exists=idx > 0)
+
+    chunk = EventFrame({CASE: case, ACTIVITY: act}, {}, valid)
+    state, carry = kernel.update(state, carry, chunk)
+
+    # every shard's trailing end is resolved by its successor's update; the
+    # global last row has no successor, so the last shard finalizes it.
+    is_last = idx == n_dev - 1
+    last_end = (is_last & carry["rv"]).astype(jnp.int32)
+    state = DFG(state.counts, state.starts,
+                state.ends.at[carry["act"]].add(last_end, mode="drop"))
+
+    # merge == psum of the mergeable state, leaf by leaf
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), state)
 
 
 def dfg_sharded(frame: EventFrame, num_activities: int, mesh,
-                axis_name: str = "data"):
-    """Compute the DFG of a (case,time)-sorted frame sharded over ``axis_name``."""
+                axis_name: str = "data") -> DFG:
+    """Full DFG (counts + start/end histograms) of a (case,time)-sorted
+    frame sharded over ``axis_name``; replicated on every shard."""
     fn = shard_map(
-        functools.partial(_local_counts, num_activities=num_activities,
-                          axis_name=axis_name),
+        functools.partial(_local_state, num_activities=num_activities,
+                          axis_name=axis_name, n_dev=mesh.shape[axis_name]),
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P(axis_name)),
         out_specs=P(),
@@ -57,7 +74,7 @@ def dfg_sharded(frame: EventFrame, num_activities: int, mesh,
     return jax.jit(fn)(frame[CASE], frame[ACTIVITY], frame.rows_valid())
 
 
-def dfg_sharded_host(frame: EventFrame, num_activities: int, num_shards: int):
+def dfg_sharded_host(frame: EventFrame, num_activities: int, num_shards: int) -> DFG:
     """CPU-host validation path: shard on a host mesh of virtual devices."""
     devs = jax.devices()[:num_shards]
     mesh = jax.sharding.Mesh(devs, ("data",))

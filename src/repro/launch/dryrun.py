@@ -75,7 +75,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rules = make_rules(mesh, cfg, seq_parallel=cfg.seq_parallel)
     rules = _batch_rules(rules, mesh, shape.batch)
 
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+
+    with set_mesh(mesh):
         if shape.kind == "train":
             oc = OptConfig()
             step = TS.make_train_step(cfg, rules, oc, num_microbatches)
@@ -145,6 +147,8 @@ def run_cell(arch, shape_name, *, multi_pod, out_path=None, overrides=None,
         t2 = time.time()
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # old jax: one dict per device kind
+            ca = ca[0] if ca else {}
         # multiplicity-aware HLO accounting (lax.scan bodies x trip count) —
         # XLA's own cost_analysis counts loop bodies once (kept as *_xla).
         acct = analyze(compiled.as_text())

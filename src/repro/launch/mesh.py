@@ -6,8 +6,8 @@ touches jax device state (tests/benches must keep seeing 1 CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.models.config import ModelConfig
 from repro.models.module import ShardingRules
 
@@ -15,7 +15,7 @@ from repro.models.module import ShardingRules
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_rules(mesh, cfg: ModelConfig, *, seq_parallel: bool = False) -> ShardingRules:

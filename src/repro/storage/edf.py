@@ -1,16 +1,26 @@
 """EDF — a columnar event-log container (the Parquet/ORC role of the paper).
 
-Layout::
+Two on-disk layouts share one reader:
+
+EDFV0001 (legacy, whole-column blocks)::
 
     [8B magic "EDFV0001"] [4B header_len] [header json] [column blocks...]
 
-The header carries, per column: name, dtype, kind (numeric | dict), codec
-(raw | zlib1 | zlib6 | zlib9), byte offset and compressed/raw sizes, plus the
-dictionary tables of dict-encoded (string) columns. Reading supports
-**column projection** — only the requested columns' byte ranges are read and
-decoded (the paper's "attribute selection at load time"), and per-column
-compression exploits type homogeneity exactly as Parquet does (Snappy ~
-zlib1, Gzip ~ zlib9 in our codec ladder).
+EDFV0002 (current, row groups — the out-of-core layout)::
+
+    [8B magic "EDFV0002"] [4B header_len] [header json]
+    [group 0: column blocks...] [group 1: column blocks...] ...
+
+The v2 header carries the column schema once (name, dtype, kind
+numeric | dict, dictionary tables) plus per-group, per-column byte extents,
+so a reader can stream one row group at a time with **column projection** —
+only the requested columns' byte ranges of the current group are read and
+decoded (the paper's "attribute selection at load time", now also bounded in
+*rows*). Per-column compression (raw | zlib1 | zlib6 | zlib9) exploits type
+homogeneity exactly as Parquet does (Snappy ~ zlib1, Gzip ~ zlib9).
+
+``read`` loads any version whole; ``read_streaming`` / ``read_group`` are
+the chunk sources for ``repro.core.chunked.ChunkedEventFrame``.
 """
 from __future__ import annotations
 
@@ -23,7 +33,8 @@ import numpy as np
 
 from repro.core.eventframe import EventFrame
 
-MAGIC = b"EDFV0001"
+MAGIC = b"EDFV0001"          # legacy, still readable
+MAGIC_V2 = b"EDFV0002"
 CODECS = ("raw", "zlib1", "zlib6", "zlib9")
 
 
@@ -39,10 +50,9 @@ def _decode(buf: bytes, codec: str) -> bytes:
     return buf if codec == "raw" else zlib.decompress(buf)
 
 
-def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None,
-          codec: str = "zlib1") -> dict:
-    """Serialize an EventFrame. Returns the header (for size accounting)."""
-    tables = tables or {}
+# ------------------------------------------------------------------ write
+def _write_v1(path: str, frame: EventFrame, tables, codec: str) -> dict:
+    """Legacy whole-column layout (kept for back-compat round-trip tests)."""
     cols = []
     blobs = []
     offset = 0
@@ -80,16 +90,121 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
     return header
 
 
-def read_header(path: str) -> dict:
+def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None,
+          codec: str = "zlib1", row_group_rows: int | None = None,
+          version: int = 2) -> dict:
+    """Serialize an EventFrame. Returns the header (for size accounting).
+
+    ``row_group_rows`` splits the rows into groups of that size (the unit of
+    streaming reads); ``None`` writes a single group. ``version=1`` emits
+    the legacy layout.
+    """
+    tables = dict(tables or {})
+    if version == 1:
+        if row_group_rows is not None:
+            raise ValueError("row groups need version=2")
+        return _write_v1(path, frame, tables, codec)
+    if version != 2:
+        raise ValueError(f"unknown EDF version {version!r}")
+
+    data = {k: np.ascontiguousarray(v) for k, v in frame.to_numpy().items()}
+    valid = {k: np.asarray(v) for k, v in frame.valid.items()}
+    nrows = frame.nrows
+    step = nrows if row_group_rows is None else int(row_group_rows)
+    if step <= 0:
+        raise ValueError("row_group_rows must be positive")
+    bounds = list(range(0, nrows, step)) or [0]
+
+    schema = []
+    for name in sorted(data):
+        meta = {"name": name, "dtype": str(data[name].dtype), "codec": codec,
+                "kind": "dict" if name in tables else "numeric"}
+        if name in tables:
+            meta["table"] = list(tables[name])
+        if name in valid:
+            meta["has_valid"] = True
+        schema.append(meta)
+
+    groups = []
+    blobs = []
+    offset = 0
+    for lo in bounds:
+        hi = min(lo + step, nrows)
+        gcols = {}
+        for name in sorted(data):
+            raw = data[name][lo:hi].tobytes()
+            enc = _encode(raw, codec)
+            ext = {"offset": offset, "nbytes": len(enc), "raw_nbytes": len(raw)}
+            blobs.append(enc)
+            offset += len(enc)
+            if name in valid:
+                venc = _encode(np.packbits(valid[name][lo:hi]).tobytes(), codec)
+                ext["valid_offset"] = offset
+                ext["valid_nbytes"] = len(venc)
+                blobs.append(venc)
+                offset += len(venc)
+            gcols[name] = ext
+        groups.append({"nrows": hi - lo, "columns": gcols})
+
+    header = {"version": 2, "nrows": nrows, "codec": codec,
+              "columns": schema, "groups": groups}
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC_V2)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+    return header
+
+
+# ------------------------------------------------------------------- read
+def read_header(path: str) -> tuple[dict, int]:
     with open(path, "rb") as f:
-        assert f.read(8) == MAGIC, "not an EDF file"
+        magic = f.read(8)
+        assert magic in (MAGIC, MAGIC_V2), "not an EDF file"
         (hlen,) = struct.unpack("<I", f.read(4))
-        return json.loads(f.read(hlen)), 12 + hlen
+        header = json.loads(f.read(hlen))
+        header.setdefault("version", 1 if magic == MAGIC else 2)
+        return header, 12 + hlen
 
 
-def read(path: str, columns: Iterable[str] | None = None
-         ) -> tuple[EventFrame, dict[str, list]]:
-    """Load an EventFrame; ``columns`` projects at read time (partial I/O)."""
+def num_row_groups_header(header: dict) -> int:
+    return len(header["groups"]) if header.get("version", 1) == 2 else 1
+
+
+def num_row_groups(path: str) -> int:
+    header, _ = read_header(path)
+    return num_row_groups_header(header)
+
+
+def _tables_from_schema(header: dict) -> dict[str, list]:
+    return {c["name"]: c["table"] for c in header["columns"] if "table" in c}
+
+
+def _read_group_v2(f, base: int, header: dict, group: dict, want):
+    cols: dict[str, np.ndarray] = {}
+    valid: dict[str, np.ndarray] = {}
+    codec = header.get("codec", "raw")
+    gn = group["nrows"]
+    for meta in header["columns"]:
+        name = meta["name"]
+        if want is not None and name not in want:
+            continue
+        ext = group["columns"][name]
+        ccodec = meta.get("codec", codec)
+        f.seek(base + ext["offset"])
+        raw = _decode(f.read(ext["nbytes"]), ccodec)
+        cols[name] = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).copy()
+        if "valid_offset" in ext:
+            f.seek(base + ext["valid_offset"])
+            vraw = _decode(f.read(ext["valid_nbytes"]), ccodec)
+            valid[name] = np.unpackbits(
+                np.frombuffer(vraw, np.uint8), count=gn).astype(bool)
+    return EventFrame.from_numpy(cols, valid)
+
+
+def _read_v1(path: str, columns):
     header, base = read_header(path)
     want = set(columns) if columns is not None else None
     cols: dict[str, np.ndarray] = {}
@@ -114,11 +229,75 @@ def read(path: str, columns: Iterable[str] | None = None
     return EventFrame.from_numpy(cols, valid), tables
 
 
+def read(path: str, columns: Iterable[str] | None = None
+         ) -> tuple[EventFrame, dict[str, list]]:
+    """Load an EventFrame; ``columns`` projects at read time (partial I/O).
+
+    Reads both EDF versions; v2 row groups are concatenated.
+    """
+    header, base = read_header(path)
+    if header["version"] == 1:
+        return _read_v1(path, columns)
+    want = set(columns) if columns is not None else None
+    parts = []
+    with open(path, "rb") as f:
+        for group in header["groups"]:
+            parts.append(_read_group_v2(f, base, header, group, want))
+    names = parts[0].names if parts else ()
+    cols = {k: np.concatenate([np.asarray(p.columns[k]) for p in parts])
+            for k in names}
+    valid = {k: np.concatenate([np.asarray(p.valid[k]) for p in parts])
+             for k in (parts[0].valid if parts else {})}
+    tables = _tables_from_schema(header)
+    if want is not None:
+        tables = {k: v for k, v in tables.items() if k in want}
+    return EventFrame.from_numpy(cols, valid), tables
+
+
+def read_group(path: str, index: int, columns: Iterable[str] | None = None
+               ) -> tuple[EventFrame, dict[str, list]]:
+    """Load a single row group (partial I/O in both rows and columns)."""
+    header, base = read_header(path)
+    if header["version"] == 1:
+        if index != 0:
+            raise IndexError("EDFV0001 has a single row group")
+        return _read_v1(path, columns)
+    group = header["groups"][index]
+    want = set(columns) if columns is not None else None
+    with open(path, "rb") as f:
+        frame = _read_group_v2(f, base, header, group, want)
+    return frame, _tables_from_schema(header)
+
+
+def read_streaming(path: str, columns: Iterable[str] | None = None):
+    """Yield ``(EventFrame, tables)`` per row group — one group resident at
+    a time. EDFV0001 files degrade to a single chunk."""
+    header, base = read_header(path)
+    if header["version"] == 1:
+        yield _read_v1(path, columns)
+        return
+    want = set(columns) if columns is not None else None
+    tables = _tables_from_schema(header)
+    with open(path, "rb") as f:
+        for group in header["groups"]:
+            yield _read_group_v2(f, base, header, group, want), tables
+
+
 def file_sizes(path: str) -> dict:
     """Per-column compressed/raw byte accounting (Table 2 style)."""
     header, _ = read_header(path)
-    out = {"total": sum(c["nbytes"] for c in header["columns"]),
-           "raw": sum(c["raw_nbytes"] for c in header["columns"])}
-    for c in header["columns"]:
-        out[c["name"]] = c["nbytes"]
+    out = {"total": 0, "raw": 0}
+    if header["version"] == 1:
+        for c in header["columns"]:
+            out["total"] += c["nbytes"]
+            out["raw"] += c["raw_nbytes"]
+            out[c["name"]] = c["nbytes"]
+        return out
+    per_col = {c["name"]: 0 for c in header["columns"]}
+    for group in header["groups"]:
+        for name, ext in group["columns"].items():
+            per_col[name] += ext["nbytes"]
+            out["total"] += ext["nbytes"]
+            out["raw"] += ext["raw_nbytes"]
+    out.update(per_col)
     return out

@@ -51,7 +51,9 @@ def psum_compressed(grads, errors, axis_name: str):
     quantization residual is carried to the next step (error feedback), so
     the compression bias vanishes over time.
     """
-    n = jax.lax.axis_size(axis_name)
+    # axis size as a traced psum of ones: works on every jax we support
+    # (jax.lax.axis_size only exists on newer releases).
+    n = jax.lax.psum(jnp.int32(1), axis_name)
 
     def one(g, e):
         x = g.astype(jnp.float32) + e

@@ -1,0 +1,62 @@
+"""Property-testing shim: real hypothesis when installed, else a tiny
+seeded-random fallback implementing the ``given/settings/strategies`` subset
+these tests use (integer strategies as keyword arguments).
+
+The fallback is deliberately dumb: it draws ``max_examples`` pseudo-random
+samples from a fixed-seed generator, so runs are deterministic and failures
+reproducible, but there is no shrinking and no database. Install hypothesis
+to get the real thing; nothing here needs changing when you do.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+    _SEED = 0xEDF
+
+    class _Integers:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = int(min_value)
+            self.max_value = int(max_value)
+
+        def draw(self, rng: "np.random.Generator") -> int:
+            return int(rng.integers(self.min_value, self.max_value + 1))
+
+    class strategies:  # noqa: N801 - mimic the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # keep pytest from treating the strategy kwargs as fixtures
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.hypothesis_fallback = True
+            return wrapper
+
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

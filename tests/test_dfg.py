@@ -5,7 +5,7 @@ equal the iteration-on-attr-maps baseline (Def. 1 / Table 4 comparison).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core import ACTIVITY, CASE, dfg
 from repro.core.dfg import dfg_matmul, dfg_segment, dfg_shift_count

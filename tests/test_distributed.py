@@ -38,14 +38,22 @@ frame = EventFrame(cols, {}, jnp.pad(frame.rows_valid(), (0, pad)))
 """
 
 
-def test_sharded_dfg_matches_local():
+def test_sharded_dfg_matches_local_and_streaming():
+    """sharded DFG == streaming DFG == single-shot DFG, bitwise (counts,
+    starts, ends) — all three are the same chunk-kernel."""
     out = run_child(_PRE + """
+from repro.core import ChunkedEventFrame, run_streaming
+from repro.core.dfg import dfg_kernel
 from repro.distributed.dfg import dfg_sharded_host
-ref = np.asarray(dfg(frame, 13, method="segment").counts)
+ref = dfg(frame, 13, method="segment")
+stream = run_streaming(dfg_kernel(13), ChunkedEventFrame.from_frame(frame, 4096))
+for nm in ("counts", "starts", "ends"):
+    assert (np.asarray(getattr(stream, nm)) == np.asarray(getattr(ref, nm))).all(), nm
 for shards in (1, 2, 4, 8):
-    got = np.asarray(dfg_sharded_host(frame, 13, shards))
-    assert (got == ref).all(), f"mismatch at {shards} shards"
-print("OK", ref.sum())
+    got = dfg_sharded_host(frame, 13, shards)
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(got, nm)) == np.asarray(getattr(ref, nm))).all(), (shards, nm)
+print("OK", int(ref.counts.sum()))
 """)
     assert out.startswith("OK")
 
@@ -77,8 +85,8 @@ def test_psum_compressed_multidevice():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.train import compression
 
 mesh = jax.sharding.Mesh(np.array(jax.devices()), ("pod",))

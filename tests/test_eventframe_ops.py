@@ -1,6 +1,6 @@
 """Paper §5.3 transformation functions + conversion §5.2 round trip."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core import ACTIVITY, CASE, TIMESTAMP, ClassicEventLog, EventFrame
 from repro.core import ops

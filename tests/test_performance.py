@@ -1,6 +1,6 @@
 """Performance DFG / eventually-follows / remaining-time (timed relations)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core import ACTIVITY, CASE, TIMESTAMP
 from repro.core.performance import (eventually_follows, performance_dfg,

@@ -1,7 +1,7 @@
 """Data pipeline + variants/stats/conformance property tests (hypothesis)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.core import ACTIVITY, CASE, TIMESTAMP, conformance, dfg, stats, variants
 from repro.core import ops

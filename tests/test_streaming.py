@@ -1,0 +1,230 @@
+"""Chunked out-of-core engine: chunk-invariance properties + EDF v2.
+
+The load-bearing invariant: ANY chunking of a (case,time)-sorted log —
+including chunks of one row and cases split across many chunks — yields
+results bitwise-identical to the whole-log jitted path, because the carries
+stitch every boundary. Plus EDFV0002 round-trip/back-compat and the
+disk -> device streaming path.
+"""
+import os
+
+import numpy as np
+import pytest
+from _prop import given, settings, strategies as st
+
+from repro.core import (ACTIVITY, CASE, TIMESTAMP, ChunkedEventFrame,
+                        EventFrame, dfg, engine, filtering, run_streaming,
+                        stats, variants)
+from repro.core.dfg import dfg_kernel, dfg_segment
+from repro.core.performance import (eventually_follows,
+                                    eventually_follows_kernel,
+                                    performance_dfg, performance_dfg_kernel)
+from repro.data import synthetic
+from repro.storage import edf
+
+from helpers import random_log, sorted_frame
+
+
+def _random_cuts(rng, n, k):
+    return sorted(int(c) for c in rng.integers(1, max(n, 2), size=k))
+
+
+def _assert_dfg_equal(a, b, msg=""):
+    for nm in ("counts", "starts", "ends"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, nm)), np.asarray(getattr(b, nm)), err_msg=f"{msg}:{nm}")
+
+
+# ------------------------------------------------------- chunk invariance
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n_chunks=st.integers(1, 12))
+def test_dfg_chunk_invariance(seed, n_chunks):
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=25, n_acts=6, max_len=9)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    ref = dfg_segment(frame, a)
+    src = ChunkedEventFrame.from_cuts(frame, _random_cuts(rng, frame.nrows, n_chunks))
+    _assert_dfg_equal(run_streaming(dfg_kernel(a), src), ref, f"seed={seed}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5000))
+def test_stats_variants_chunk_invariance(seed):
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=20, n_acts=5, max_len=8)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    c = len(log.case_ids)
+    src = ChunkedEventFrame.from_cuts(frame, _random_cuts(rng, frame.nrows, 7))
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(stats.case_sizes_kernel(c), src)),
+        np.asarray(stats.case_sizes(frame, c)))
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(stats.case_durations_kernel(c), src)),
+        np.asarray(stats.case_durations(frame, c)))
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(stats.activity_counts_kernel(a), src)),
+        np.asarray(stats.activity_counts(frame, a)))
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(stats.sojourn_times_kernel(a), src)),
+        np.asarray(stats.sojourn_times(frame, a)))
+    assert variants.streaming_variant_counts(src, c) == variants.variant_counts(frame)
+    pc, pm = run_streaming(performance_dfg_kernel(a), src)
+    rc, rm = performance_dfg(frame, a)
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(pm), np.asarray(rm))
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(eventually_follows_kernel(a), src)),
+        np.asarray(eventually_follows(frame, a)))
+
+
+def test_case_split_across_three_plus_chunks():
+    """One case of 11 events cut into 2-row chunks: 6 chunks, one case."""
+    n = 11
+    frame = EventFrame.from_numpy({
+        CASE: np.zeros(n, np.int32),
+        ACTIVITY: (np.arange(n) % 3).astype(np.int32),
+        TIMESTAMP: np.arange(n, dtype=np.float32),
+    })
+    src = ChunkedEventFrame.from_frame(frame, 2)
+    assert len(src) == 6
+    ref = dfg_segment(frame, 3)
+    _assert_dfg_equal(run_streaming(dfg_kernel(3), src), ref)
+    assert int(ref.counts.sum()) == n - 1
+    np.testing.assert_array_equal(
+        np.asarray(run_streaming(stats.case_sizes_kernel(1), src)), [n])
+    assert variants.streaming_variant_counts(src, 1) == variants.variant_counts(frame)
+
+
+def test_single_row_chunks_and_all_methods():
+    frame, tables = synthetic.generate(num_cases=30, num_activities=5, seed=11)
+    src = ChunkedEventFrame.from_frame(frame, 1)
+    for method in ("segment", "matmul"):
+        _assert_dfg_equal(run_streaming(dfg_kernel(5, method), src),
+                          dfg(frame, 5, method=method), method)
+
+
+def test_streaming_case_filters_match_whole_log():
+    frame, tables = synthetic.generate(num_cases=50, num_activities=6, seed=3)
+    c = 50
+    src = ChunkedEventFrame.from_frame(frame, 37)
+    keep = filtering.streaming_cases_containing(src, 2, c)
+    wl = filtering.filter_cases_containing(frame, 2, c)
+    got = np.concatenate([np.asarray(ch.rows_valid())
+                          for ch in filtering.stream_apply_case_mask(src, keep)])
+    np.testing.assert_array_equal(got, np.asarray(wl.rows_valid()))
+
+
+def test_compose_single_pass():
+    frame, tables = synthetic.generate(num_cases=40, num_activities=7, seed=5)
+    src = ChunkedEventFrame.from_frame(frame, 29)
+    out = run_streaming(engine.compose({
+        "dfg": dfg_kernel(7), "acts": stats.activity_counts_kernel(7)}), src)
+    _assert_dfg_equal(out["dfg"], dfg_segment(frame, 7))
+    np.testing.assert_array_equal(np.asarray(out["acts"]),
+                                  np.asarray(stats.activity_counts(frame, 7)))
+
+
+def test_merge_combines_disjoint_case_partitions():
+    """merge() fuses states of partitions that do not split a case —
+    the host-side analogue of the distributed psum."""
+    f1, _ = synthetic.generate(num_cases=20, num_activities=5, seed=1)
+    f2raw, _ = synthetic.generate(num_cases=20, num_activities=5, seed=2)
+    shifted = {k: (np.asarray(v) + (20 if k == CASE else 0))
+               for k, v in f2raw.columns.items()}
+    f2 = EventFrame.from_numpy(shifted)
+    whole = EventFrame.from_numpy(
+        {k: np.concatenate([np.asarray(f1[k]), np.asarray(f2[k])])
+         for k in f1.names})
+    k = dfg_kernel(5)
+
+    def part_state(fr):
+        s, c = k.init()
+        s, c = k.update(s, c, fr)
+        return k.finalize(s, c)
+
+    merged = k.merge(part_state(f1), part_state(f2))
+    _assert_dfg_equal(merged, dfg_segment(whole, 5))
+
+
+# ------------------------------------------------------------------- EDF
+@pytest.fixture
+def frame_tables():
+    return synthetic.generate(num_cases=400, num_activities=9, seed=13)
+
+
+def test_edf_v2_roundtrip_and_groups(tmp_path, frame_tables):
+    frame, tables = frame_tables
+    p = str(tmp_path / "v2.edf")
+    edf.write(p, frame, tables, row_group_rows=257)
+    assert edf.num_row_groups(p) >= 8
+    f2, t2 = edf.read(p)
+    for kk in frame.names:
+        np.testing.assert_array_equal(np.asarray(frame[kk]), np.asarray(f2[kk]))
+    assert t2[ACTIVITY] == tables[ACTIVITY]
+    # per-group column projection
+    g0, _ = edf.read_group(p, 0, columns=[CASE])
+    assert set(g0.names) == {CASE}
+    np.testing.assert_array_equal(np.asarray(g0[CASE]),
+                                  np.asarray(frame[CASE])[:257])
+    # group sizes tile the file
+    sizes = [f.nrows for f, _ in edf.read_streaming(p)]
+    assert sum(sizes) == frame.nrows
+    assert all(s == 257 for s in sizes[:-1])
+
+
+def test_edf_v1_back_compat(tmp_path, frame_tables):
+    """v1 files written by the old layout stay readable (and streamable)."""
+    frame, tables = frame_tables
+    p = str(tmp_path / "v1.edf")
+    header = edf.write(p, frame, tables, version=1)
+    assert header.get("version", 1) == 1
+    with open(p, "rb") as f:
+        assert f.read(8) == edf.MAGIC
+    f2, t2 = edf.read(p)
+    for kk in frame.names:
+        np.testing.assert_array_equal(np.asarray(frame[kk]), np.asarray(f2[kk]))
+    assert t2[ACTIVITY] == tables[ACTIVITY]
+    assert edf.num_row_groups(p) == 1
+    chunks = list(edf.read_streaming(p))
+    assert len(chunks) == 1 and chunks[0][0].nrows == frame.nrows
+    src = ChunkedEventFrame.from_edf(p)
+    _assert_dfg_equal(run_streaming(dfg_kernel(9), src), dfg_segment(frame, 9))
+
+
+def test_edf_v2_missing_values_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    log = random_log(rng, n_cases=9, n_acts=3)
+    for i, e in enumerate(log.events):
+        if i % 3 == 0:
+            e.pop(TIMESTAMP)
+    frame, tables = log.to_eventframe()
+    p = str(tmp_path / "eps2.edf")
+    edf.write(p, frame, tables, row_group_rows=7)
+    f2, _ = edf.read(p)
+    np.testing.assert_array_equal(np.asarray(frame.valid[TIMESTAMP]),
+                                  np.asarray(f2.valid[TIMESTAMP]))
+
+
+def test_stream_from_edf_matches_whole_log(tmp_path, frame_tables):
+    frame, tables = frame_tables
+    p = str(tmp_path / "s.edf")
+    edf.write(p, frame, tables, row_group_rows=193)
+    src = ChunkedEventFrame.from_edf(p, columns=[CASE, ACTIVITY, TIMESTAMP])
+    assert len(src) >= 8
+    _assert_dfg_equal(run_streaming(dfg_kernel(9), src), dfg_segment(frame, 9))
+    assert src.tables[ACTIVITY] == tables[ACTIVITY]
+    # re-iterable: a second pass sees the same chunks
+    assert sum(c.nrows for c in src) == frame.nrows
+
+
+def test_from_synthetic_is_sorted_and_chunked():
+    src = ChunkedEventFrame.from_synthetic(num_cases=100, cases_per_chunk=13,
+                                           num_activities=6, seed=2)
+    assert len(src) == 8
+    whole = src.materialize()
+    case = np.asarray(whole[CASE])
+    assert (np.diff(case) >= 0).all()
+    assert len(np.unique(case)) == 100
+    _assert_dfg_equal(run_streaming(dfg_kernel(6), src), dfg_segment(whole, 6))
