@@ -1,6 +1,12 @@
 """Kernel micro-benchmarks (CPU: oracle + interpret-mode correctness cost;
 the TPU numbers come from the dry-run roofline, benchmarks here give the
-algorithmic comparison the paper's Table 4 implies)."""
+algorithmic comparison the paper's Table 4 implies).
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke]
+
+``--smoke`` shrinks sizes and skips the attention comparison — the cheap
+regression gate ``benchmarks.run`` uses by default (non ``--full``).
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -14,8 +20,9 @@ from repro.kernels.dfg_count import dfg_count_pallas, dfg_count_ref
 from .common import emit, timeit
 
 
-def run():
-    frame, tables = synthetic.generate(num_cases=100_000, num_activities=26, seed=3)
+def run(smoke: bool = False):
+    cases = 10_000 if smoke else 100_000
+    frame, tables = synthetic.generate(num_cases=cases, num_activities=26, seed=3)
     n = frame.nrows
     for method in ("shift", "segment", "matmul"):
         t = timeit(lambda: jax.block_until_ready(
@@ -23,7 +30,7 @@ def run():
         emit(f"kernels/dfg_{method}", t, f"events_per_s={n/t:.0f}")
 
     rng = np.random.default_rng(0)
-    e, a = 100_000, 128
+    e, a = (10_000 if smoke else 100_000), 128
     src = jnp.asarray(rng.integers(0, a, e), jnp.int32)
     dst = jnp.asarray(rng.integers(0, a, e), jnp.int32)
     w = jnp.ones((e,), jnp.float32)
@@ -33,6 +40,8 @@ def run():
         dfg_count_pallas(src, dst, w, a, interpret=True)), repeat=1)
     emit("kernels/dfg_count_pallas_interpret", t,
          "correctness-mode;TPU_perf=see_roofline")
+    if smoke:
+        return
 
     from repro.models.attention import attention_chunked, attention_ref
     q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
@@ -44,3 +53,16 @@ def run():
     emit("kernels/attention_ref_512", t, "materialized S^2")
     t2 = timeit(lambda: jax.block_until_ready(fc(q, k, v)))
     emit("kernels/attention_chunked_512", t2, f"vs_ref={t2/t:.2f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes, skip attention comparison")
+    args = ap.parse_args()
+    header()
+    run(smoke=args.smoke)

@@ -1,0 +1,109 @@
+"""Primitive-level timings for the segmented-primitive layer.
+
+Times every ``kernels.segment_ops`` primitive on both lowerings — the XLA
+scatter/scan reference and the Pallas kernel in interpret mode (CPU
+correctness cost; TPU throughput comes from the roofline) — and writes the
+``BENCH_segment_ops.json`` trajectory artifact so future PRs diff against a
+stable perf baseline.
+
+  PYTHONPATH=src python -m benchmarks.bench_segment_ops [--full] [--out F]
+"""
+from __future__ import annotations
+
+import json
+import platform
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import segment_ops as so
+
+from .common import emit, timeit
+
+IMPLS = ("xla", "pallas")
+
+
+def _rows(n: int, nbins: int, rng):
+    seg = np.sort(rng.integers(0, max(n // 8, 2), n)).astype(np.int32)
+    seg = (np.cumsum(np.concatenate([[1], np.diff(seg) != 0])) - 1).astype(np.int32)
+    return {
+        "seg": jnp.asarray(seg),
+        "nseg": int(seg.max()) + 1,
+        "vals": jnp.asarray(rng.integers(0, 100, n), jnp.int32),
+        "bins": jnp.asarray(rng.integers(0, nbins, n), jnp.int32),
+        "w": jnp.asarray(rng.integers(0, 3, n), jnp.int32),
+        "src": jnp.asarray(rng.integers(0, nbins, n), jnp.int32),
+        "dst": jnp.asarray(rng.integers(0, nbins, n), jnp.int32),
+        "mask": jnp.asarray(rng.random(n) < 0.8),
+        "acts": jnp.asarray(rng.integers(1, 27, n), jnp.uint32),
+        "starts": jnp.asarray(np.asarray(rng.random(n) < 0.15)),
+        "oh": jnp.asarray(np.eye(nbins, dtype=np.float32)[rng.integers(0, nbins, n)]),
+    }
+
+
+def run(full: bool = False, out_json: str | None = "BENCH_segment_ops.json"):
+    n = 200_000 if full else 20_000
+    nbins = 26
+    rng = np.random.default_rng(17)
+    d = _rows(n, nbins, rng)
+    results = {}
+
+    def record(name, impl, fn, repeat=3):
+        t = timeit(fn, repeat=repeat)
+        emit(f"segment_ops/{name}_{impl}", t, f"events_per_s={n/t:.0f}")
+        results.setdefault(name, {})[impl] = {"us_per_call": t * 1e6,
+                                              "events_per_s": n / t}
+
+    for impl in IMPLS:
+        # pallas-interpret is a correctness mode: time one call, not best-of
+        rep = 3 if impl == "xla" else 1
+        record("segment_reduce_sum", impl, lambda: jax.block_until_ready(
+            so.segment_reduce(d["vals"], d["seg"], d["nseg"], "sum", impl=impl)), rep)
+        record("segment_reduce_max", impl, lambda: jax.block_until_ready(
+            so.segment_reduce(d["vals"], d["seg"], d["nseg"], "max", impl=impl)), rep)
+        record("histogram", impl, lambda: jax.block_until_ready(
+            so.histogram(d["bins"], nbins, d["w"], impl=impl)), rep)
+        record("pair_count", impl, lambda: jax.block_until_ready(
+            so.pair_count(d["src"], d["dst"], nbins, weights=d["mask"], impl=impl)), rep)
+        record("segmented_scan_polyhash", impl, lambda: jax.block_until_ready(
+            so.segmented_scan(d["acts"], d["starts"], jnp.uint32(0),
+                              "polyhash", base=1_000_003, impl=impl)[0]), rep)
+        record("segmented_scan_sum", impl, lambda: jax.block_until_ready(
+            so.segmented_scan(d["oh"], d["starts"],
+                              jnp.zeros((nbins,), jnp.float32), "sum",
+                              impl=impl, assume_exact=True)[0]), rep)
+    record("pair_count", "matmul", lambda: jax.block_until_ready(
+        so.pair_count(d["src"], d["dst"], nbins, weights=d["mask"],
+                      impl="matmul")))
+
+    if out_json:
+        artifact = {
+            "bench": "segment_ops",
+            "n_events": n,
+            "num_bins": nbins,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "note": ("pallas timings are interpret-mode (CPU correctness "
+                     "cost, not TPU throughput); xla is the compiled "
+                     "scatter/scan reference"),
+            "primitives": results,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"segment_ops/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_segment_ops.json")
+    args = ap.parse_args()
+    from .common import header
+
+    header()
+    run(full=args.full, out_json=args.out)

@@ -9,8 +9,8 @@ import sys
 import traceback
 
 from . import (bench_complexity, bench_distributed_dfg, bench_kernels,
-               bench_streaming, bench_table1_loading, bench_table2_sizes,
-               bench_table5_ops, bench_table6_biglogs)
+               bench_segment_ops, bench_streaming, bench_table1_loading,
+               bench_table2_sizes, bench_table5_ops, bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -24,7 +24,11 @@ SUITES = {
     "complexity": lambda full: bench_complexity.run(
         sizes=(2_000, 8_000, 32_000, 128_000, 512_000) if full
         else (2_000, 8_000, 32_000)),
-    "kernels": lambda full: bench_kernels.run(),
+    "kernels": lambda full: bench_kernels.run(smoke=not full),
+    # primitive-level Pallas-interpret vs XLA timings; always writes the
+    # BENCH_segment_ops.json trajectory artifact (perf baseline for PRs)
+    "segment_ops": lambda full: bench_segment_ops.run(
+        full=full, out_json="BENCH_segment_ops.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

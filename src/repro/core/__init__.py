@@ -1,15 +1,17 @@
 """Core library: the paper's event-dataframe abstraction and algorithms."""
 from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
 from .classic_log import ClassicEventLog, make_classic_log
+from .backend import get_backend, set_backend, use_backend
 from .dfg import DFG, dfg, dfg_kernel, dfg_matmul, dfg_segment, dfg_shift_count
 from .engine import ChunkKernel, compose, run_streaming
 from .chunked import ChunkedEventFrame
-from . import conformance, engine, filtering, ops, stats, variants
+from . import backend, conformance, engine, filtering, ops, stats, variants
 
 __all__ = [
     "ACTIVITY", "CASE", "TIMESTAMP", "EventFrame", "ClassicEventLog",
     "make_classic_log", "DFG", "dfg", "dfg_kernel", "dfg_matmul",
     "dfg_segment", "dfg_shift_count", "ChunkKernel", "ChunkedEventFrame",
-    "compose", "run_streaming", "conformance", "engine", "filtering", "ops",
-    "stats", "variants",
+    "compose", "run_streaming", "backend", "get_backend", "set_backend",
+    "use_backend", "conformance", "engine", "filtering", "ops", "stats",
+    "variants",
 ]

@@ -1,0 +1,77 @@
+"""Backend dispatch for the segmented-primitive layer (``kernels.segment_ops``).
+
+Every core algorithm's inner loop is one of four named columnar primitives
+(``segment_reduce`` / ``histogram`` / ``pair_count`` / ``segmented_scan``),
+and each primitive has two interchangeable lowerings:
+
+* ``"pallas"`` — the Pallas TPU kernel (MXU one-hot matmul or VPU tiled
+  reduction over the sorted stream).  On non-TPU backends the kernel body
+  runs in interpret mode, so CPU-only CI validates the exact code the TPU
+  executes.
+* ``"xla"``    — the reference scatter/scan lowering (the paper's direct
+  translation).  Row-order accumulation, used as the parity oracle and as
+  the mandatory path for order-sensitive float accumulations.
+
+Selection, most specific wins:
+
+1. an explicit ``impl=`` argument at a primitive call site;
+2. :func:`set_backend` / the :func:`use_backend` context manager;
+3. the ``REPRO_SEGMENT_BACKEND`` environment variable (read at import);
+4. ``"auto"``: pallas on TPU, xla elsewhere.
+
+Backend choice is resolved when a kernel factory / primitive is *built*
+(trace time).  The core factories include the resolved backend in their
+cache keys, so ``use_backend("pallas")`` reliably rebuilds kernels inside
+a process; plain jitted closures that dispatched at trace time keep their
+original backend until retraced — CI therefore runs the pallas pass as a
+separate process with ``REPRO_SEGMENT_BACKEND=pallas``.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+ENV_VAR = "REPRO_SEGMENT_BACKEND"
+BACKENDS = ("auto", "pallas", "xla")
+
+_state = {"backend": os.environ.get(ENV_VAR, "auto")}
+
+
+def get_backend() -> str:
+    """The currently selected backend name (may be ``"auto"``)."""
+    return _state["backend"]
+
+
+def set_backend(name: str) -> None:
+    if name not in BACKENDS:
+        raise ValueError(f"unknown segment-ops backend {name!r}; "
+                         f"expected one of {BACKENDS}")
+    _state["backend"] = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Temporarily select a backend (tests: parity on both lowerings)."""
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def resolve(impl: str | None = None) -> str:
+    """Concrete lowering for a primitive call: ``"pallas"`` or ``"xla"``."""
+    b = impl if impl is not None else _state["backend"]
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if b not in ("pallas", "xla"):
+        raise ValueError(f"unknown segment-ops impl {b!r}")
+    return b
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (CPU CI validation)."""
+    return jax.default_backend() != "tpu"

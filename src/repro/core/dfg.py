@@ -1,25 +1,30 @@
-"""Directly-Follows Graph on dataframes — paper §5.4, three lowerings.
+"""Directly-Follows Graph on dataframes — paper §5.4, on the primitive layer.
 
-The paper gives two strategies; we implement both, plus the TPU-native matmul
-formulation used by the Pallas kernel:
+The paper gives two strategies; both (plus the TPU-native matmul
+formulation) are now *one* call into the segmented-primitive layer
+(``repro.kernels.segment_ops.pair_count``), selected by ``method``:
 
-1. ``dfg_shift_count``  — *shifting and counting* (§5.4 strategy 2), literally
-   composed from the §5.3 transformation functions: ``concat(D, shift(D))``,
-   keep rows with equal case id, ``mergstrv`` the two activity columns, count.
-2. ``dfg_segment``      — *map-reduce* (§5.4 strategy 1): pair keys reduced via
-   scatter-add (``segment_sum``-style).
-3. ``dfg_matmul``       — counts as a matrix product ``C = X^T Y`` with one-hot
-   operands; the systolic MXU does the counting. This is the reference for
-   ``repro.kernels.dfg_count`` and the fastest TPU path for small alphabets.
+1. ``method="shift"``   — *shifting and counting* (§5.4 strategy 2),
+   literally composed from the §5.3 transformation functions:
+   ``concat(D, shift(D))``, keep rows with equal case id, ``mergstrv`` the
+   two activity columns, count.
+2. ``method="segment"`` — *map-reduce* (§5.4 strategy 1): pair keys reduced
+   via the XLA scatter lowering (``impl="xla"``).
+3. ``method="matmul"``  — counts as a matrix product ``C = X^T Y`` with
+   one-hot operands (``impl="matmul"``); the systolic MXU does the counting.
+4. ``method="kernel"``  — the Pallas MXU kernel (``impl="pallas"``).
+5. ``method="auto"``    — backend dispatch (``core.backend``): Pallas on
+   TPU, XLA scatter elsewhere.  The default everywhere downstream, so the
+   streaming engine and ``distributed.dfg`` inherit the fast path.
 
-The segment/matmul/kernel lowerings are expressed as a mergeable chunk-kernel
-(:func:`dfg_kernel`, see ``core.engine``): the whole-log jitted entry points
-are the single-chunk special case, the streaming out-of-core path folds the
-same update over EDF row groups, and ``repro.distributed.dfg`` runs the same
-update per shard with a ``ppermute`` halo as the carry and ``psum`` as the
-merge.  All variants assume the frame is sorted by (case, time) — the paper's
-stated precondition.  Start/end activities (needed to convert a DFG into a
-Petri net / IMDF input) come free from segment boundaries.
+The lowerings are expressed as a mergeable chunk-kernel (:func:`dfg_kernel`,
+see ``core.engine``): the whole-log entry points are the single-chunk
+special case, the streaming out-of-core path folds the same update over EDF
+row groups, and ``repro.distributed.dfg`` runs the same update per shard
+with a ``ppermute`` halo as the carry and ``psum`` as the merge.  All
+variants assume the frame is sorted by (case, time) — the paper's stated
+precondition.  Counting is integer-exact under any accumulation order, so
+every method/impl returns bitwise-identical counts.
 """
 from __future__ import annotations
 
@@ -29,7 +34,10 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_ops import histogram, pair_count
+
 from .eventframe import ACTIVITY, CASE, EventFrame
+from . import backend as _backend
 from . import engine, ops
 
 
@@ -63,63 +71,25 @@ class DFG:
 
 
 def _boundaries(case: jax.Array, rv: jax.Array):
-    n = case.shape[0]
     is_start = jnp.concatenate([jnp.ones((1,), bool), case[1:] != case[:-1]]) & rv
     is_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)]) & rv
     return is_start, is_end
 
 
-# ----------------------------------------------------- pair-count reducers
-def _count_pairs_segment(counts, src, dst, mask, num_activities):
-    """Scatter-add of pair keys; masked pairs hit a scratch bucket."""
-    a = num_activities
-    key = jnp.where(mask, src * a + dst, a * a)
-    flat = counts.reshape(-1)
-    flat = jnp.concatenate([flat, jnp.zeros((1,), counts.dtype)])
-    flat = flat.at[key].add(1)
-    return flat[:-1].reshape(a, a)
+# method -> pair_count impl; "auto" resolves through core.backend.
+_METHOD_IMPL = {"segment": "xla", "matmul": "matmul", "kernel": "pallas"}
 
 
-def _count_pairs_matmul(counts, src, dst, mask, num_activities, block=2048):
-    """Blockwise one-hot matmul: ``C += (onehot(src) * w)^T @ onehot(dst)``."""
-    a = num_activities
-    n = src.shape[0]
-    pad = (-n) % block
-    src = jnp.pad(src, (0, pad))
-    dst = jnp.pad(dst, (0, pad))
-    w = jnp.pad(mask.astype(jnp.float32), (0, pad))
-    nblk = (n + pad) // block
-
-    def body(c, xs):
-        s, d, ww = xs
-        x = (jax.nn.one_hot(s, a, dtype=jnp.float32) * ww[:, None])
-        y = jax.nn.one_hot(d, a, dtype=jnp.float32)
-        return c + jnp.dot(x.T, y, preferred_element_type=jnp.float32), None
-
-    c, _ = jax.lax.scan(
-        body, jnp.zeros((a, a), jnp.float32),
-        (src.reshape(nblk, block), dst.reshape(nblk, block), w.reshape(nblk, block)),
-    )
-    return counts + c.astype(counts.dtype)
-
-
-def _count_pairs_kernel(counts, src, dst, mask, num_activities):
-    """Pallas MXU kernel (``repro.kernels.dfg_count``) as the reducer."""
-    from repro.kernels.dfg_count import ops as kops
-
-    return counts + kops.dfg_count(src, dst, mask, num_activities)
-
-
-_REDUCERS = {
-    "segment": _count_pairs_segment,
-    "matmul": _count_pairs_matmul,
-    "kernel": _count_pairs_kernel,
-}
+def _method_impl(method: str) -> str:
+    if method == "auto":
+        return _backend.resolve(None)
+    if method not in _METHOD_IMPL:
+        raise ValueError(f"unknown DFG chunk method {method!r}")
+    return _METHOD_IMPL[method]
 
 
 # ------------------------------------------------------------ chunk kernel
-@lru_cache(maxsize=None)
-def dfg_kernel(num_activities: int, method: str = "segment") -> engine.ChunkKernel:
+def dfg_kernel(num_activities: int, method: str = "auto") -> engine.ChunkKernel:
     """DFG as a mergeable chunk-kernel (init / update / merge / finalize).
 
     The carry is the one-row halo: the directly-follows pair straddling a
@@ -127,11 +97,19 @@ def dfg_kernel(num_activities: int, method: str = "segment") -> engine.ChunkKern
     boundary produces no start/end, and the stream's final end activity is
     resolved in ``finalize`` from the last carry.  Any chunking of a sorted
     log therefore yields counts identical to the whole-log pass.
+
+    ``method="auto"`` resolves through ``core.backend`` *now* (factory
+    call time) and is part of the kernel cache key, so backend switches
+    rebuild the jitted update.
     """
+    return _dfg_kernel(num_activities, _method_impl(method))
+
+
+@lru_cache(maxsize=None)
+def _dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
-    if method not in _REDUCERS:
-        raise ValueError(f"unknown DFG chunk method {method!r}")
-    reduce_pairs = _REDUCERS[method]
+    # "matmul" is a pair_count-only lowering; histograms take the scatter
+    hist_impl = "xla" if impl == "matmul" else impl
 
     def init():
         state = DFG(jnp.zeros((a, a), jnp.int32),
@@ -142,51 +120,54 @@ def dfg_kernel(num_activities: int, method: str = "segment") -> engine.ChunkKern
     @jax.jit
     def update(state, carry, chunk):
         adj = engine.adjacent(chunk, carry)
-        counts = reduce_pairs(state.counts, adj.prev_act, adj.act, adj.pair, a)
-        starts = state.starts + ops.value_counts(
-            jnp.where(adj.is_start, adj.act, a), a + 1)[:-1]
-        ends = state.ends + ops.value_counts(
-            jnp.where(adj.end_prev, adj.prev_act, a), a + 1)[:-1]
+        counts = state.counts + pair_count(adj.prev_act, adj.act, a,
+                                           weights=adj.pair, impl=impl)
+        starts = state.starts + histogram(adj.act, a, weights=adj.is_start,
+                                          impl=hist_impl)
+        ends = state.ends + histogram(adj.prev_act, a, weights=adj.end_prev,
+                                      impl=hist_impl)
         return DFG(counts, starts, ends), engine.next_row_carry(carry, chunk)
 
     @jax.jit
     def finalize(state, carry):
+        # O(1) halo update (the stream's final end activity), not an inner loop
         last_end = (carry["exists"] & carry["rv"]).astype(jnp.int32)
         ends = state.ends.at[carry["act"]].add(last_end, mode="drop")
         return DFG(state.counts, state.starts, ends)
 
-    return engine.ChunkKernel(f"dfg[{method}]", init, update,
+    return engine.ChunkKernel(f"dfg[{impl}]", init, update,
                               engine.tree_sum, finalize)
 
 
 # ------------------------------------------------- whole-log entry points
-@partial(jax.jit, static_argnames=("num_activities",))
-def dfg_shift_count(frame: EventFrame, num_activities: int) -> DFG:
+def dfg_shift_count(frame: EventFrame, num_activities: int,
+                    backend: str | None = None) -> DFG:
     """Paper §5.4 strategy 2, composed from the §5.3 ops verbatim.
 
-    sort -> shift -> concat -> proj(case == case.2) -> mergstrv -> value_counts.
+    sort -> shift -> concat -> proj(case == case.2) -> mergstrv -> histogram.
     Kept in its literal whole-log form for paper fidelity; the streaming
     equivalent is ``dfg_kernel(..., method="segment")``.
     """
+    return _dfg_shift_count(frame, num_activities, _backend.resolve(backend))
+
+
+@partial(jax.jit, static_argnames=("num_activities", "impl"))
+def _dfg_shift_count(frame: EventFrame, num_activities: int, impl: str) -> DFG:
     shifted = ops.shift(frame)
     both = ops.concat(frame, shifted, ".2")
     both = ops.proj(both, both[CASE] == both[CASE + ".2"])
     both = ops.mergstrv(both, "df:pair", ACTIVITY, ACTIVITY + ".2", num_activities)
     keep = both.rows_valid()
-    # value_counts over the pair key; masked rows hit a scratch bucket.
-    pair = jnp.where(keep, both["df:pair"], num_activities * num_activities)
-    flat = jnp.zeros((num_activities * num_activities + 1,), jnp.int32).at[pair].add(1)
-    counts = flat[:-1].reshape(num_activities, num_activities)
+    flat = histogram(both["df:pair"], num_activities * num_activities,
+                     weights=keep, impl=impl)
+    counts = flat.reshape(num_activities, num_activities)
     is_start, is_end = _boundaries(frame[CASE], frame.rows_valid())
     act = frame[ACTIVITY]
-    starts = ops.value_counts(jnp.where(is_start, act, num_activities),
-                              num_activities + 1)[:-1]
-    ends = ops.value_counts(jnp.where(is_end, act, num_activities),
-                            num_activities + 1)[:-1]
+    starts = histogram(act, num_activities, weights=is_start, impl=impl)
+    ends = histogram(act, num_activities, weights=is_end, impl=impl)
     return DFG(counts, starts, ends)
 
 
-@partial(jax.jit, static_argnames=("num_activities",))
 def dfg_segment(frame: EventFrame, num_activities: int) -> DFG:
     """Paper §5.4 strategy 1 (map-reduce): the single-chunk special case of
     ``dfg_kernel(..., "segment")``.  ``repro.distributed.dfg`` runs the same
@@ -195,21 +176,14 @@ def dfg_segment(frame: EventFrame, num_activities: int) -> DFG:
     return engine.run_single(dfg_kernel(num_activities, "segment"), frame)
 
 
-@partial(jax.jit, static_argnames=("num_activities",))
 def dfg_matmul(frame: EventFrame, num_activities: int) -> DFG:
     """TPU-native: counts as one-hot matmuls on the MXU (kernel reference);
     the single-chunk special case of ``dfg_kernel(..., "matmul")``."""
     return engine.run_single(dfg_kernel(num_activities, "matmul"), frame)
 
 
-def dfg(frame: EventFrame, num_activities: int, method: str = "segment") -> DFG:
-    """Front door. ``method`` in {"shift", "segment", "matmul", "kernel"}."""
+def dfg(frame: EventFrame, num_activities: int, method: str = "auto") -> DFG:
+    """Front door. ``method`` in {"auto", "shift", "segment", "matmul", "kernel"}."""
     if method == "shift":
         return dfg_shift_count(frame, num_activities)
-    if method == "segment":
-        return dfg_segment(frame, num_activities)
-    if method == "matmul":
-        return dfg_matmul(frame, num_activities)
-    if method == "kernel":
-        return engine.run_single(dfg_kernel(num_activities, "kernel"), frame)
-    raise ValueError(f"unknown DFG method {method!r}")
+    return engine.run_single(dfg_kernel(num_activities, method), frame)

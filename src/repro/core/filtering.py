@@ -17,7 +17,10 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_ops import histogram, segment_reduce
+
 from .eventframe import ACTIVITY, CASE, EventFrame
+from . import backend as _backend
 from . import engine, ops
 from .stats import case_sizes_kernel
 
@@ -41,14 +44,17 @@ def _case_mask_to_event_mask(case_seg: jax.Array, case_keep: jax.Array, num_case
 
 
 # --------------------------------------------------- case-level, phase one
-def cases_containing_kernel(activity: int, num_cases: int) -> engine.ChunkKernel:
+def cases_containing_kernel(activity: int, num_cases: int,
+                            backend: str | None = None) -> engine.ChunkKernel:
     """Per-case predicate "case contains ``activity``" as a chunk-kernel;
     state is the (num_cases,) keep mask, merged by logical or."""
-    return _cases_containing_kernel(int(activity), int(num_cases))
+    return _cases_containing_kernel(int(activity), int(num_cases),
+                                    _backend.resolve(backend))
 
 
 @lru_cache(maxsize=None)
-def _cases_containing_kernel(activity: int, num_cases: int) -> engine.ChunkKernel:
+def _cases_containing_kernel(activity: int, num_cases: int,
+                             impl: str) -> engine.ChunkKernel:
 
     def init():
         return (jnp.zeros((num_cases,), bool),
@@ -59,11 +65,12 @@ def _cases_containing_kernel(activity: int, num_cases: int) -> engine.ChunkKerne
         adj = engine.adjacent(chunk, carry)
         seg = engine.global_segments(adj, carry)
         hit = (adj.act == activity) & adj.rv
-        state = state.at[seg].max(hit, mode="drop")
+        # or-reduce per case == segment max over the boolean hit column
+        state = state | segment_reduce(hit, seg, num_cases, "max", impl=impl)
         return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
 
-    return engine.ChunkKernel(f"cases_containing[{activity}]", init, update,
-                              jnp.logical_or, lambda s, c: s)
+    return engine.ChunkKernel(f"cases_containing[{activity},{impl}]", init,
+                              update, jnp.logical_or, lambda s, c: s)
 
 
 def streaming_cases_containing(chunks, activity: int, num_cases: int) -> jax.Array:
@@ -128,8 +135,8 @@ def filter_case_size(frame: EventFrame, min_events: int, max_events: int, num_ca
 
 def most_common_activity(frame: EventFrame, num_activities: int) -> jax.Array:
     """The paper's Table-5 filter target: the most frequent activity."""
-    act = jnp.where(frame.rows_valid(), frame[ACTIVITY], num_activities)
-    counts = ops.value_counts(act, num_activities + 1)[:-1]
+    counts = histogram(frame[ACTIVITY], num_activities,
+                       weights=frame.rows_valid())
     return jnp.argmax(counts)
 
 

@@ -83,8 +83,24 @@ def mergstrv(frame: EventFrame, out: str, n1: str, n2: str, base: int) -> EventF
 
     ``base`` must exceed every value of ``n2`` (typically the alphabet size);
     the encoding is injective, as string concatenation with a separator is.
+
+    The encoding lives in int32, so ``max(col1) * base + max(col2)`` must
+    fit in int32.  With concrete (non-traced) columns the bound is checked
+    eagerly and a clear ``OverflowError`` is raised instead of silently
+    wrapping; under ``jit`` the values are tracers and the caller is
+    responsible for sizing ``base`` (alphabets are static there).
     """
-    merged = frame[n1].astype(jnp.int32) * jnp.int32(base) + frame[n2].astype(jnp.int32)
+    c1, c2 = frame[n1], frame[n2]
+    if not (isinstance(c1, jax.core.Tracer) or isinstance(c2, jax.core.Tracer)):
+        if c1.size:
+            hi = int(jnp.max(c1)) * int(base) + int(jnp.max(c2))
+            if hi > jnp.iinfo(jnp.int32).max:
+                raise OverflowError(
+                    f"mergstrv({n1!r}, {n2!r}): pair encoding max "
+                    f"{int(jnp.max(c1))} * {base} + {int(jnp.max(c2))} = {hi} "
+                    f"exceeds int32 range; use a smaller base/alphabet or "
+                    f"split the log")
+    merged = c1.astype(jnp.int32) * jnp.int32(base) + c2.astype(jnp.int32)
     return frame.with_column(out, merged)
 
 
@@ -108,7 +124,14 @@ def segment_ids_sorted(key: jax.Array) -> tuple[jax.Array, jax.Array]:
     return jnp.cumsum(starts.astype(jnp.int32)) - 1, starts
 
 
-def value_counts(col: jax.Array, num_values: int, weights: jax.Array | None = None) -> jax.Array:
-    """Histogram of a dictionary-encoded column — the ``c(e)`` count of §5.4."""
-    w = weights if weights is not None else jnp.ones_like(col, dtype=jnp.int32)
-    return jnp.zeros((num_values,), jnp.int32).at[col].add(w)
+def value_counts(col: jax.Array, num_values: int, weights: jax.Array | None = None,
+                 *, impl: str | None = None) -> jax.Array:
+    """Histogram of a dictionary-encoded column — the ``c(e)`` count of §5.4.
+
+    Thin alias of ``kernels.segment_ops.histogram`` (backend-dispatched:
+    Pallas tiled reduction on TPU, XLA scatter elsewhere); out-of-range
+    values are dropped.
+    """
+    from repro.kernels.segment_ops import histogram
+
+    return histogram(col, num_values, weights, impl=impl)

@@ -5,63 +5,80 @@ prediction, logical-temporal checking", §1) need *timed* relations, not just
 counts. Both structures below are single-pass columnar reductions, keeping
 the Table-3/4 complexity story, and both are expressed as mergeable
 chunk-kernels (``core.engine``) so they stream over logs larger than device
-memory:
+memory — with inner loops on the ``repro.kernels.segment_ops`` primitives:
 
 * ``performance_dfg`` — mean/total inter-event waiting time per
-  directly-follows edge (the classic performance overlay); the boundary
-  pair of two chunks is stitched by the carry's (case, act, ts) halo.
+  directly-follows edge (the classic performance overlay).  Edge counts are
+  one ``pair_count`` (backend-dispatched, integer-exact on any lowering);
+  the float wait totals are a second ``pair_count`` that the dispatch layer
+  keeps on the row-order XLA scatter (order-sensitive float accumulation —
+  see ``segment_ops.ops``).  The boundary pair of two chunks is stitched by
+  the carry's (case, act, ts) halo.
 * ``eventually_follows`` — counts of (a ... b) pairs within a case, the
-  relation used by LTL-style checks.  Computed with a per-case *prefix*
-  count vector: for each event of activity b, add the count of earlier
-  same-case events of every activity a — O(N·A) via one forward segmented
-  scan whose carry (the open case's prefix vector) streams across chunks.
-  Counts stay < 2^24 per cell in float32, so the accumulation is exact.
+  relation used by LTL-style checks.  The per-case *prefix* count vector is
+  a ``segmented_scan`` over one-hot rows (prefix counts are integer-valued
+  float32, sums < 2^24, so the scan is exact and ``assume_exact=True``
+  unlocks the Pallas lowering); the contraction into the (A, A) matrix is
+  an einsum — already MXU-native, no scatter.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_ops import pair_count, segment_reduce, segmented_scan
+
 from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+from . import backend as _backend
 from . import engine, ops
 
 
 # ------------------------------------------------------------ chunk kernels
-@lru_cache(maxsize=None)
-def performance_dfg_kernel(num_activities: int) -> engine.ChunkKernel:
+def performance_dfg_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
     """(counts, total wait) per directly-follows edge; mean at finalize."""
+    return _performance_dfg_kernel(num_activities, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _performance_dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
 
     def init():
-        state = (jnp.zeros((a * a + 1,), jnp.int32),
-                 jnp.zeros((a * a + 1,), jnp.float32))
+        state = (jnp.zeros((a, a), jnp.int32),
+                 jnp.zeros((a, a), jnp.float32))
         return state, engine.init_row_carry()
 
     @jax.jit
     def update(state, carry, chunk):
         counts, total = state
         adj = engine.adjacent(chunk, carry, need_ts=True)
-        key = jnp.where(adj.pair, adj.prev_act * a + adj.act, a * a)
         dt = jnp.where(adj.pair, adj.ts - adj.prev_ts, 0.0)
-        counts = counts.at[key].add(1)
-        total = total.at[key].add(dt)
+        counts = counts + pair_count(adj.prev_act, adj.act, a,
+                                     weights=adj.pair, impl=impl)
+        # float wait totals: order-sensitive — dispatch keeps them on the
+        # XLA scatter, and into= accumulates in row order onto the state
+        total = pair_count(adj.prev_act, adj.act, a,
+                           weights=dt, into=total, impl=None)
         return (counts, total), engine.next_row_carry(carry, chunk)
 
     @jax.jit
     def finalize(state, carry):
-        counts = state[0][:-1].reshape(a, a)
-        total = state[1][:-1].reshape(a, a)
+        counts, total = state
         return counts, total / jnp.maximum(counts, 1)
 
-    return engine.ChunkKernel(f"performance_dfg[{a}]", init, update,
+    return engine.ChunkKernel(f"performance_dfg[{a},{impl}]", init, update,
                               engine.tree_sum, finalize)
 
 
-@lru_cache(maxsize=None)
-def eventually_follows_kernel(num_activities: int) -> engine.ChunkKernel:
+def eventually_follows_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
     """EFG as a forward segmented scan; carry = open case's prefix vector."""
+    return _eventually_follows_kernel(num_activities, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _eventually_follows_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
 
     def init():
@@ -73,15 +90,10 @@ def eventually_follows_kernel(num_activities: int) -> engine.ChunkKernel:
         adj = engine.adjacent(chunk, carry)
         onehot = (jax.nn.one_hot(adj.act, a, dtype=jnp.float32)
                   * adj.rv[:, None].astype(jnp.float32))
-
-        def step(prefix, xs):
-            oh, is_start = xs
-            prefix = jnp.where(is_start, jnp.zeros_like(prefix), prefix)
-            out = prefix                 # earlier-events count, exclusive
-            return prefix + oh, out
-
-        last, prefixes = jax.lax.scan(step, carry["prefix"],
-                                      (onehot, adj.new_seg))
+        # inclusive segmented prefix counts (integer-valued f32 -> exact)
+        incl, last = segmented_scan(onehot, adj.new_seg, carry["prefix"],
+                                    "sum", impl=impl, assume_exact=True)
+        prefixes = incl - onehot            # exclusive: earlier-events count
         state = state + jnp.einsum("ia,ib->ab", prefixes, onehot)
         return state, engine.next_row_carry(carry, chunk, prefix=last)
 
@@ -89,31 +101,36 @@ def eventually_follows_kernel(num_activities: int) -> engine.ChunkKernel:
     def finalize(state, carry):
         return state.astype(jnp.int32)
 
-    return engine.ChunkKernel(f"eventually_follows[{a}]", init, update,
+    return engine.ChunkKernel(f"eventually_follows[{a},{impl}]", init, update,
                               engine.tree_sum, finalize)
 
 
 # ------------------------------------------------- whole-log entry points
-@partial(jax.jit, static_argnames=("num_activities",))
-def performance_dfg(frame: EventFrame, num_activities: int):
+def performance_dfg(frame: EventFrame, num_activities: int,
+                    backend: str | None = None):
     """(counts, mean_wait) per edge; frame sorted by (case, time)."""
-    return engine.run_single(performance_dfg_kernel(num_activities), frame)
+    return engine.run_single(performance_dfg_kernel(num_activities, backend),
+                             frame)
 
 
-@partial(jax.jit, static_argnames=("num_activities",))
-def eventually_follows(frame: EventFrame, num_activities: int) -> jax.Array:
+def eventually_follows(frame: EventFrame, num_activities: int,
+                       backend: str | None = None) -> jax.Array:
     """EFG counts: efg[a, b] = #(event pairs i<j, same case, act_i=a, act_j=b);
     the single-chunk special case of :func:`eventually_follows_kernel`."""
-    return engine.run_single(eventually_follows_kernel(num_activities), frame)
+    return engine.run_single(eventually_follows_kernel(num_activities, backend),
+                             frame)
 
 
-def remaining_time_targets(frame: EventFrame) -> jax.Array:
+def remaining_time_targets(frame: EventFrame, backend: str | None = None) -> jax.Array:
     """Per-event remaining time to case end (regression targets for the
-    'remaining time prediction' analysis; feeds the LM pipeline as labels)."""
+    'remaining time prediction' analysis; feeds the LM pipeline as labels).
+
+    ``segment_reduce(op="max")`` over the case segments (exact — min/max is
+    order-insensitive), broadcast back through the segment ids.
+    """
     case = frame[CASE]
     ts = frame[TIMESTAMP].astype(jnp.float32)
     seg, _ = ops.segment_ids_sorted(case)
     n = int(seg.shape[0])
-    big = jnp.float32(-3.4e38)
-    tmax = jnp.full((n,), big).at[seg].max(ts)
+    tmax = segment_reduce(ts, seg, n, "max", impl=_backend.resolve(backend))
     return tmax[seg] - ts

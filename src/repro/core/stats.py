@@ -1,29 +1,44 @@
 """Case/event statistics on EventFrames (segment reductions, all O(N)).
 
 Each statistic is a mergeable chunk-kernel (``core.engine``): the public
-whole-log jitted functions are the single-chunk special case, and the same
-update streams over EDF row groups for logs larger than device memory.
-Cases split across chunk boundaries are stitched by the carry (global
-segment id + last-row halo), so any chunking of a (case,time)-sorted log
-matches the whole-log result.
+whole-log functions are the single-chunk special case, and the same update
+streams over EDF row groups for logs larger than device memory.  Cases
+split across chunk boundaries are stitched by the carry (global segment id
++ last-row halo), so any chunking of a (case,time)-sorted log matches the
+whole-log result.
+
+Inner loops are the named primitives of ``repro.kernels.segment_ops``
+(backend-dispatched, see ``core.backend``): per-case reductions are
+``segment_reduce`` over the sorted global segment ids, per-activity
+aggregations are ``histogram``.  Integer counting takes whichever lowering
+the backend picks (bitwise identical); the float sojourn *totals* are
+order-sensitive and stay on the row-order XLA scatter (see
+``segment_ops.ops``), keeping streaming == whole-log bitwise.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 
-from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
-from . import engine, ops
+from repro.kernels.segment_ops import histogram, segment_reduce
+
+from .eventframe import ACTIVITY, TIMESTAMP, EventFrame
+from . import backend as _backend
+from . import engine
 
 _FBIG = jnp.float32(3.4028235e38)   # finfo(float32).max, as a literal
 
 
 # ------------------------------------------------------------ chunk kernels
-@lru_cache(maxsize=None)
-def case_sizes_kernel(num_cases: int) -> engine.ChunkKernel:
+def case_sizes_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkKernel:
     """Valid-event count per case, indexed by global segment id."""
+    return _case_sizes_kernel(num_cases, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _case_sizes_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
 
     def init():
         return (jnp.zeros((num_cases,), jnp.int32),
@@ -33,16 +48,21 @@ def case_sizes_kernel(num_cases: int) -> engine.ChunkKernel:
     def update(state, carry, chunk):
         adj = engine.adjacent(chunk, carry)
         seg = engine.global_segments(adj, carry)
-        state = state.at[seg].add(adj.rv.astype(jnp.int32), mode="drop")
+        state = state + segment_reduce(adj.rv.astype(jnp.int32), seg,
+                                       num_cases, "sum", impl=impl)
         return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
 
-    return engine.ChunkKernel(f"case_sizes[{num_cases}]", init, update,
+    return engine.ChunkKernel(f"case_sizes[{num_cases},{impl}]", init, update,
                               engine.tree_sum, lambda s, c: s)
 
 
-@lru_cache(maxsize=None)
-def case_durations_kernel(num_cases: int) -> engine.ChunkKernel:
+def case_durations_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkKernel:
     """max(ts) - min(ts) per case; state = (tmin, tmax) accumulators."""
+    return _case_durations_kernel(num_cases, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _case_durations_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
 
     def init():
         state = (jnp.full((num_cases,), _FBIG),
@@ -54,8 +74,12 @@ def case_durations_kernel(num_cases: int) -> engine.ChunkKernel:
         tmin, tmax = state
         adj = engine.adjacent(chunk, carry, need_ts=True)
         seg = engine.global_segments(adj, carry)
-        tmin = tmin.at[seg].min(jnp.where(adj.rv, adj.ts, _FBIG), mode="drop")
-        tmax = tmax.at[seg].max(jnp.where(adj.rv, adj.ts, -_FBIG), mode="drop")
+        tmin = jnp.minimum(tmin, segment_reduce(
+            jnp.where(adj.rv, adj.ts, jnp.inf), seg, num_cases, "min",
+            impl=impl))
+        tmax = jnp.maximum(tmax, segment_reduce(
+            jnp.where(adj.rv, adj.ts, -jnp.inf), seg, num_cases, "max",
+            impl=impl))
         return (tmin, tmax), engine.next_row_carry(carry, chunk, seg=seg[-1])
 
     def merge(a, b):
@@ -66,13 +90,17 @@ def case_durations_kernel(num_cases: int) -> engine.ChunkKernel:
         tmin, tmax = state
         return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
 
-    return engine.ChunkKernel(f"case_durations[{num_cases}]", init, update,
-                              merge, finalize)
+    return engine.ChunkKernel(f"case_durations[{num_cases},{impl}]", init,
+                              update, merge, finalize)
+
+
+def activity_counts_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
+    """Per-activity histogram — stateless per chunk, carry only pro forma."""
+    return _activity_counts_kernel(num_activities, _backend.resolve(backend))
 
 
 @lru_cache(maxsize=None)
-def activity_counts_kernel(num_activities: int) -> engine.ChunkKernel:
-    """Per-activity histogram — stateless per chunk, carry only pro forma."""
+def _activity_counts_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
 
     def init():
@@ -80,22 +108,26 @@ def activity_counts_kernel(num_activities: int) -> engine.ChunkKernel:
 
     @jax.jit
     def update(state, carry, chunk):
-        act = jnp.where(chunk.rows_valid(), chunk[ACTIVITY], a)
-        state = state + ops.value_counts(act, a + 1)[:-1]
+        state = state + histogram(chunk[ACTIVITY], a,
+                                  weights=chunk.rows_valid(), impl=impl)
         return state, engine.next_row_carry(carry, chunk)
 
-    return engine.ChunkKernel(f"activity_counts[{a}]", init, update,
+    return engine.ChunkKernel(f"activity_counts[{a},{impl}]", init, update,
                               engine.tree_sum, lambda s, c: s)
 
 
-@lru_cache(maxsize=None)
-def sojourn_times_kernel(num_activities: int) -> engine.ChunkKernel:
+def sojourn_times_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
     """Mean inter-event time by *source* activity; boundary pairs stitched
     by the carry's (case, act, ts) halo."""
+    return _sojourn_times_kernel(num_activities, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _sojourn_times_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
 
     def init():
-        state = (jnp.zeros((a + 1,), jnp.float32), jnp.zeros((a + 1,), jnp.int32))
+        state = (jnp.zeros((a,), jnp.float32), jnp.zeros((a,), jnp.int32))
         return state, engine.init_row_carry()
 
     @jax.jit
@@ -103,38 +135,42 @@ def sojourn_times_kernel(num_activities: int) -> engine.ChunkKernel:
         tot, cnt = state
         adj = engine.adjacent(chunk, carry, need_ts=True)
         dt = jnp.where(adj.pair, adj.ts - adj.prev_ts, 0.0)
-        src = jnp.where(adj.pair, adj.prev_act, a)
-        tot = tot.at[src].add(dt)
-        cnt = cnt.at[src].add(adj.pair.astype(jnp.int32))
+        # float accumulation is order-sensitive: the dispatch layer keeps it
+        # on the XLA scatter (no assume_exact), and into= scatters onto the
+        # running state in row order, keeping streaming == whole-log bitwise
+        tot = histogram(adj.prev_act, a, weights=dt, into=tot, impl=None)
+        cnt = cnt + histogram(adj.prev_act, a, weights=adj.pair, impl=impl)
         return (tot, cnt), engine.next_row_carry(carry, chunk)
 
     @jax.jit
     def finalize(state, carry):
         tot, cnt = state
-        return (tot / jnp.maximum(cnt, 1))[:-1]
+        return tot / jnp.maximum(cnt, 1)
 
-    return engine.ChunkKernel(f"sojourn_times[{a}]", init, update,
+    return engine.ChunkKernel(f"sojourn_times[{a},{impl}]", init, update,
                               engine.tree_sum, finalize)
 
 
 # ------------------------------------------------- whole-log entry points
-@partial(jax.jit, static_argnames=("num_cases",))
-def case_sizes(frame: EventFrame, num_cases: int) -> jax.Array:
-    return engine.run_single(case_sizes_kernel(num_cases), frame)
+def case_sizes(frame: EventFrame, num_cases: int,
+               backend: str | None = None) -> jax.Array:
+    return engine.run_single(case_sizes_kernel(num_cases, backend), frame)
 
 
-@partial(jax.jit, static_argnames=("num_cases",))
-def case_durations(frame: EventFrame, num_cases: int) -> jax.Array:
+def case_durations(frame: EventFrame, num_cases: int,
+                   backend: str | None = None) -> jax.Array:
     """max(ts) - min(ts) per case (sorted frame)."""
-    return engine.run_single(case_durations_kernel(num_cases), frame)
+    return engine.run_single(case_durations_kernel(num_cases, backend), frame)
 
 
-@partial(jax.jit, static_argnames=("num_activities",))
-def activity_counts(frame: EventFrame, num_activities: int) -> jax.Array:
-    return engine.run_single(activity_counts_kernel(num_activities), frame)
+def activity_counts(frame: EventFrame, num_activities: int,
+                    backend: str | None = None) -> jax.Array:
+    return engine.run_single(activity_counts_kernel(num_activities, backend),
+                             frame)
 
 
-@partial(jax.jit, static_argnames=("num_activities",))
-def sojourn_times(frame: EventFrame, num_activities: int) -> jax.Array:
+def sojourn_times(frame: EventFrame, num_activities: int,
+                  backend: str | None = None) -> jax.Array:
     """Mean inter-event time by *source* activity (bottleneck analysis)."""
-    return engine.run_single(sojourn_times_kernel(num_activities), frame)
+    return engine.run_single(sojourn_times_kernel(num_activities, backend),
+                             frame)

@@ -3,46 +3,51 @@
 The paper lists "statistics for cases/variants" among the dataframe-specific
 techniques taken into PM4Py. A variant is the sequence of activities of a
 case; we fingerprint it with *two* independent 32-bit polynomial rolling
-hashes computed by one segmented scan — O(N), no per-case Python loop, and
-x64-free (JAX default config). Collision probability ~ n_cases^2 / 2^64.
+hashes — O(N), no per-case Python loop, and x64-free (JAX default config).
+Collision probability ~ n_cases^2 / 2^64.
 
-The rolling hash is a left fold, so it streams: :func:`variants_kernel`
-carries the open case's hash state across chunk boundaries (``core.engine``)
-and scatters a case's fingerprint the moment its last event is seen — the
-whole-log ``variant_fingerprints`` is the single-chunk special case.
+Both inner loops are ``repro.kernels.segment_ops`` primitives: the rolling
+hash is ``segmented_scan(op="polyhash")`` (an affine-composition scan —
+uint32 arithmetic is exact mod 2^32, so the Pallas doubling scan and the
+XLA sequential fold are bitwise identical), and scattering each case's
+fingerprint at its last event is ``segment_reduce(op="max")`` over the
+global segment ids.  The scan is a left fold, so it streams:
+:func:`variants_kernel` carries the open case's hash state across chunk
+boundaries (``core.engine``) — the whole-log ``variant_fingerprints`` is
+the single-chunk special case.
 """
 from __future__ import annotations
 
-from functools import lru_cache
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_ops import segment_reduce, segmented_scan
+
 from .eventframe import ACTIVITY, CASE, EventFrame
+from . import backend as _backend
 from . import engine, ops
 
-_BASE1 = jnp.uint32(1_000_003)
-_BASE2 = jnp.uint32(16_777_619)  # FNV prime
+_BASE1 = 1_000_003
+_BASE2 = 16_777_619  # FNV prime
 
 
-def _hash_scan(act: jax.Array, starts: jax.Array, h0):
-    """Segmented rolling hash ``h <- h * BASE + (act + 1)`` (mod 2^32),
-    restarting where ``starts`` is set; ``h0`` seeds the first segment."""
+def _hash_scan(act: jax.Array, starts: jax.Array, h0, impl: str | None):
+    """Segmented rolling hash pair ``h <- h * BASE + (act + 1)`` (mod 2^32),
+    restarting where ``starts`` is set; ``h0 = (h1, h2)`` seeds the first
+    segment.  Returns ``((e1, e2), (hs1, hs2))`` — final carries + per-row
+    inclusive hashes, matching the pre-primitive ``lax.scan`` bitwise."""
     a = act.astype(jnp.uint32) + 1
-
-    def step(h, xs):
-        ai, is_start = xs
-        h1, h2 = h
-        h1 = jnp.where(is_start, jnp.uint32(0), h1) * _BASE1 + ai
-        h2 = jnp.where(is_start, jnp.uint32(0), h2) * _BASE2 + ai
-        return (h1, h2), (h1, h2)
-
-    return jax.lax.scan(step, h0, (a, starts))
+    hs1, e1 = segmented_scan(a, starts, h0[0], "polyhash", base=_BASE1,
+                             impl=impl)
+    hs2, e2 = segmented_scan(a, starts, h0[1], "polyhash", base=_BASE2,
+                             impl=impl)
+    return (e1, e2), (hs1, hs2)
 
 
 # ------------------------------------------------------------ chunk kernel
-@lru_cache(maxsize=None)
-def variants_kernel(num_cases: int) -> engine.ChunkKernel:
+def variants_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkKernel:
     """Per-case variant fingerprints as a mergeable chunk-kernel.
 
     State: ``(fp1, fp2)`` uint32 arrays indexed by global segment id.
@@ -52,6 +57,11 @@ def variants_kernel(num_cases: int) -> engine.ChunkKernel:
     case of the stream.  Hashing ignores row validity, matching the
     whole-log ``variant_fingerprints``.
     """
+    return _variants_kernel(num_cases, _backend.resolve(backend))
+
+
+@lru_cache(maxsize=None)
+def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
 
     def init():
         state = (jnp.zeros((num_cases,), jnp.uint32),
@@ -66,8 +76,9 @@ def variants_kernel(num_cases: int) -> engine.ChunkKernel:
         adj = engine.adjacent(chunk, carry)
         seg = engine.global_segments(adj, carry)
         (e1, e2), (hs1, hs2) = _hash_scan(adj.act, adj.new_seg,
-                                          (carry["h1"], carry["h2"]))
-        # the carry case ended iff this chunk opens a new segment at row 0
+                                          (carry["h1"], carry["h2"]), impl)
+        # the carry case ended iff this chunk opens a new segment at row 0;
+        # O(1) halo scatter, not an inner loop
         closed = adj.new_seg[0] & carry["exists"]
         fp1 = fp1.at[carry["seg"]].max(jnp.where(closed, carry["h1"], 0),
                                        mode="drop")
@@ -75,8 +86,10 @@ def variants_kernel(num_cases: int) -> engine.ChunkKernel:
                                        mode="drop")
         # in-chunk case ends: rows whose successor starts a new segment
         ends = jnp.concatenate([adj.new_seg[1:], jnp.zeros((1,), bool)])
-        fp1 = fp1.at[seg].max(jnp.where(ends, hs1, 0), mode="drop")
-        fp2 = fp2.at[seg].max(jnp.where(ends, hs2, 0), mode="drop")
+        fp1 = jnp.maximum(fp1, segment_reduce(
+            jnp.where(ends, hs1, 0), seg, num_cases, "max", impl=impl))
+        fp2 = jnp.maximum(fp2, segment_reduce(
+            jnp.where(ends, hs2, 0), seg, num_cases, "max", impl=impl))
         carry = engine.next_row_carry(carry, chunk, seg=seg[-1], h1=e1, h2=e2)
         return (fp1, fp2), carry
 
@@ -94,13 +107,12 @@ def variants_kernel(num_cases: int) -> engine.ChunkKernel:
                                        mode="drop")
         return fp1, fp2, jnp.maximum(carry["seg"] + 1, 0)
 
-    return engine.ChunkKernel(f"variants[{num_cases}]", init, update,
+    return engine.ChunkKernel(f"variants[{num_cases},{impl}]", init, update,
                               merge, finalize)
 
 
 # ------------------------------------------------- whole-log entry points
-@jax.jit
-def variant_fingerprints(frame: EventFrame) -> tuple[jax.Array, jax.Array, jax.Array]:
+def variant_fingerprints(frame: EventFrame, backend: str | None = None):
     """Per-case (fp1, fp2) fingerprints + segment ids.
 
     Frame must be sorted by (case, time). Returns arrays of length nrows;
@@ -108,14 +120,19 @@ def variant_fingerprints(frame: EventFrame) -> tuple[jax.Array, jax.Array, jax.A
     (scattered by segment id) — the single-chunk form of
     :func:`variants_kernel` with nrows as the case capacity.
     """
+    return _variant_fingerprints(frame, _backend.resolve(backend))
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _variant_fingerprints(frame: EventFrame, impl: str):
     seg, starts = ops.segment_ids_sorted(frame[CASE])
     (_, _), (hs1, hs2) = _hash_scan(frame[ACTIVITY], starts,
-                                    (jnp.uint32(0), jnp.uint32(0)))
+                                    (jnp.uint32(0), jnp.uint32(0)), impl)
     case = frame[CASE]
     is_end = jnp.concatenate([case[1:] != case[:-1], jnp.ones((1,), bool)])
     n = hs1.shape[0]
-    fp1 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs1, 0))
-    fp2 = jnp.zeros((n,), jnp.uint32).at[seg].max(jnp.where(is_end, hs2, 0))
+    fp1 = segment_reduce(jnp.where(is_end, hs1, 0), seg, n, "max", impl=impl)
+    fp2 = segment_reduce(jnp.where(is_end, hs2, 0), seg, n, "max", impl=impl)
     return fp1, fp2, seg
 
 

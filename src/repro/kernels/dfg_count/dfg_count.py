@@ -1,21 +1,12 @@
-"""Pallas TPU kernel: DFG pair counting as one-hot matmuls on the MXU.
+"""DFG pair counting — the square special case of the generalized
+``kernels.segment_ops.pair_count`` MXU kernel.
 
-TPU adaptation of the paper's shifting-and-counting (§5.4): after the shift/
-same-case mask, counting (src, dst) activity pairs is
-
-    C = sum_i w_i * e[src_i] e[dst_i]^T  =  (onehot(src) * w)^T @ onehot(dst)
-
-i.e. a matrix product — the systolic MXU *is* the counter. No hash map, no
-scatter: the paper's worst-case O(N^2) collision pathology disappears by
-construction.
-
-Tiling: the event stream is cut into ``block_e`` tiles (grid axis k, the
-reduction axis — innermost, so the output block accumulates in VMEM across
-iterations); the (A, A) count matrix is cut into ``block_a x block_a`` output
-tiles (grid axes i, j). VMEM per step: 2 * block_e * block_a * 4B for the
-one-hot operands + block_a^2 * 4B for the accumulator — with the defaults
-(block_e=512, block_a=128) that is ~0.6 MiB, comfortably inside VMEM, and
-both matmul dims are multiples of the 128-lane MXU tile.
+Historically this module held its own Pallas kernel; the tiling and the
+one-hot-matmul formulation now live in ``segment_ops.pair_count`` (which
+generalizes them to any rectangular (src, dst, weight) triple), and this
+entry point is kept as the stable, paper-named API: counting (src, dst)
+activity pairs into a dense (A, A) int32 matrix with the systolic MXU as
+the counter.
 """
 from __future__ import annotations
 
@@ -23,26 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-
-def _kernel(src_ref, dst_ref, w_ref, out_ref, *, block_a: int):
-    i = pl.program_id(0)          # src-activity tile
-    j = pl.program_id(1)          # dst-activity tile
-    k = pl.program_id(2)          # event tile (reduction — innermost)
-
-    @pl.when(k == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    s = src_ref[...].reshape(-1, 1)            # (block_e, 1)
-    d = dst_ref[...].reshape(-1, 1)
-    w = w_ref[...].reshape(-1, 1)
-    be = s.shape[0]
-    rows = jax.lax.broadcasted_iota(jnp.int32, (be, block_a), 1)
-    x = jnp.where(s == rows + i * block_a, w, 0.0)               # (be, A_i)
-    y = jnp.where(d == rows + j * block_a, 1.0, 0.0)             # (be, A_j)
-    out_ref[...] += jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+from repro.kernels.segment_ops.pair_count import pair_count_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("num_activities", "block_e", "block_a", "interpret"))
@@ -60,24 +33,8 @@ def dfg_count_pallas(
 
     ``w`` is the same-case mask (float); padding events must carry w == 0.
     """
-    e = src.shape[0]
-    pad_e = (-e) % block_e
-    a_pad = max(block_a, ((num_activities + block_a - 1) // block_a) * block_a)
-    src = jnp.pad(src.astype(jnp.int32), (0, pad_e), constant_values=-1)
-    dst = jnp.pad(dst.astype(jnp.int32), (0, pad_e), constant_values=-1)
-    w = jnp.pad(w.astype(jnp.float32), (0, pad_e))
-    ne, na = (e + pad_e) // block_e, a_pad // block_a
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, block_a=block_a),
-        grid=(na, na, ne),
-        in_specs=[
-            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
-            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
-            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
-        ],
-        out_specs=pl.BlockSpec((block_a, block_a), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((a_pad, a_pad), jnp.float32),
-        interpret=interpret,
-    )(src, dst, w)
-    return out[:num_activities, :num_activities].astype(jnp.int32)
+    out = pair_count_pallas(src, dst, w.astype(jnp.float32),
+                            num_activities, num_activities,
+                            block_e=block_e, block_s=block_a,
+                            block_d=block_a, interpret=interpret)
+    return out.astype(jnp.int32)

@@ -1,0 +1,86 @@
+"""Pallas kernel: weighted (src, dst) pair counting on the MXU.
+
+The generalization of the DFG-count kernel to any rectangular
+(src, dst, weight) triple — directly-follows edges, performance-overlay
+pairs, or any §5.4-style co-occurrence count:
+
+    C = sum_i w_i * e[src_i] e[dst_i]^T  =  (onehot(src) * w)^T @ onehot(dst)
+
+The systolic MXU *is* the counter — no hash map, no scatter; the paper's
+worst-case collision pathology disappears by construction.
+
+Tiling follows ``kernels.dfg_count`` (which is now a thin square-case
+wrapper over this kernel): the event stream is cut into ``block_e`` tiles
+(grid axis k, the reduction axis — innermost, so each output block
+accumulates in VMEM across iterations); the (S, D) count matrix is cut
+into ``block_s x block_d`` output tiles (grid axes i, j).  Accumulation is
+float32 on the MXU — exact for integer-valued weights while per-cell sums
+stay < 2^24; the dispatch layer routes inexact-float weights to the XLA
+scatter unless told otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_ref, dst_ref, w_ref, out_ref, *, block_s, block_d):
+    i = pl.program_id(0)          # src tile
+    j = pl.program_id(1)          # dst tile
+    k = pl.program_id(2)          # event tile (reduction — innermost)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = src_ref[...].reshape(-1, 1)            # (block_e, 1)
+    d = dst_ref[...].reshape(-1, 1)
+    w = w_ref[...].reshape(-1, 1)
+    be = s.shape[0]
+    rows_s = jax.lax.broadcasted_iota(jnp.int32, (be, block_s), 1)
+    rows_d = jax.lax.broadcasted_iota(jnp.int32, (be, block_d), 1)
+    x = jnp.where(s == rows_s + i * block_s, w, 0.0)             # (be, S_i)
+    y = jnp.where(d == rows_d + j * block_d, 1.0, 0.0)           # (be, D_j)
+    out_ref[...] += jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+
+
+def _round_up(x: int, m: int) -> int:
+    return max(m, ((x + m - 1) // m) * m)
+
+
+@functools.partial(jax.jit, static_argnames=("num_src", "num_dst", "block_e",
+                                             "block_s", "block_d", "interpret"))
+def pair_count_pallas(src: jax.Array, dst: jax.Array, w: jax.Array,
+                      num_src: int, num_dst: int, *,
+                      block_e: int = 512, block_s: int = 128,
+                      block_d: int = 128, interpret: bool = True) -> jax.Array:
+    """(num_src, num_dst) float32 weighted pair counts (OOB dropped).
+
+    Padding events carry w == 0; the caller masks invalid pairs the same way.
+    """
+    e = src.shape[0]
+    if e == 0:
+        return jnp.zeros((num_src, num_dst), jnp.float32)
+    pad_e = (-e) % block_e
+    s_pad, d_pad = _round_up(num_src, block_s), _round_up(num_dst, block_d)
+    srcp = jnp.pad(src.astype(jnp.int32), (0, pad_e), constant_values=-1)
+    dstp = jnp.pad(dst.astype(jnp.int32), (0, pad_e), constant_values=-1)
+    wp = jnp.pad(w.astype(jnp.float32), (0, pad_e))
+    ne = (e + pad_e) // block_e
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, block_d=block_d),
+        grid=(s_pad // block_s, d_pad // block_d, ne),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
+            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
+            pl.BlockSpec((block_e,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, d_pad), jnp.float32),
+        interpret=interpret,
+    )(srcp, dstp, wp)
+    return out[:num_src, :num_dst]

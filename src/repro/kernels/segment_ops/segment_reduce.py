@@ -1,0 +1,104 @@
+"""Pallas kernel: sum/min/max over *sorted, consecutive* segment ids.
+
+The event stream arrives sorted by (case, time), so segment ids are a
+non-decreasing run ``0,0,1,2,2,2,...`` — a tile of ``block_e`` events can
+touch at most ``block_e`` *consecutive* segments.  Each grid step therefore
+reduces its tile into a local one-hot window (VPU masked reduction) and
+read-modify-writes one dynamic ``block_e``-wide slice of the output, which
+stays resident in VMEM across the sequential grid:
+
+    out[seg] = op(out[seg], reduce_op over tile rows with that seg)
+
+Work is O(N * block_e) independent of the number of segments (a dense
+one-hot over all segments would be O(N * S)).  Out-of-range ids (< 0 or
+>= num_segments) are dropped, matching ``.at[...].op(mode="drop")``.
+
+Contract: ids must be consecutive within their sorted run (as produced by
+``ops.segment_ids_sorted`` / ``engine.global_segments``); ids with gaps
+wider than ``block_e`` inside one tile would fall outside the window.
+Validated in interpret mode on CPU; the TPU lowering runs the same body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _ident_scalar(op: str, dtype):
+    """Python-scalar reduction identity (kernels cannot capture arrays)."""
+    d = np.dtype(dtype)
+    if op == "sum":
+        return d.type(0).item()
+    if np.issubdtype(d, np.floating):
+        return float("inf") if op == "min" else float("-inf")
+    info = np.iinfo(d)
+    return info.max if op == "min" else info.min
+
+
+def _kernel(seg_ref, val_ref, out_ref, *, op, num_segments, ident):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    seg = seg_ref[...]                                   # (W,) int32
+    val = val_ref[...]                                   # (W,)
+    w = seg.shape[0]
+    s_pad = out_ref.shape[0]
+    base = jnp.clip(seg[0], 0, s_pad - w)
+    local = seg - base
+    ok = (seg >= 0) & (seg < num_segments) & (local >= 0) & (local < w)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (w, w), 1)
+    oh = (local.reshape(-1, 1) == slots) & ok.reshape(-1, 1)   # (W, W)
+    cells = jnp.where(oh, val.reshape(-1, 1), ident)
+    if op == "sum":
+        contrib = cells.sum(axis=0)
+    elif op == "min":
+        contrib = cells.min(axis=0)
+    else:
+        contrib = cells.max(axis=0)
+    cur = out_ref[pl.ds(base, w)]
+    if op == "sum":
+        new = cur + contrib
+    elif op == "min":
+        new = jnp.minimum(cur, contrib)
+    else:
+        new = jnp.maximum(cur, contrib)
+    out_ref[pl.ds(base, w)] = new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "op", "block_e", "interpret"))
+def segment_reduce_pallas(values: jax.Array, segment_ids: jax.Array,
+                          num_segments: int, op: str = "sum", *,
+                          block_e: int = 512, interpret: bool = True) -> jax.Array:
+    """(num_segments,) reduction of ``values`` by sorted ``segment_ids``."""
+    n = values.shape[0]
+    ident = _ident_scalar(op, values.dtype)
+    if n == 0:
+        return jnp.full((num_segments,), ident, values.dtype)
+    pad_e = (-n) % block_e
+    seg = jnp.pad(segment_ids.astype(jnp.int32), (0, pad_e), constant_values=-1)
+    val = jnp.pad(values, (0, pad_e), constant_values=ident)
+    # output window must fit: S_pad >= block_e, lane-aligned
+    s_pad = max(block_e, ((num_segments + 127) // 128) * 128)
+    ne = (n + pad_e) // block_e
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op, num_segments=num_segments,
+                          ident=ident),
+        grid=(ne,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda k: (k,)),
+            pl.BlockSpec((block_e,), lambda k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((s_pad,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((s_pad,), values.dtype),
+        interpret=interpret,
+    )(seg, val)
+    return out[:num_segments]

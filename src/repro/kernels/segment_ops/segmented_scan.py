@@ -1,0 +1,164 @@
+"""Pallas kernel: case-local (segmented) scans over the sorted stream.
+
+Two scan monoids cover every case-local cumulative op in the core:
+
+* ``sum``      — segmented inclusive prefix sum over vector rows; the
+  eventually-follows prefix vectors of §5.4-style LTL counting.
+* ``polyhash`` — the rolling variant hash ``h <- h * base + v`` (mod 2^32).
+  An affine map ``h -> h*m + b``; affine composition is associative, so the
+  sequential fold becomes a parallel scan with *bitwise* identical output
+  (uint32 arithmetic is exact mod 2^32).
+
+Each tile runs a Hillis–Steele doubling scan on the VPU (log2(block) vector
+steps) with the standard segmented-scan flag treatment: a row whose
+accumulated flag is set ignores its predecessor.  The open segment's
+running state crosses tiles through a carry block that lives in VMEM for
+the whole sequential grid — the same one-row-halo idea as the streaming
+engine, one level down.  Tail padding contributes the monoid identity, so
+the carry emerging from the last tile is the true stream state.
+
+Validated in interpret mode on CPU; the TPU lowering runs the same body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _positions(w: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(jnp.int32, (w, 1), 0).reshape(w)
+
+
+def _polyhash_kernel(v_ref, f_ref, ok_ref, c0_ref, ys_ref, carry_ref, *, base):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = c0_ref[...]
+
+    v = v_ref[...]                       # (W,) addends
+    ok = ok_ref[...]                     # (W,) bool — False on tail padding
+    w = v.shape[0]
+    # each row is the affine map h -> h*m + b; padding is the identity map
+    m = jnp.where(ok, jnp.full((w,), base, v.dtype), jnp.ones((w,), v.dtype))
+    b = jnp.where(ok, v, jnp.zeros((w,), v.dtype))
+    ff = f_ref[...] & ok
+    idx = _positions(w)
+    d = 1
+    while d < w:                         # static unroll: log2(W) VPU steps
+        pm = jnp.concatenate([jnp.ones((d,), m.dtype), m[:-d]])
+        pb = jnp.concatenate([jnp.zeros((d,), b.dtype), b[:-d]])
+        pf = jnp.concatenate([jnp.zeros((d,), jnp.bool_), ff[:-d]])
+        take = (idx >= d) & ~ff
+        b = jnp.where(take, pb * m + b, b)   # compose prev∘cur (uses old m)
+        m = jnp.where(take, pm * m, m)
+        ff = ff | (pf & (idx >= d))
+        d *= 2
+    h_in = carry_ref[0]
+    ys = jnp.where(ff, b, h_in * m + b)
+    ys_ref[...] = ys
+    carry_ref[0] = ys[-1]
+
+
+def _segsum_kernel(v_ref, f_ref, c0_ref, ys_ref, carry_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = c0_ref[...]
+
+    x = v_ref[...]                       # (W, K) — tail padding rows are 0
+    ff = f_ref[...]                      # (W,) bool
+    w, kdim = x.shape
+    idx = _positions(w)
+    d = 1
+    while d < w:
+        px = jnp.concatenate([jnp.zeros((d, kdim), x.dtype), x[:-d]], axis=0)
+        pf = jnp.concatenate([jnp.zeros((d,), jnp.bool_), ff[:-d]])
+        take = (idx >= d) & ~ff
+        x = jnp.where(take.reshape(-1, 1), px + x, x)
+        ff = ff | (pf & (idx >= d))
+        d *= 2
+    h_in = carry_ref[...]                # (K,)
+    ys = jnp.where(ff.reshape(-1, 1), x, h_in.reshape(1, -1) + x)
+    ys_ref[...] = ys
+    carry_ref[...] = ys[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("base", "block_e", "interpret"))
+def segmented_polyhash_pallas(values: jax.Array, seg_starts: jax.Array,
+                              carry: jax.Array, base: int, *,
+                              block_e: int = 512, interpret: bool = True):
+    """Inclusive segmented rolling hash; returns ``(ys, carry_out)``."""
+    n = values.shape[0]
+    if n == 0:
+        return values, carry
+    pad = (-n) % block_e
+    v = jnp.pad(values, (0, pad))
+    f = jnp.pad(seg_starts.astype(bool), (0, pad))
+    ok = jnp.pad(jnp.ones((n,), bool), (0, pad))
+    ys, cout = pl.pallas_call(
+        functools.partial(_polyhash_kernel, base=base),
+        grid=((n + pad) // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), values.dtype),
+            jax.ShapeDtypeStruct((1,), values.dtype),
+        ],
+        interpret=interpret,
+    )(v, f, ok, jnp.reshape(carry, (1,)))
+    return ys[:n], cout[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def segmented_sum_scan_pallas(values: jax.Array, seg_starts: jax.Array,
+                              carry: jax.Array, *,
+                              block_e: int = 512, interpret: bool = True):
+    """Inclusive segmented prefix sum over rows; returns ``(ys, carry_out)``.
+
+    ``values`` is (N, K) with carry (K,), or (N,) with a scalar carry.
+    Exact (hence bitwise impl-independent) for integer-valued inputs.
+    """
+    squeeze = values.ndim == 1
+    vals = values.reshape(values.shape[0], -1)
+    c0 = jnp.reshape(carry, (vals.shape[1],))
+    n, kdim = vals.shape
+    if n == 0:
+        return values, carry
+    pad = (-n) % block_e
+    v = jnp.pad(vals, ((0, pad), (0, 0)))
+    f = jnp.pad(seg_starts.astype(bool), (0, pad))
+    ys, cout = pl.pallas_call(
+        _segsum_kernel,
+        grid=((n + pad) // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, kdim), lambda t: (t, 0)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((kdim,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, kdim), lambda t: (t, 0)),
+            pl.BlockSpec((kdim,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad, kdim), vals.dtype),
+            jax.ShapeDtypeStruct((kdim,), vals.dtype),
+        ],
+        interpret=interpret,
+    )(v, f, c0)
+    ys = ys[:n]
+    if squeeze:
+        return ys.reshape(-1), cout[0]
+    return ys, cout.reshape(jnp.shape(carry))

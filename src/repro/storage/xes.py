@@ -7,7 +7,7 @@ exactly the Table 1/2 comparison of the paper.
 from __future__ import annotations
 
 import xml.etree.ElementTree as ET
-from xml.sax.saxutils import escape
+from xml.sax.saxutils import quoteattr
 
 from repro.core.classic_log import ClassicEventLog
 from repro.core.eventframe import ACTIVITY, CASE, TIMESTAMP
@@ -20,14 +20,16 @@ def write(path: str, log: ClassicEventLog) -> None:
     with open(path, "w") as f:
         f.write('<?xml version="1.0" encoding="UTF-8" ?>\n<log xes.version="1.0">\n')
         for cid, evs in by_case.items():
-            f.write(f'  <trace>\n    <string key="concept:name" value="{escape(str(cid))}"/>\n')
+            # quoteattr (not escape): escape() leaves " untouched, which
+            # breaks value="..." for values containing quotes
+            f.write(f'  <trace>\n    <string key="concept:name" value={quoteattr(str(cid))}/>\n')
             for e in evs:
                 f.write("    <event>\n")
                 for k, v in e.items():
                     if k == CASE:
                         continue
                     tag = "int" if isinstance(v, int) else "float" if isinstance(v, float) else "string"
-                    f.write(f'      <{tag} key="{escape(k)}" value="{escape(str(v))}"/>\n')
+                    f.write(f'      <{tag} key={quoteattr(k)} value={quoteattr(str(v))}/>\n')
                 f.write("    </event>\n")
             f.write("  </trace>\n")
         f.write("</log>\n")

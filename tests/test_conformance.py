@@ -1,0 +1,85 @@
+"""DFG-footprint conformance: deviations, discovery thresholds, edge cases."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ACTIVITY, conformance
+from repro.core.dfg import DFG, dfg_segment
+
+from helpers import random_log, sorted_frame
+
+
+def _dfg_from_counts(counts):
+    c = jnp.asarray(np.asarray(counts, np.int32))
+    a = c.shape[0]
+    return DFG(c, jnp.zeros((a,), jnp.int32), jnp.zeros((a,), jnp.int32))
+
+
+def test_footprint_deviations_contents():
+    counts = [[0, 5, 0], [2, 0, 3], [0, 0, 7]]
+    allowed = jnp.asarray([[False, True, False],
+                           [False, False, True],
+                           [False, False, False]])
+    dev = np.asarray(conformance.footprint_deviations(
+        _dfg_from_counts(counts), allowed))
+    # disallowed cells keep their observed counts, allowed cells are zeroed
+    np.testing.assert_array_equal(dev, [[0, 0, 0], [2, 0, 0], [0, 0, 7]])
+    # fitness is the allowed fraction: (5 + 3) / 17
+    fit = float(conformance.footprint_fitness(_dfg_from_counts(counts), allowed))
+    np.testing.assert_allclose(fit, 8 / 17, rtol=1e-6)
+
+
+def test_footprint_fitness_bounds():
+    counts = [[1, 2], [3, 4]]
+    all_ok = jnp.ones((2, 2), bool)
+    none_ok = jnp.zeros((2, 2), bool)
+    assert float(conformance.footprint_fitness(_dfg_from_counts(counts), all_ok)) == 1.0
+    assert float(conformance.footprint_fitness(_dfg_from_counts(counts), none_ok)) == 0.0
+
+
+def test_discover_model_noise_thresholds():
+    # row 0: max outgoing 10; row 1: max outgoing 4
+    counts = [[10, 1, 0], [0, 4, 2], [0, 0, 0]]
+    d = _dfg_from_counts(counts)
+    m0 = np.asarray(conformance.discover_model(d, noise_threshold=0.0))
+    np.testing.assert_array_equal(m0, np.asarray(counts) > 0)
+    m05 = np.asarray(conformance.discover_model(d, noise_threshold=0.5))
+    # keeps edges with count > 0.5 * row max: 10 (>5), 4 (>2), drops 1, 2
+    np.testing.assert_array_equal(
+        m05, [[True, False, False], [False, True, False], [False, False, False]])
+    # threshold 1.0 drops everything (count > row_max is impossible)
+    m1 = np.asarray(conformance.discover_model(d, noise_threshold=1.0))
+    assert not m1.any()
+
+
+def test_discover_model_zero_count_rows():
+    """All-zero rows use the max(row_max, 1) guard: no NaN, no edges kept."""
+    d = _dfg_from_counts(np.zeros((4, 4), np.int32))
+    m = np.asarray(conformance.discover_model(d, noise_threshold=0.2))
+    assert m.shape == (4, 4) and not m.any()
+
+
+def test_footprint_zero_count_log():
+    """Empty observation: fitness is 0 (max(tot,1) guard), deviations empty."""
+    d = _dfg_from_counts(np.zeros((3, 3), np.int32))
+    allowed = jnp.ones((3, 3), bool)
+    fit = float(conformance.footprint_fitness(d, allowed))
+    assert fit == 0.0 and not np.isnan(fit)
+    dev = np.asarray(conformance.footprint_deviations(d, jnp.zeros((3, 3), bool)))
+    assert not dev.any()
+
+
+def test_discovered_model_is_self_conformant():
+    """A model discovered from a log at threshold 0 allows every observed
+    pair of that log — fitness 1.0 by construction."""
+    rng = np.random.default_rng(5)
+    log = random_log(rng, n_cases=20, n_acts=5, max_len=8)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    d = dfg_segment(frame, a)
+    model = conformance.discover_model(d, noise_threshold=0.0)
+    assert float(conformance.footprint_fitness(d, model)) == 1.0
+    assert not np.asarray(conformance.footprint_deviations(d, model)).any()
+    # and aggressive cleaning strictly reduces allowed mass on noisy logs
+    tight = conformance.discover_model(d, noise_threshold=0.9)
+    assert (float(conformance.footprint_fitness(d, tight))
+            <= float(conformance.footprint_fitness(d, model)))

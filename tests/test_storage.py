@@ -85,3 +85,32 @@ def test_xes_roundtrip(tmp_path):
     got = [(e[CASE], e[ACTIVITY]) for e in back.events]
     want = [(str(e[CASE]), e[ACTIVITY]) for e in log.events]
     assert got == want
+
+
+def test_xes_attribute_quoting_roundtrip(tmp_path):
+    """Values containing quotes/brackets/ampersands survive write -> read.
+
+    escape() alone left double quotes unescaped inside value="...",
+    producing malformed XML; the writer uses quoteattr now.
+    """
+    from repro.core import ClassicEventLog
+
+    nasty = [
+        'He said "hi"',
+        "mixed 'single' and \"double\" quotes",
+        "<tag> & entity",
+        'trailing backslash \\ and "quote',
+    ]
+    events = [
+        {CASE: 'case "zero"', ACTIVITY: act, TIMESTAMP: float(i),
+         "note": nasty[(i + 1) % len(nasty)]}
+        for i, act in enumerate(nasty)
+    ]
+    log = ClassicEventLog(events)
+    p = str(tmp_path / "quotes.xes")
+    xes.write(p, log)           # must be well-formed XML
+    back = xes.read(p)          # ET.parse raises on malformed files
+    assert [e[ACTIVITY] for e in back.events] == nasty
+    assert [e["note"] for e in back.events] == [nasty[(i + 1) % 4]
+                                                for i in range(4)]
+    assert all(e[CASE] == 'case "zero"' for e in back.events)
