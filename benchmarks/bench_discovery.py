@@ -1,0 +1,146 @@
+"""Discovery-workload benchmark: alpha + heuristics on the columnar state.
+
+Times the full discovery pipeline — accumulate DFG + L2-loop counts
+(whole-log jitted AND streamed over EDF row groups), finalize the alpha and
+heuristics models, replay conformance — and asserts the streamed state is
+bitwise-identical to the whole-log pass.  Writes the ``BENCH_discovery.json``
+trajectory artifact so future PRs diff against a stable baseline.
+
+Standalone:  python benchmarks/bench_discovery.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only discovery
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_discovery.py
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+
+def run(num_cases: int = 100_000, num_activities: int = 12, seed: int = 7,
+        out_json: str | None = "BENCH_discovery.json"):
+    import jax
+
+    from repro.core import ChunkedEventFrame, conformance, discovery
+    from repro.core.eventframe import ACTIVITY, CASE
+    from repro.data import synthetic
+    from repro.storage import edf
+
+    a = num_activities
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=a, seed=seed)
+    n = frame.nrows
+    emit("discovery/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n}")
+    results: dict = {}
+
+    # ---- whole-log accumulation (single-chunk special case)
+    t_state = timeit(lambda: jax.block_until_ready(
+        discovery.discovery_state(frame, a).dfg.counts))
+    emit("discovery/state_whole_log", t_state, f"events_per_s={n/t_state:.0f}")
+    results["state_whole_log"] = {"us_per_call": t_state * 1e6,
+                                  "events_per_s": n / t_state}
+    state = discovery.discovery_state(frame, a)
+
+    # ---- streamed accumulation over EDF row groups (out-of-core path)
+    d = tempfile.mkdtemp()
+    path = os.path.join(d, "disc.edf")
+    edf.write(path, frame, tables, codec="zlib1",
+              row_group_rows=max(1, n // 12))
+    src = ChunkedEventFrame.from_edf(path, columns=[CASE, ACTIVITY])
+    t0 = time.perf_counter()
+    streamed = discovery.streaming_discovery_state(src, a)
+    jax.block_until_ready(streamed.dfg.counts)
+    t_stream = time.perf_counter() - t0
+    emit("discovery/state_streamed", t_stream,
+         f"events_per_s={n/t_stream:.0f};groups={edf.num_row_groups(path)}")
+    results["state_streamed"] = {"us_per_call": t_stream * 1e6,
+                                 "events_per_s": n / t_stream}
+    for name, ref, got in (("counts", state.dfg.counts, streamed.dfg.counts),
+                           ("l2", state.l2_counts, streamed.l2_counts)):
+        assert (np.asarray(ref) == np.asarray(got)).all(), name
+    emit("discovery/bitwise_equal", 0.0, "streamed==whole_log")
+    os.unlink(path)
+
+    # ---- finalize: the miners themselves (model construction)
+    t_alpha = timeit(lambda: discovery.discover_alpha(state.dfg), repeat=3)
+    model = discovery.discover_alpha(state.dfg)
+    emit("discovery/alpha_finalize", t_alpha, f"places={model.num_places}")
+    results["alpha_finalize"] = {"us_per_call": t_alpha * 1e6,
+                                 "num_places": model.num_places}
+    t_heur = timeit(lambda: jax.block_until_ready(
+        discovery.discover_heuristics(state).dependency), repeat=3)
+    net = discovery.discover_heuristics(state)
+    n_edges = int(np.asarray(net.graph).sum())
+    emit("discovery/heuristics_finalize", t_heur, f"edges={n_edges}")
+    results["heuristics_finalize"] = {"us_per_call": t_heur * 1e6,
+                                      "num_edges": n_edges}
+
+    # ---- conformance replay against the discovered models
+    t_conf = timeit(lambda: jax.block_until_ready(
+        conformance.alpha_fitness(state.dfg, model)), repeat=3)
+    fit_a = float(conformance.alpha_fitness(state.dfg, model))
+    fit_h = float(conformance.heuristics_fitness(state.dfg, net))
+    conf_fp = float(conformance.footprint_conformance(state.dfg, model))
+    emit("discovery/replay", t_conf,
+         f"alpha_fitness={fit_a:.3f};heuristics_fitness={fit_h:.3f}"
+         f";footprint_conformance={conf_fp:.3f}")
+    results["replay"] = {"us_per_call": t_conf * 1e6,
+                         "alpha_fitness": fit_a, "heuristics_fitness": fit_h,
+                         "footprint_conformance": conf_fp}
+    assert fit_a == 1.0 and conf_fp == 1.0  # self-replay is exact
+
+    if out_json:
+        artifact = {
+            "bench": "discovery",
+            "num_cases": num_cases,
+            "n_events": n,
+            "num_activities": a,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "results": results,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"discovery/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (~10^5 events)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale run (10^6+ events)")
+    ap.add_argument("--cases", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_discovery.json")
+    args = ap.parse_args(argv)
+    if args.cases:
+        cases = args.cases
+    elif args.full:
+        cases = 1_000_000
+    elif args.smoke:
+        cases = 20_000
+    else:
+        cases = 100_000
+    header()
+    run(num_cases=cases, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

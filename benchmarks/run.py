@@ -8,9 +8,10 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_complexity, bench_distributed_dfg, bench_kernels,
-               bench_segment_ops, bench_streaming, bench_table1_loading,
-               bench_table2_sizes, bench_table5_ops, bench_table6_biglogs)
+from . import (bench_complexity, bench_discovery, bench_distributed_dfg,
+               bench_kernels, bench_segment_ops, bench_streaming,
+               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
+               bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -29,6 +30,11 @@ SUITES = {
     # BENCH_segment_ops.json trajectory artifact (perf baseline for PRs)
     "segment_ops": lambda full: bench_segment_ops.run(
         full=full, out_json="BENCH_segment_ops.json"),
+    # alpha + heuristics miners on the columnar state; always writes the
+    # BENCH_discovery.json trajectory artifact (smoke-sized unless --full)
+    "discovery": lambda full: bench_discovery.run(
+        num_cases=200_000 if full else 20_000,
+        out_json="BENCH_discovery.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

@@ -5,13 +5,17 @@ from .backend import get_backend, set_backend, use_backend
 from .dfg import DFG, dfg, dfg_kernel, dfg_matmul, dfg_segment, dfg_shift_count
 from .engine import ChunkKernel, compose, run_streaming
 from .chunked import ChunkedEventFrame
-from . import backend, conformance, engine, filtering, ops, stats, variants
+from .discovery import (AlphaModel, DiscoveryState, Footprint, HeuristicsNet,
+                        discover_alpha, discover_heuristics)
+from . import (backend, conformance, discovery, engine, filtering, ops, stats,
+               variants)
 
 __all__ = [
     "ACTIVITY", "CASE", "TIMESTAMP", "EventFrame", "ClassicEventLog",
     "make_classic_log", "DFG", "dfg", "dfg_kernel", "dfg_matmul",
     "dfg_segment", "dfg_shift_count", "ChunkKernel", "ChunkedEventFrame",
-    "compose", "run_streaming", "backend", "get_backend", "set_backend",
-    "use_backend", "conformance", "engine", "filtering", "ops", "stats",
-    "variants",
+    "AlphaModel", "DiscoveryState", "Footprint", "HeuristicsNet",
+    "discover_alpha", "discover_heuristics", "compose", "run_streaming",
+    "backend", "get_backend", "set_backend", "use_backend", "conformance",
+    "discovery", "engine", "filtering", "ops", "stats", "variants",
 ]

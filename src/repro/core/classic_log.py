@@ -55,6 +55,22 @@ class ClassicEventLog:
             last_by_case[c] = a
         return counts
 
+    def dfg_l2_iterative(self) -> dict[tuple, int]:
+        """Count ``a, b, a`` triples per case (heuristics-miner L2-loop
+        counts), one pass with per-case last-two maps — the row-oriented
+        oracle for ``discovery.DiscoveryState.l2_counts``."""
+        counts: dict[tuple, int] = {}
+        prev1: dict[Any, Any] = {}
+        prev2: dict[Any, Any] = {}
+        for e in self.events:
+            c, a = e[CASE], e[ACTIVITY]
+            if c in prev2 and prev2[c] == a:
+                key = (prev2[c], prev1[c])
+                counts[key] = counts.get(key, 0) + 1
+            prev2[c] = prev1.get(c)
+            prev1[c] = a
+        return counts
+
     def start_end_activities(self) -> tuple[dict, dict]:
         starts: dict[Any, int] = {}
         ends: dict[Any, int] = {}
@@ -125,6 +141,96 @@ class ClassicEventLog:
                 e[k] = val
             events.append(e)
         return ClassicEventLog(events)
+
+
+# ---------------------------------------------------- discovery oracle
+# Row-oriented reference implementations of the columnar miners in
+# ``core.discovery`` — deliberately set/dict based and brute-force, so the
+# two code paths share nothing but the definitions they implement.
+def footprint_reference(log: ClassicEventLog):
+    """Alpha relations as sets of activity-label pairs.
+
+    Returns ``(alphabet, direct, causal, parallel)``; choice is the
+    complement.  ``alphabet`` is sorted for deterministic iteration.
+    """
+    direct = set(log.dfg_iterative())
+    causal = {(a, b) for (a, b) in direct if (b, a) not in direct}
+    parallel = {(a, b) for (a, b) in direct if (b, a) in direct}
+    alphabet = sorted({e[ACTIVITY] for e in log.events})
+    return alphabet, direct, causal, parallel
+
+
+def alpha_reference(log: ClassicEventLog):
+    """Brute-force alpha miner: enumerate *all* subset pairs (exponential,
+    test-sized alphabets only) and keep the maximal valid ones.
+
+    Returns ``(places, starts, ends)`` with places as a set of
+    ``(frozenset, frozenset)`` of activity labels.
+    """
+    from itertools import chain, combinations
+
+    alphabet, direct, causal, _ = footprint_reference(log)
+
+    def choice(a, b):
+        return (a, b) not in direct and (b, a) not in direct
+
+    def powerset(xs):
+        return chain.from_iterable(combinations(xs, r)
+                                   for r in range(1, len(xs) + 1))
+
+    # only choice-cliques (incl. a#a: no self-loop) can appear on a side
+    cliques = [frozenset(s) for s in powerset(alphabet)
+               if all(choice(x, y) for x in s for y in s)]
+    valid = {(aa, bb) for aa in cliques for bb in cliques
+             if all((a, b) in causal for a in aa for b in bb)}
+    places = {p for p in valid
+              if not any(q != p and p[0] <= q[0] and p[1] <= q[1]
+                         for q in valid)}
+    starts_c, ends_c = log.start_end_activities()
+    return places, frozenset(starts_c), frozenset(ends_c)
+
+
+def heuristics_reference(log: ClassicEventLog, *,
+                         dependency_threshold: float = 0.5,
+                         l2_threshold: float = 0.5,
+                         min_count: int = 1):
+    """Dict-based heuristics measures + thresholded dependency graph.
+
+    Returns ``(dep, l2, edges)``: ``dep[(a, b)]`` is the dependency measure
+    (diagonal entries are the L1-loop measure), ``l2[(a, b)]`` the L2-loop
+    measure, ``edges`` the set of kept label pairs (L1 loops as ``(a, a)``).
+    """
+    c = log.dfg_iterative()
+    c2 = log.dfg_l2_iterative()
+    alphabet = sorted({e[ACTIVITY] for e in log.events})
+    dep: dict[tuple, float] = {}
+    l2: dict[tuple, float] = {}
+    for a in alphabet:
+        for b in alphabet:
+            ab, ba = c.get((a, b), 0), c.get((b, a), 0)
+            if a == b:
+                dep[(a, b)] = ab / (ab + 1.0)
+                l2[(a, b)] = 0.0
+            else:
+                dep[(a, b)] = (ab - ba) / (ab + ba + 1.0)
+                t = c2.get((a, b), 0) + c2.get((b, a), 0)
+                l2[(a, b)] = t / (t + 1.0)
+    loops1 = {a for a in alphabet
+              if dep[(a, a)] >= dependency_threshold
+              and c.get((a, a), 0) >= min_count}
+    edges = {(a, b) for a in alphabet for b in alphabet if a != b
+             and dep[(a, b)] >= dependency_threshold
+             and c.get((a, b), 0) >= min_count}
+    edges |= {(a, a) for a in loops1}
+    for a in alphabet:
+        for b in alphabet:
+            if a == b or a in loops1 or b in loops1:
+                continue
+            t = c2.get((a, b), 0) + c2.get((b, a), 0)
+            if l2[(a, b)] >= l2_threshold and t >= min_count:
+                edges.add((a, b))
+                edges.add((b, a))
+    return dep, l2, edges
 
 
 def make_classic_log(cases: Iterable[tuple[Any, list[tuple[Any, float]]]],

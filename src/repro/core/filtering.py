@@ -26,10 +26,20 @@ from .stats import case_sizes_kernel
 
 
 def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
-    """Keep (or drop) events whose ``name`` is in ``values`` (event-level)."""
+    """Keep (or drop) events whose ``name`` is in ``values`` (event-level).
+
+    Membership is a sorted binary search — O(N log V) time, O(N + V)
+    memory.  (The obvious ``col[:, None] == vals[None, :]`` broadcast
+    materializes an (N, V) boolean: an O(N*V) blowup that OOMs when
+    filtering a big log on a high-cardinality value set.)
+    """
     col = frame[name]
-    vals = jnp.asarray(values)
-    m = (col[:, None] == vals[None, :]).any(axis=-1)
+    vals = jnp.sort(jnp.asarray(values).ravel())
+    if vals.size == 0:
+        m = jnp.zeros(col.shape, bool)
+    else:
+        slot = jnp.clip(jnp.searchsorted(vals, col), 0, vals.size - 1)
+        m = vals[slot] == col
     return ops.proj(frame, m if keep else ~m)
 
 

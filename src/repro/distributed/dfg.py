@@ -29,35 +29,64 @@ from repro.core.dfg import DFG, dfg_kernel
 from repro.core.eventframe import ACTIVITY, CASE, EventFrame
 
 
-def _local_state(case, act, valid, *, num_activities, axis_name, n_dev):
-    kernel = dfg_kernel(num_activities)
-    state, carry = kernel.init()
-
-    # carry = the previous shard's last row, via one ppermute; shard 0 keeps
-    # the kernel's init carry (exists=False masks everything).
+def shard_halo_carry(carry: dict, case, act, valid, *, axis_name, n_dev,
+                     depth: int = 1) -> dict:
+    """Recover the previous shard's last ``depth`` rows as this shard's
+    carry, one ppermute per column; shard 0 keeps the kernel's init carry
+    (its exists flags are False and mask everything).  ``depth=2`` also
+    fills the two-back halo keys of ``discovery_kernel`` carries."""
     perm = [(i, i + 1) for i in range(n_dev - 1)]
-    prev_case = jax.lax.ppermute(case[-1:], axis_name, perm)[0]
-    prev_act = jax.lax.ppermute(act[-1:], axis_name, perm)[0]
-    prev_valid = jax.lax.ppermute(valid[-1:], axis_name, perm)[0]
-    idx = jax.lax.axis_index(axis_name)
+    tail_case = jax.lax.ppermute(case[-depth:], axis_name, perm)
+    tail_act = jax.lax.ppermute(act[-depth:], axis_name, perm)
+    tail_valid = jax.lax.ppermute(valid[-depth:], axis_name, perm)
+    exists = jax.lax.axis_index(axis_name) > 0
     carry = dict(carry,
-                 case=prev_case.astype(jnp.int32),
-                 act=prev_act.astype(jnp.int32),
-                 rv=prev_valid,
-                 exists=idx > 0)
+                 case=tail_case[-1].astype(jnp.int32),
+                 act=tail_act[-1].astype(jnp.int32),
+                 rv=tail_valid[-1],
+                 exists=exists)
+    if depth >= 2:
+        carry.update(case2=tail_case[-2].astype(jnp.int32),
+                     act2=tail_act[-2].astype(jnp.int32),
+                     rv2=tail_valid[-2],
+                     exists2=exists)
+    return carry
 
+
+def fix_trailing_end(state: DFG, carry: dict, last_end) -> DFG:
+    """Resolve the stream's final end activity on the shard that owns it
+    (every other shard's trailing end is resolved by its successor)."""
+    return DFG(state.counts, state.starts,
+               state.ends.at[carry["act"]].add(last_end, mode="drop"))
+
+
+def run_sharded_kernel(kernel, fix_end, case, act, valid, *, axis_name,
+                       n_dev, halo_depth: int = 1):
+    """Shard-local driver shared by the DFG and discovery lowerings:
+    init, ppermute halo carry, one kernel update, last-shard end fix,
+    psum merge.  Every shard must hold >= ``halo_depth`` rows — shard
+    sizes are static at trace time, so violating it (a tiny frame on a
+    wide mesh) raises here instead of silently clamping the halo index."""
+    if case.shape[0] < halo_depth:
+        raise ValueError(
+            f"{kernel.name}: {case.shape[0]} row(s) per shard < halo depth "
+            f"{halo_depth}; use fewer shards or a larger frame")
+    state, carry = kernel.init()
+    carry = shard_halo_carry(carry, case, act, valid, axis_name=axis_name,
+                             n_dev=n_dev, depth=halo_depth)
     chunk = EventFrame({CASE: case, ACTIVITY: act}, {}, valid)
     state, carry = kernel.update(state, carry, chunk)
-
-    # every shard's trailing end is resolved by its successor's update; the
-    # global last row has no successor, so the last shard finalizes it.
-    is_last = idx == n_dev - 1
+    is_last = jax.lax.axis_index(axis_name) == n_dev - 1
     last_end = (is_last & carry["rv"]).astype(jnp.int32)
-    state = DFG(state.counts, state.starts,
-                state.ends.at[carry["act"]].add(last_end, mode="drop"))
-
+    state = fix_end(state, carry, last_end)
     # merge == psum of the mergeable state, leaf by leaf
     return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), state)
+
+
+def _local_state(case, act, valid, *, num_activities, axis_name, n_dev):
+    return run_sharded_kernel(dfg_kernel(num_activities), fix_trailing_end,
+                              case, act, valid, axis_name=axis_name,
+                              n_dev=n_dev)
 
 
 def dfg_sharded(frame: EventFrame, num_activities: int, mesh,

@@ -47,6 +47,10 @@ def _encode(buf: bytes, codec: str) -> bytes:
 
 
 def _decode(buf: bytes, codec: str) -> bytes:
+    if not buf:
+        # zero-byte extent (e.g. an empty trailing row group written by
+        # another producer) — nothing to decompress
+        return b""
     return buf if codec == "raw" else zlib.decompress(buf)
 
 
@@ -110,9 +114,12 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
     data = {k: np.ascontiguousarray(v) for k, v in frame.to_numpy().items()}
     valid = {k: np.asarray(v) for k, v in frame.valid.items()}
     nrows = frame.nrows
-    step = nrows if row_group_rows is None else int(row_group_rows)
-    if step <= 0:
+    if row_group_rows is not None and int(row_group_rows) <= 0:
         raise ValueError("row_group_rows must be positive")
+    # a zero-row frame still writes one (empty) row group, so the schema,
+    # dictionary tables, and validity flags round-trip through read/
+    # read_streaming exactly like any other frame
+    step = max(nrows, 1) if row_group_rows is None else int(row_group_rows)
     bounds = list(range(0, nrows, step)) or [0]
 
     schema = []

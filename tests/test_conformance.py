@@ -59,13 +59,74 @@ def test_discover_model_zero_count_rows():
 
 
 def test_footprint_zero_count_log():
-    """Empty observation: fitness is 0 (max(tot,1) guard), deviations empty."""
+    """Empty observation is vacuously conformant: an empty (or fully
+    filtered) log deviates from nothing, so fitness is 1.0 — not the 0.0
+    the old ``max(tot, 1)`` guard produced — regardless of the model."""
     d = _dfg_from_counts(np.zeros((3, 3), np.int32))
-    allowed = jnp.ones((3, 3), bool)
-    fit = float(conformance.footprint_fitness(d, allowed))
-    assert fit == 0.0 and not np.isnan(fit)
+    for allowed in (jnp.ones((3, 3), bool), jnp.zeros((3, 3), bool)):
+        fit = float(conformance.footprint_fitness(d, allowed))
+        assert fit == 1.0 and not np.isnan(fit)
     dev = np.asarray(conformance.footprint_deviations(d, jnp.zeros((3, 3), bool)))
     assert not dev.any()
+
+
+def test_fully_filtered_log_is_vacuously_conformant():
+    """The end-to-end shape of the bug: filter away every event, mine the
+    empty rest, replay — the score must be 1.0, not total deviation."""
+    from repro.core import filtering
+
+    rng = np.random.default_rng(8)
+    log = random_log(rng, n_cases=10, n_acts=4, max_len=6)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    model = conformance.discover_model(dfg_segment(frame, a))
+    empty = filtering.filter_attr_values(frame, ACTIVITY, [], keep=True)
+    assert int(empty.rows_valid().sum()) == 0
+    fit = float(conformance.footprint_fitness(dfg_segment(empty, a), model))
+    assert fit == 1.0
+
+
+def test_alpha_replay_detects_deviation():
+    """A log with an extra unseen transition scores < 1 against the model
+    discovered from the clean log; the clean log scores exactly 1."""
+    from repro.core import discovery
+
+    from test_discovery import _log_from_traces
+
+    clean = _log_from_traces([list("abcd")] * 4 + [list("acbd")] * 4)
+    frame, tables = sorted_frame(clean)
+    acts = tables[ACTIVITY]
+    a = len(acts)
+    model = discovery.alpha(frame, a)
+    d = dfg_segment(frame, a)
+    assert float(conformance.alpha_fitness(d, model)) == 1.0
+    assert float(conformance.footprint_conformance(d, model)) == 1.0
+    assert not np.asarray(conformance.footprint_disagreements(d, model)).any()
+    # deviant log: d -> a jumps backwards (never observed in the clean log)
+    deviant = _log_from_traces([list("abcd")] * 4 + [list("abcdad")] * 2)
+    dframe, dtables = sorted_frame(deviant)
+    assert dtables[ACTIVITY] == acts  # same alphabet/encoding
+    dd = dfg_segment(dframe, a)
+    assert float(conformance.alpha_fitness(dd, model)) < 1.0
+    assert float(conformance.footprint_conformance(dd, model)) < 1.0
+    assert np.asarray(conformance.footprint_disagreements(dd, model)).any()
+
+
+def test_heuristics_replay_fitness_bounds():
+    from repro.core import discovery
+
+    rng = np.random.default_rng(21)
+    log = random_log(rng, n_cases=25, n_acts=5, max_len=8)
+    frame, tables = sorted_frame(log)
+    a = len(tables[ACTIVITY])
+    state = discovery.discovery_state(frame, a)
+    # threshold -1 keeps every observed edge -> perfect replay of own log
+    permissive = discovery.discover_heuristics(state, dependency_threshold=-1.0)
+    assert float(conformance.heuristics_fitness(state.dfg, permissive)) == 1.0
+    # default thresholds keep a subset -> fitness in (0, 1]
+    net = discovery.discover_heuristics(state)
+    fit = float(conformance.heuristics_fitness(state.dfg, net))
+    assert 0.0 <= fit <= 1.0
 
 
 def test_discovered_model_is_self_conformant():

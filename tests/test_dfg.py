@@ -77,6 +77,29 @@ def test_counts_sum_invariant():
     assert int(d.counts.sum()) == len(log.events) - len(log.case_ids)
 
 
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n_vals=st.integers(0, 40))
+def test_filter_attr_values_isin_matches_broadcast(seed, n_vals):
+    """Regression: the sorted-search isin must produce the exact mask of the
+    old (N, V) broadcast — duplicates, absent values, empty sets, keep/drop."""
+    import jax.numpy as jnp
+    from repro.core import filtering
+
+    rng = np.random.default_rng(seed)
+    log = random_log(rng, n_cases=15, n_acts=6)
+    frame, tables = sorted_frame(log)
+    # values may repeat, may be out of range (absent), may be empty
+    values = rng.integers(-3, len(tables[ACTIVITY]) + 4, size=n_vals)
+    col = np.asarray(frame[ACTIVITY])
+    ref = np.isin(col, values)
+    for keep in (True, False):
+        got = filtering.filter_attr_values(frame, ACTIVITY, jnp.asarray(values),
+                                           keep=keep)
+        np.testing.assert_array_equal(np.asarray(got.rows_valid()),
+                                      ref if keep else ~ref,
+                                      err_msg=f"seed={seed} keep={keep}")
+
+
 def test_event_filter_then_dfg():
     """Filtering events and compacting reconnects directly-follows pairs."""
     rng = np.random.default_rng(11)

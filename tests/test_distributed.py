@@ -58,6 +58,36 @@ print("OK", int(ref.counts.sum()))
     assert out.startswith("OK")
 
 
+def test_sharded_discovery_matches_local_and_streaming():
+    """sharded discovery state (DFG + L2 triple counts) == streamed ==
+    single-shot, bitwise, and the finalized models agree."""
+    out = run_child(_PRE + """
+from repro.core import ChunkedEventFrame, discovery
+from repro.distributed.discovery import discovery_state_sharded_host
+ref = discovery.discovery_state(frame, 13)
+stream = discovery.streaming_discovery_state(
+    ChunkedEventFrame.from_frame(frame, 4096), 13)
+assert (np.asarray(stream.l2_counts) == np.asarray(ref.l2_counts)).all()
+assert (np.asarray(stream.dfg.counts) == np.asarray(ref.dfg.counts)).all()
+ref_alpha = discovery.discover_alpha(ref.dfg)
+ref_net = discovery.discover_heuristics(ref)
+for shards in (1, 2, 4, 8):
+    got = discovery_state_sharded_host(frame, 13, shards)
+    assert (np.asarray(got.l2_counts) == np.asarray(ref.l2_counts)).all(), shards
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(got.dfg, nm))
+                == np.asarray(getattr(ref.dfg, nm))).all(), (shards, nm)
+    m = discovery.discover_alpha(got.dfg)
+    assert m.places == ref_alpha.places
+    assert m.start_activities == ref_alpha.start_activities
+    net = discovery.discover_heuristics(got)
+    assert (np.asarray(net.dependency) == np.asarray(ref_net.dependency)).all()
+    assert (np.asarray(net.graph) == np.asarray(ref_net.graph)).all()
+print("OK", int(ref.l2_counts.sum()))
+""")
+    assert out.startswith("OK")
+
+
 def test_distributed_sort_by_case():
     out = run_child(_PRE + """
 from repro.distributed.sort import sort_by_case_sharded

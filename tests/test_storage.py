@@ -65,6 +65,74 @@ def test_edf_missing_values(tmp_path):
                                   np.asarray(f2.valid[TIMESTAMP]))
 
 
+def _empty_frame():
+    from repro.core import EventFrame
+
+    return EventFrame.from_numpy(
+        {CASE: np.zeros(0, np.int32), ACTIVITY: np.zeros(0, np.int32),
+         TIMESTAMP: np.zeros(0, np.float32)},
+        {ACTIVITY: np.zeros(0, bool)})
+
+
+@pytest.mark.parametrize("row_group_rows", [None, 4])
+def test_edf_zero_row_roundtrip(tmp_path, row_group_rows):
+    """A zero-row frame writes a single empty row group (bounds = [0]) and
+    must round-trip through read / read_streaming — schema, dictionary
+    tables, dtypes and validity flags intact.  (write used to raise
+    'row_group_rows must be positive' with the default group size.)"""
+    frame = _empty_frame()
+    tables = {ACTIVITY: ["a", "b"]}
+    p = str(tmp_path / "empty.edf")
+    header = edf.write(p, frame, tables, row_group_rows=row_group_rows)
+    assert [g["nrows"] for g in header["groups"]] == [0]
+    f2, t2 = edf.read(p)
+    assert f2.nrows == 0
+    assert set(f2.names) == set(frame.names)
+    for k in frame.names:
+        assert np.asarray(f2[k]).dtype == np.asarray(frame[k]).dtype, k
+    assert ACTIVITY in f2.valid and np.asarray(f2.valid[ACTIVITY]).shape == (0,)
+    assert t2[ACTIVITY] == tables[ACTIVITY]
+    chunks = list(edf.read_streaming(p))
+    assert len(chunks) == 1 and chunks[0][0].nrows == 0
+    # the streaming engine just skips the empty group
+    from repro.core import ChunkedEventFrame, run_streaming
+    from repro.core.dfg import dfg_kernel
+
+    d = run_streaming(dfg_kernel(2), ChunkedEventFrame.from_edf(p))
+    assert int(d.counts.sum()) == 0 and int(d.starts.sum()) == 0
+
+
+def test_edf_empty_trailing_group(tmp_path):
+    """A file whose last row group is empty (another producer's layout, or
+    zero-byte extents) reads without error and yields the full frame."""
+    import json
+    import struct
+
+    frame, tables = synthetic.generate(num_cases=20, num_activities=4, seed=1)
+    p = str(tmp_path / "trail.edf")
+    edf.write(p, frame, tables, row_group_rows=frame.nrows)
+    header, base = edf.read_header(p)
+    end = os.path.getsize(p) - base
+    header["groups"].append({
+        "nrows": 0,
+        "columns": {c["name"]: {"offset": end, "nbytes": 0, "raw_nbytes": 0}
+                    for c in header["columns"]}})
+    with open(p, "rb") as f:
+        body = f.read()[base:]
+    hjson = json.dumps(header).encode()
+    with open(p, "wb") as f:
+        f.write(edf.MAGIC_V2)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        f.write(body)
+    f2, _ = edf.read(p)
+    assert f2.nrows == frame.nrows
+    for k in frame.names:
+        np.testing.assert_array_equal(np.asarray(frame[k]), np.asarray(f2[k]))
+    sizes = [fr.nrows for fr, _ in edf.read_streaming(p)]
+    assert sizes == [frame.nrows, 0]
+
+
 def test_rowlog_roundtrip(tmp_path):
     rng = np.random.default_rng(1)
     log = random_log(rng, n_cases=8, n_acts=4, extra_attrs=1)
