@@ -1,0 +1,150 @@
+"""Query-pushdown benchmark: selectivity sweep of zone-map pruned scans.
+
+Writes a synthetic log as an EDFV0003 file, then mines the DFG through
+``repro.query.execute`` under case-band predicates of decreasing
+selectivity, comparing the pruned scan against the identical plan with
+pruning disabled (the full-scan baseline).  Reports row-groups skipped
+and on-disk bytes read for each point, asserts the two results are
+bitwise identical, and writes the ``BENCH_query.json`` trajectory
+artifact (the smoke run additionally asserts a positive skip ratio — the
+zone maps must actually refuse I/O).
+
+Standalone:  python benchmarks/bench_query.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only query
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_query.py
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+SELECTIVITIES = (0.01, 0.05, 0.25, 1.0)
+
+
+def run(num_cases: int = 50_000, num_activities: int = 16, seed: int = 11,
+        num_groups: int = 32, out_json: str | None = "BENCH_query.json"):
+    import jax
+
+    from repro.core import CASE, engine, ops
+    from repro.core.dfg import dfg_kernel
+    from repro.data import synthetic
+    from repro.query import col, execute, scan
+    from repro.storage import edf
+
+    a = num_activities
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases, num_activities=a,
+                                       seed=seed, extra_numeric_attrs=1)
+    n = frame.nrows
+    emit("query/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n}")
+
+    d = tempfile.mkdtemp()
+    path = os.path.join(d, "query.edf")
+    t0 = time.perf_counter()
+    edf.write(path, frame, tables, codec="zlib1",
+              row_group_rows=max(1, n // num_groups))
+    emit("query/write_v3", time.perf_counter() - t0,
+         f"groups={edf.num_row_groups(path)};"
+         f"bytes={os.path.getsize(path)}")
+
+    kernel = dfg_kernel(a)
+    sweep = []
+    for sel in SELECTIVITIES:
+        hi = max(0, int(num_cases * sel) - 1)
+        plan = scan(path).filter(col(CASE).between(0, hi))
+
+        pruned, rep = execute(plan, mine=kernel)
+        us_pruned = timeit(lambda: execute(plan, mine=kernel))
+        full, rep_full = execute(plan, mine=kernel, prune=False)
+        us_full = timeit(lambda: execute(plan, mine=kernel, prune=False))
+
+        for nm in ("counts", "starts", "ends"):
+            got = np.asarray(getattr(pruned, nm))
+            ref = np.asarray(getattr(full, nm))
+            assert (got == ref).all(), f"pruned != full scan at sel={sel}:{nm}"
+        point = {
+            "selectivity": sel,
+            "groups_total": rep.groups_total,
+            "groups_skipped": rep.groups_skipped,
+            "skip_ratio": rep.skip_ratio,
+            "bytes_read": rep.bytes_read,
+            "bytes_full": rep_full.bytes_read,
+            "bytes_saved_ratio": rep.bytes_saved_ratio,
+            "us_pruned": us_pruned * 1e6,
+            "us_full_scan": us_full * 1e6,
+            "df_pairs": int(np.asarray(pruned.counts).sum()),
+        }
+        sweep.append(point)
+        emit(f"query/pruned_scan_sel={sel}", us_pruned,
+             f"skipped={rep.groups_skipped}/{rep.groups_total};"
+             f"bytes={rep.bytes_read}/{rep_full.bytes_read}")
+        emit(f"query/full_scan_sel={sel}", us_full, f"bytes={rep_full.bytes_read}")
+
+    # eager baseline: load everything, filter in memory, mine
+    whole, _ = edf.read(path)
+
+    def eager():
+        c = whole[CASE]
+        hi = int(num_cases * SELECTIVITIES[0]) - 1
+        f = ops.proj(whole, (c >= 0) & (c <= hi))
+        return engine.run_single(kernel, f)
+
+    us_eager = timeit(eager)
+    emit("query/eager_filter_then_mine", us_eager,
+         f"sel={SELECTIVITIES[0]}")
+
+    best_skip = max(p["skip_ratio"] for p in sweep)
+    assert best_skip > 0.0, "zone maps skipped nothing on a selective scan"
+    assert min(p["bytes_read"] for p in sweep) < sweep[-1]["bytes_full"], \
+        "pruned scan never read fewer bytes than the full scan"
+
+    if out_json:
+        artifact = {
+            "bench": "query",
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "backend": jax.default_backend(),
+            "config": {"num_cases": num_cases, "num_activities": a,
+                       "events": n, "row_groups": edf.num_row_groups(path)},
+            "sweep": sweep,
+            "eager_us": us_eager * 1e6,
+            "max_skip_ratio": best_skip,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"query/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; asserts skip ratio > 0 and parity")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_query.json")
+    args = ap.parse_args()
+    header()
+    cases = 200_000 if args.full else (20_000 if args.smoke else 50_000)
+    sweep = run(num_cases=cases, out_json=args.out)
+    if args.smoke:
+        print(f"query/SMOKE_OK,0.0,max_skip_ratio="
+              f"{max(p['skip_ratio'] for p in sweep):.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

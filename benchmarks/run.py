@@ -9,9 +9,9 @@ import sys
 import traceback
 
 from . import (bench_complexity, bench_discovery, bench_distributed_dfg,
-               bench_kernels, bench_segment_ops, bench_streaming,
-               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
-               bench_table6_biglogs)
+               bench_kernels, bench_query, bench_segment_ops,
+               bench_streaming, bench_table1_loading, bench_table2_sizes,
+               bench_table5_ops, bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -35,6 +35,11 @@ SUITES = {
     "discovery": lambda full: bench_discovery.run(
         num_cases=200_000 if full else 20_000,
         out_json="BENCH_discovery.json"),
+    # zone-map pushdown selectivity sweep; always writes the
+    # BENCH_query.json trajectory artifact (skip-ratio baseline for PRs)
+    "query": lambda full: bench_query.run(
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_query.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

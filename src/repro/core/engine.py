@@ -54,6 +54,14 @@ class ChunkKernel:
     ``update`` is jit-compiled by the factory that builds the kernel; it
     retraces once per distinct chunk shape (a fixed-size chunk stream plus
     one tail shape compiles exactly twice).
+
+    ``mask_exact`` declares that rows with ``rows_valid() == False``
+    contribute *nothing* to the state (they may still move the carry's
+    case/segment bookkeeping).  This is what lets the query layer
+    (``repro.query``) replace a row group whose rows are all refuted by a
+    predicate with an O(segments) ghost chunk instead of reading it — the
+    variants kernel hashes invalid rows too (matching the whole-log
+    fingerprints) and therefore opts out.
     """
 
     name: str
@@ -61,6 +69,7 @@ class ChunkKernel:
     update: Callable[[State, Carry, Chunk], tuple[State, Carry]]
     merge: Callable[[State, State], State]
     finalize: Callable[[State, Carry], Any]
+    mask_exact: bool = True
 
 
 # --------------------------------------------------------------- carries
@@ -192,7 +201,8 @@ def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
         return {k: kernels[k].finalize(state[k], carry[k]) for k in names}
 
     return ChunkKernel("compose(" + ",".join(names) + ")",
-                       init, update, merge, finalize)
+                       init, update, merge, finalize,
+                       mask_exact=all(k.mask_exact for k in kernels.values()))
 
 
 def tree_sum(a, b):

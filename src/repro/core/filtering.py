@@ -25,27 +25,44 @@ from . import engine, ops
 from .stats import case_sizes_kernel
 
 
-def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
-    """Keep (or drop) events whose ``name`` is in ``values`` (event-level).
-
-    Membership is a sorted binary search — O(N log V) time, O(N + V)
+def isin_mask(col: jax.Array, values) -> jax.Array:
+    """Membership mask by sorted binary search — O(N log V) time, O(N + V)
     memory.  (The obvious ``col[:, None] == vals[None, :]`` broadcast
     materializes an (N, V) boolean: an O(N*V) blowup that OOMs when
     filtering a big log on a high-cardinality value set.)
+
+    The single implementation behind ``filter_attr_values`` *and* the
+    query layer's ``isin`` predicate — one algorithm, one bitwise parity.
     """
-    col = frame[name]
     vals = jnp.sort(jnp.asarray(values).ravel())
     if vals.size == 0:
-        m = jnp.zeros(col.shape, bool)
-    else:
-        slot = jnp.clip(jnp.searchsorted(vals, col), 0, vals.size - 1)
-        m = vals[slot] == col
+        return jnp.zeros(col.shape, bool)
+    slot = jnp.clip(jnp.searchsorted(vals, col), 0, vals.size - 1)
+    return vals[slot] == col
+
+
+def time_range_mask(frame: EventFrame, name: str, lo, hi) -> jax.Array:
+    """``lo <= frame[name] <= hi`` on valid cells (shared by
+    ``filter_time_range`` and the query layer's ``between`` predicate)."""
+    col = frame[name]
+    return (col >= lo) & (col <= hi) & frame.cell_valid(name)
+
+
+def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
+    """Keep (or drop) events whose ``name`` is in ``values`` (event-level)."""
+    m = isin_mask(frame[name], values)
     return ops.proj(frame, m if keep else ~m)
 
 
 def filter_time_range(frame: EventFrame, name: str, lo, hi) -> EventFrame:
-    col = frame[name]
-    return ops.proj(frame, (col >= lo) & (col <= hi))
+    """Keep events with ``lo <= frame[name] <= hi`` (event-level).
+
+    A cell whose epsilon (validity) flag is off never matches: the stored
+    sentinel value of a missing timestamp happening to fall inside
+    ``[lo, hi]`` must not resurrect the row, so the range mask is ANDed
+    with ``cell_valid`` (column epsilon mask + row projection mask).
+    """
+    return ops.proj(frame, time_range_mask(frame, name, lo, hi))
 
 
 @partial(jax.jit, static_argnames=("num_cases",))
@@ -54,16 +71,23 @@ def _case_mask_to_event_mask(case_seg: jax.Array, case_keep: jax.Array, num_case
 
 
 # --------------------------------------------------- case-level, phase one
-def cases_containing_kernel(activity: int, num_cases: int,
+def cases_with_value_kernel(column: str, value: int, num_cases: int,
                             backend: str | None = None) -> engine.ChunkKernel:
-    """Per-case predicate "case contains ``activity``" as a chunk-kernel;
-    state is the (num_cases,) keep mask, merged by logical or."""
-    return _cases_containing_kernel(int(activity), int(num_cases),
+    """Per-case predicate "case has an event with ``column == value``" as a
+    chunk-kernel; state is the (num_cases,) keep mask, merged by logical
+    or.  ``cases_containing_kernel`` is the activity-column special case."""
+    return _cases_with_value_kernel(str(column), int(value), int(num_cases),
                                     _backend.resolve(backend))
 
 
+def cases_containing_kernel(activity: int, num_cases: int,
+                            backend: str | None = None) -> engine.ChunkKernel:
+    """Per-case predicate "case contains ``activity``" as a chunk-kernel."""
+    return cases_with_value_kernel(ACTIVITY, activity, num_cases, backend)
+
+
 @lru_cache(maxsize=None)
-def _cases_containing_kernel(activity: int, num_cases: int,
+def _cases_with_value_kernel(column: str, value: int, num_cases: int,
                              impl: str) -> engine.ChunkKernel:
 
     def init():
@@ -74,13 +98,13 @@ def _cases_containing_kernel(activity: int, num_cases: int,
     def update(state, carry, chunk):
         adj = engine.adjacent(chunk, carry)
         seg = engine.global_segments(adj, carry)
-        hit = (adj.act == activity) & adj.rv
+        hit = (chunk[column] == value) & adj.rv
         # or-reduce per case == segment max over the boolean hit column
         state = state | segment_reduce(hit, seg, num_cases, "max", impl=impl)
         return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
 
-    return engine.ChunkKernel(f"cases_containing[{activity},{impl}]", init,
-                              update, jnp.logical_or, lambda s, c: s)
+    return engine.ChunkKernel(f"cases_with_value[{column}={value},{impl}]",
+                              init, update, jnp.logical_or, lambda s, c: s)
 
 
 def streaming_cases_containing(chunks, activity: int, num_cases: int) -> jax.Array:

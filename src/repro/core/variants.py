@@ -107,8 +107,10 @@ def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
                                        mode="drop")
         return fp1, fp2, jnp.maximum(carry["seg"] + 1, 0)
 
+    # hashing ignores row validity (whole-log parity), so a fully-masked
+    # chunk still changes fingerprints: the query layer must read it
     return engine.ChunkKernel(f"variants[{num_cases},{impl}]", init, update,
-                              merge, finalize)
+                              merge, finalize, mask_exact=False)
 
 
 # ------------------------------------------------- whole-log entry points

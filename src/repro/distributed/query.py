@@ -1,0 +1,133 @@
+"""Distributed pruned scans: surviving row groups sharded over devices.
+
+The query layer's pruned stream (``repro.query.exec.pruned_source``)
+collapses zone-map-refuted row groups to O(segments) ghost rows; this
+module concatenates that stream, splits it into equal contiguous shards
+over the data axis, and reuses the ``distributed.dfg`` drivers verbatim —
+one kernel update per shard, the boundary row recovered with a
+``ppermute`` halo, the mergeable state combined with one ``psum``.  Ghost
+rows ride along as ordinary all-masked rows, so the halo a shard hands to
+its successor is exactly the carry the streaming path would have built,
+and sharded == streamed == filter-then-mine, bitwise.
+
+The one boundary the shards cannot resolve is the *stream's* final end
+activity: the last physical row is padding (all-masked), so the trailing
+end is re-applied host-side from the true tail row after the psum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.dfg import DFG, dfg_kernel
+from repro.core.discovery import DiscoveryState, discovery_kernel
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.query.exec import pruned_source
+from repro.query.plan import Plan
+
+from .dfg import fix_trailing_end, run_sharded_kernel
+from .discovery import _fix_end as fix_discovery_end
+
+
+def _gather(plan: Plan, prune: bool):
+    """Concatenate the pruned stream's (case, activity, rows_valid)."""
+    src, report = pruned_source(plan.project((ACTIVITY, CASE)), prune=prune,
+                                mask_exact=True)
+    case_parts, act_parts, rv_parts = [], [], []
+    for chunk in src:
+        if chunk.nrows == 0:
+            continue
+        case_parts.append(np.asarray(chunk[CASE]))
+        act_parts.append(np.asarray(chunk[ACTIVITY]))
+        rv_parts.append(np.asarray(chunk.rows_valid(), bool))
+    if not case_parts:
+        z = np.zeros(0, np.int64)
+        return z, z.astype(np.int32), np.zeros(0, bool), report
+    return (np.concatenate(case_parts), np.concatenate(act_parts),
+            np.concatenate(rv_parts), report)
+
+
+def _pad_to_shards(case, act, rv, n_dev: int):
+    """Pad with >= 1 all-masked copies of the last row so every shard is
+    equally sized and the trailing end is *never* resolved on-device."""
+    n = case.shape[0]
+    if n == 0:
+        case = np.zeros(1, np.int64)
+        act = np.zeros(1, np.int32)
+        rv = np.zeros(1, bool)
+        n = 1
+    pad = (-(n + 1)) % n_dev + 1
+    case = np.concatenate([case, np.full(pad, case[-1], case.dtype)])
+    act = np.concatenate([act, np.full(pad, act[-1], act.dtype)])
+    rv = np.concatenate([rv, np.zeros(pad, bool)])
+    return case, act, rv
+
+
+def _run(kernel_factory, fix_end, plan, num_activities, mesh, axis_name,
+         prune, method):
+    case, act, rv, report = _gather(plan, prune)
+    tail = (int(case[-1]), int(act[-1]), bool(rv[-1])) if case.size else None
+    n_dev = mesh.shape[axis_name]
+    case, act, rv = _pad_to_shards(case, act, rv, n_dev)
+    kernel = kernel_factory(num_activities, method)
+
+    def local(case, act, valid):
+        return run_sharded_kernel(
+            kernel, fix_end, case, act, valid, axis_name=axis_name,
+            n_dev=n_dev, halo_depth=2 if "case2" in kernel.init()[1] else 1)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+                   out_specs=P())
+    state = jax.jit(fn)(jnp.asarray(case), jnp.asarray(act), jnp.asarray(rv))
+    return state, tail, report
+
+
+def _apply_tail_end(dfg: DFG, tail) -> DFG:
+    if tail is None or not tail[2]:
+        return dfg
+    return DFG(dfg.counts, dfg.starts,
+               dfg.ends.at[tail[1]].add(jnp.int32(1), mode="drop"))
+
+
+def query_sharded_dfg(plan: Plan, num_activities: int, mesh,
+                      axis_name: str = "data", *, prune: bool = True,
+                      method: str = "auto"):
+    """Full DFG of a filtered log, mined from the pruned scan sharded over
+    ``axis_name``.  Returns ``(DFG, ScanReport)``; counts/starts/ends are
+    bitwise equal to ``dfg(filter(read(path)))``."""
+    state, tail, report = _run(dfg_kernel, fix_trailing_end, plan,
+                               num_activities, mesh, axis_name, prune, method)
+    return _apply_tail_end(state, tail), report
+
+
+def query_sharded_discovery(plan: Plan, num_activities: int, mesh,
+                            axis_name: str = "data", *, prune: bool = True,
+                            method: str = "auto"):
+    """DFG + L2-loop discovery state over the pruned, sharded scan
+    (feeds ``discover_alpha`` / ``discover_heuristics`` host-side)."""
+    state, tail, report = _run(discovery_kernel, fix_discovery_end, plan,
+                               num_activities, mesh, axis_name, prune, method)
+    return DiscoveryState(_apply_tail_end(state["dfg"], tail),
+                          state["l2"]), report
+
+
+def query_sharded_dfg_host(plan: Plan, num_activities: int, num_shards: int,
+                           **kw):
+    """CPU-host validation path (virtual device mesh), as in
+    ``distributed.dfg.dfg_sharded_host``."""
+    devs = jax.devices()[:num_shards]
+    mesh = jax.sharding.Mesh(devs, ("data",))
+    return query_sharded_dfg(plan, num_activities, mesh, **kw)
+
+
+def query_sharded_discovery_host(plan: Plan, num_activities: int,
+                                 num_shards: int, **kw):
+    devs = jax.devices()[:num_shards]
+    mesh = jax.sharding.Mesh(devs, ("data",))
+    return query_sharded_discovery(plan, num_activities, mesh, **kw)

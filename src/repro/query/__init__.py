@@ -1,0 +1,27 @@
+"""Lazy columnar query subsystem: ``scan -> filter -> project -> mine``.
+
+The paper's scalability argument rests on filtering and attribute
+selection being cheap *columnar* operations; this package completes the
+story by deciding — from EDFV0003 zone maps, before any data I/O — which
+row groups cannot possibly contribute and never reading their bytes.
+Plans compile down to the existing chunk-kernel engine, so every miner
+(DFG, stats, variants, alpha, heuristics) runs over a pruned scan with
+results bitwise identical to filter-then-mine on the whole log.
+
+    from repro.query import scan, col, cases_containing, execute
+    plan = scan("log.edf").filter(col("time:timestamp").between(t0, t1))
+    dfg, report = execute(plan, mine=dfg_kernel(num_activities))
+    print(report.groups_skipped, report.bytes_read, report.bytes_total)
+"""
+from .exec import (ScanReport, execute, execute_frame,  # noqa: F401
+                   pruned_source)
+from .expr import (CasePredicate, Col, Expr, case_size,  # noqa: F401
+                   cases_containing, col)
+from .optimize import PhysicalPlan, compile_plan  # noqa: F401
+from .plan import Plan, scan  # noqa: F401
+
+__all__ = [
+    "CasePredicate", "Col", "Expr", "Plan", "PhysicalPlan", "ScanReport",
+    "case_size", "cases_containing", "col", "compile_plan", "execute",
+    "execute_frame", "pruned_source", "scan",
+]

@@ -1,0 +1,283 @@
+"""Pruned plan execution: ghost carries, residual masks, chunk kernels.
+
+``execute(plan, mine=kernel)`` drives the surviving row groups of a
+compiled plan through any ``repro.core.engine`` chunk kernel.  The
+contract is **bitwise identity** with the eager pipeline the plan
+replaces: ``mine(filterN(...filter1(edf.read(path))))`` — while reading
+strictly fewer bytes whenever the zone maps refute any group.
+
+Two mechanisms make the pruned stream indistinguishable from the full
+one for the kernels:
+
+* **residual masks** — each read group's chunk arrives with
+  ``row_valid`` = the conjunction of every predicate the zone maps could
+  not decide (plus the broadcast case-level keep masks), exactly the
+  lazy ``ops.proj`` mask the eager filters would have produced.  The
+  kernels already fold ``rows_valid()`` into every update, so a masked
+  chunk contributes precisely what the filtered whole log would.
+* **ghost chunks** — a run of skipped groups is replaced by an
+  O(segments) synthetic chunk: one all-masked row per case segment, case
+  ids rising from the run's first case to its recorded tail, last row
+  carrying the persisted tail halo.  Driving it through the kernel's own
+  ``update`` advances the carry — case id, one/two-row halo, *global
+  segment numbering* — exactly as the unread rows would have (they are
+  all refuted, hence all masked), at a cost independent of the run's row
+  count.  Kernels that consume masked rows (``mask_exact=False``, e.g.
+  variants' validity-blind hashing) opt out and are streamed unpruned.
+
+``execute_frame`` materializes the filtered, projected frame instead
+(equal to ``filterN(...).compact()``); ``pruned_source`` exposes the
+pruned stream as a re-iterable ``ChunkedEventFrame`` for custom drivers
+(``repro.distributed.query`` shards it across devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.chunked import ChunkedEventFrame
+from repro.core.eventframe import ACTIVITY, CASE, EventFrame
+from repro.storage.edf import EDFReader
+
+from .expr import CasePredicate
+from .optimize import GhostItem, PhysicalPlan, ReadItem, compile_plan
+from .plan import Plan
+
+
+# ------------------------------------------------------------- reporting
+@dataclasses.dataclass
+class ScanReport:
+    """I/O accounting for one executed plan (all byte counts are on-disk
+    compressed extents of the scan's projected column set)."""
+
+    path: str
+    columns: tuple
+    pruned: bool
+    groups_total: int = 0
+    groups_read: int = 0
+    groups_skipped: int = 0
+    groups_proved: int = 0      # read groups whose residual mask was proved
+    rows_total: int = 0
+    rows_read: int = 0
+    bytes_total: int = 0
+    bytes_read: int = 0
+    phase1_groups_read: int = 0
+    phase1_bytes_read: int = 0
+
+    @property
+    def skip_ratio(self) -> float:
+        return self.groups_skipped / self.groups_total if self.groups_total else 0.0
+
+    @property
+    def bytes_saved_ratio(self) -> float:
+        if not self.bytes_total:
+            return 0.0
+        return 1.0 - self.bytes_read / self.bytes_total
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["columns"] = list(self.columns)
+        out["skip_ratio"] = self.skip_ratio
+        out["bytes_saved_ratio"] = self.bytes_saved_ratio
+        return out
+
+
+def _account(report: ScanReport, physical: PhysicalPlan, schedule,
+             read_columns, phase1: bool = False) -> None:
+    reader = physical.reader
+    for item in schedule:
+        if isinstance(item, GhostItem):
+            continue
+        nbytes = reader.group_nbytes(item.index, read_columns)
+        if phase1:
+            report.phase1_groups_read += 1
+            report.phase1_bytes_read += nbytes
+        else:
+            report.groups_read += 1
+            report.bytes_read += nbytes
+            report.rows_read += reader.group_nrows(item.index)
+            if not item.residual and physical.steps:
+                report.groups_proved += 1
+
+
+# ----------------------------------------------------------- the stream
+def _ghost_chunk(item: GhostItem, chunk_columns, reader: EDFReader
+                 ) -> EventFrame:
+    """One all-masked row per case segment of a skipped run (padded to a
+    power of two so ghost shapes retrace the kernel O(log) times)."""
+    d = max(int(item.segments), 1)
+    m = 1 << (d - 1).bit_length()
+    tail_vals = item.tail["values"]
+    cols: dict[str, np.ndarray] = {}
+    valid: dict[str, np.ndarray] = {}
+    for name in chunk_columns:
+        meta = reader.schema[name]
+        dtype = np.dtype(meta["dtype"])
+        if name == CASE:
+            arr = np.full(m, tail_vals[CASE], dtype)
+            if d > 1:
+                arr[:d - 1] = item.first_case + np.arange(d - 1)
+        else:
+            arr = np.zeros(m, dtype)
+            arr[d - 1:] = dtype.type(tail_vals.get(name, 0))
+        cols[name] = arr
+        if meta.get("has_valid"):
+            # every ghost row is row-masked, but the tail halo keeps its
+            # persisted epsilon flag so the carry is faithful to the file
+            v = np.ones(m, bool)
+            v[d - 1:] = bool(item.tail.get("valid", {}).get(name, True))
+            valid[name] = v
+    frame = EventFrame.from_numpy(cols, valid)
+    return EventFrame(frame.columns, frame.valid, jnp.zeros(m, bool))
+
+
+def _iter_chunks(physical: PhysicalPlan, schedule, keeps: dict,
+                 chunk_columns, read_columns):
+    """Yield the pruned chunk stream: read groups with residual masks,
+    ghost chunks for skipped runs.  Tracks global segment numbering
+    sequentially (read groups from their case column, ghost runs from
+    metadata), so case-level keep masks broadcast to the right rows."""
+    reader = physical.reader
+    steps = physical.steps
+    # global segment ids are only materialized when a keep mask needs the
+    # broadcast; ghost continuation needs just the previous case id
+    track_segs = any(getattr(item, "case_steps", ()) for item in schedule)
+    last_seg = -1
+    prev_case = None
+    for item in schedule:
+        if isinstance(item, GhostItem):
+            cont = prev_case is not None and item.first_case == prev_case
+            yield _ghost_chunk(item, chunk_columns, reader)
+            last_seg += int(item.segments) - (1 if cont else 0)
+            prev_case = item.tail["values"][CASE]
+            continue
+        frame = reader.read_group(item.index, read_columns)
+        mask = np.ones(frame.nrows, bool)
+        for pos in item.residual:
+            mask &= np.asarray(steps[pos].mask(frame), bool)
+        if CASE in frame and frame.nrows:
+            case = np.asarray(frame[CASE])
+            if track_segs:
+                new0 = prev_case is None or case[0] != prev_case
+                seg = last_seg + int(new0) + np.concatenate(
+                    [[0], np.cumsum(case[1:] != case[:-1])])
+                for pos in item.case_steps:
+                    keep = keeps[pos]
+                    seg_c = np.minimum(seg, len(keep) - 1)
+                    mask &= keep[seg_c] & (seg < len(keep))
+                last_seg = int(seg[-1])
+            prev_case = case[-1]
+        sel = frame.select(chunk_columns)
+        yield EventFrame(sel.columns, sel.valid, jnp.asarray(mask))
+
+
+def _phase1_keeps(physical: PhysicalPlan, report: ScanReport) -> dict:
+    """Run phase one of every case predicate, in plan order, each pass
+    pruned by the steps that precede it."""
+    keeps: dict = {}
+    for pos, step in enumerate(physical.steps):
+        if not isinstance(step, CasePredicate):
+            continue
+        if physical.num_cases is None:
+            raise ValueError(
+                f"case-level predicates need a {CASE!r} column with "
+                f"per-group segment metadata in {physical.plan.path!r}")
+        chunk_cols = tuple(sorted({CASE, ACTIVITY} | set(step.columns())))
+        read = set(chunk_cols)
+        for i in range(pos):
+            s = physical.steps[i]
+            if not isinstance(s, CasePredicate):
+                read |= s.columns()
+        schedule = physical.phase1_schedule(pos, keeps)
+        _account(report, physical, schedule, tuple(sorted(read)), phase1=True)
+        result = engine.run_streaming(
+            step.phase1_kernel(physical.num_cases),
+            _iter_chunks(physical, schedule, keeps, chunk_cols,
+                         tuple(sorted(read))))
+        keeps[pos] = np.asarray(step.finalize_keep(result), bool)
+    return keeps
+
+
+def _base_report(physical: PhysicalPlan) -> ScanReport:
+    reader = physical.reader
+    report = ScanReport(physical.plan.path, physical.read_columns,
+                        physical.prune)
+    for g in range(reader.num_groups):
+        n = reader.group_nrows(g)
+        if n == 0:
+            continue
+        report.groups_total += 1
+        report.rows_total += n
+        report.bytes_total += reader.group_nbytes(g, physical.read_columns)
+    return report
+
+
+# ------------------------------------------------------------ public API
+def pruned_source(plan: Plan, *, prune: bool = True, mask_exact: bool = True
+                  ) -> tuple[ChunkedEventFrame, ScanReport]:
+    """Compile a plan into a re-iterable pruned chunk stream.
+
+    ``mask_exact=False`` keeps every group in the stream (residual masks
+    only) for consumers that inspect masked rows.  The returned source
+    plugs into ``engine.run_streaming`` / ``repro.distributed.query``.
+    """
+    physical = compile_plan(plan, prune)
+    report = _base_report(physical)
+    keeps = _phase1_keeps(physical, report)
+    schedule = physical.final_schedule(keeps, ghosts=mask_exact,
+                                       skippable=mask_exact)
+    _account(report, physical, schedule, physical.read_columns)
+    report.groups_skipped = report.groups_total - report.groups_read
+    src = ChunkedEventFrame(
+        lambda: _iter_chunks(physical, schedule, keeps,
+                             physical.chunk_columns, physical.read_columns),
+        num_chunks=len(schedule), tables=dict(physical.reader.tables))
+    return src, report
+
+
+def execute(plan: Plan, mine: engine.ChunkKernel, *, prune: bool = True):
+    """Fold a chunk kernel over the pruned scan of ``plan``.
+
+    Returns ``(result, report)`` with ``result`` bitwise equal to running
+    the same kernel over the eagerly filtered whole log.  ``prune=False``
+    executes the identical plan without zone-map skipping (the full-scan
+    baseline the benchmarks compare against).
+    """
+    src, report = pruned_source(
+        plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True))
+    return engine.run_streaming(mine, src), report
+
+
+def execute_frame(plan: Plan, *, prune: bool = True):
+    """Materialize the filtered, projected frame (rows the predicates
+    refute are dropped — equal to the eager filter chain + ``compact``).
+
+    Returns ``(frame, tables, report)``.
+    """
+    physical = compile_plan(plan, prune)
+    report = _base_report(physical)
+    keeps = _phase1_keeps(physical, report)
+    schedule = physical.final_schedule(keeps, ghosts=False, skippable=True)
+    _account(report, physical, schedule, physical.read_columns)
+    report.groups_skipped = report.groups_total - report.groups_read
+    parts = [c.compact() for c in
+             _iter_chunks(physical, schedule, keeps, physical.chunk_columns,
+                          physical.read_columns)]
+    parts = [p for p in parts if p.nrows] or parts[:1]
+    tables = {k: v for k, v in physical.reader.tables.items()
+              if k in physical.chunk_columns}
+    if not parts:
+        schema = physical.reader.schema
+        cols = {k: np.zeros(0, np.dtype(schema[k]["dtype"]))
+                for k in physical.chunk_columns}
+        valid = {k: np.zeros(0, bool) for k in physical.chunk_columns
+                 if schema[k].get("has_valid") or "valid_offset" in schema[k]}
+        return EventFrame.from_numpy(cols, valid), tables, report
+    cols = {k: np.concatenate([np.asarray(p.columns[k]) for p in parts])
+            for k in parts[0].names}
+    valid = {k: np.concatenate([np.asarray(p.valid[k]) for p in parts])
+             for k in parts[0].valid}
+    return EventFrame.from_numpy(cols, valid), tables, report

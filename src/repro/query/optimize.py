@@ -1,0 +1,245 @@
+"""Plan compilation: predicate + projection pushdown over zone maps.
+
+``compile_plan`` turns a logical :class:`repro.query.plan.Plan` into a
+:class:`PhysicalPlan`:
+
+* **predicate pushdown** — every row-level conjunct is ``prove()``-d
+  against each row group's zone maps; a group any conjunct refutes is
+  never read (its byte extents are never touched), and a group a conjunct
+  *proves* skips that conjunct's residual mask;
+* **projection pushdown** — the scan reads only the union of the
+  consumer's columns and the columns of the predicates that still need
+  residual evaluation (plus the case column when segment bookkeeping is
+  required);
+* **segment accounting** — from the per-group ``segments`` / ``tail``
+  metadata the planner derives, without any data I/O, the global segment
+  id of every group's first row and the total case count.  This is what
+  keeps case-indexed kernels (case sizes, durations, variants, case-level
+  filters) bitwise identical under pruning: a skipped run of groups is
+  replaced by an O(segments) *ghost chunk* that advances the engine's
+  carry exactly as the unread rows would have (all of them masked);
+* **two-pass planning** — each :class:`CasePredicate` gets its own
+  phase-one schedule (pruned by the conjuncts that precede it in the
+  plan), whose streamed kernel result becomes a per-case keep mask; the
+  final scan then also skips groups whose entire segment range is
+  refuted by the keep masks.
+
+The executor (``repro.query.exec``) asks the physical plan for a
+*schedule* — an ordered list of ``read`` / ``ghost`` items — once the
+phase-one keep masks are known.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.eventframe import ACTIVITY, CASE
+from repro.storage.edf import EDFReader
+
+from .expr import ALL, NONE, CasePredicate, Expr, bind_schema
+from .plan import Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadItem:
+    """Read group ``index`` and mask it with the listed residual steps."""
+
+    index: int
+    residual: tuple       # step positions (Expr) needing per-row evaluation
+    case_steps: tuple     # step positions (CasePredicate) to broadcast
+
+
+@dataclasses.dataclass(frozen=True)
+class GhostItem:
+    """A run of consecutive skipped groups, collapsed to segment metadata."""
+
+    indices: tuple        # skipped group indices (ascending, all nonempty)
+    segments: int         # distinct case segments across the run
+    first_case: int       # case id of the run's first row
+    tail: dict            # last row's {"values", "valid"} halo
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    reader: EDFReader
+    plan: Plan
+    steps: tuple                    # resolved steps, plan order
+    chunk_columns: tuple            # what the consumer (kernel) sees
+    read_columns: tuple             # what the scan materializes
+    prune: bool
+    metas: list | None              # per-group metadata (None: prune=False)
+    proves: dict                    # expr step position -> list[str] per group
+    seg_start: np.ndarray | None    # global segment id of each group's row 0
+    seg_count: np.ndarray | None    # segments per group
+    num_cases: int | None           # total case segments in the file
+    can_ghost: bool                 # segment metadata complete enough to skip
+
+    # ------------------------------------------------------------ helpers
+    def _nonempty(self):
+        return [g for g in range(self.reader.num_groups)
+                if self.reader.group_nrows(g) > 0]
+
+    def _keep_refutes(self, g: int, pos: int, keeps: dict) -> bool:
+        """True when keep mask of the case predicate at ``pos`` rules out
+        every segment that intersects group ``g``."""
+        if self.seg_start is None:
+            return False            # no segment metadata — never skip by keep
+        lo = int(self.seg_start[g])
+        hi = lo + int(self.seg_count[g])
+        return not keeps[pos][lo:hi].any()
+
+    def _schedule(self, skip, residual, case_steps, ghosts: bool):
+        """Fold per-group decisions into read items and ghost runs."""
+        items: list = []
+        run: list[int] = []
+
+        def flush():
+            if not run:
+                return
+            segs = 0
+            prev_tail = None
+            for g in run:
+                first = self.metas[g]["zones"][CASE]["min"]
+                segs += int(self.metas[g]["segments"])
+                if prev_tail is not None and first == prev_tail:
+                    segs -= 1
+                prev_tail = self.metas[g]["tail"]["values"][CASE]
+            items.append(GhostItem(
+                tuple(run), segs,
+                self.metas[run[0]]["zones"][CASE]["min"],
+                self.metas[run[-1]]["tail"]))
+            run.clear()
+
+        for g in self._nonempty():
+            if skip(g):
+                if ghosts:
+                    run.append(g)
+                continue
+            flush()
+            items.append(ReadItem(g, tuple(residual(g)), tuple(case_steps)))
+        flush()
+        return items
+
+    # ----------------------------------------------------------- schedules
+    def phase1_schedule(self, pos: int, keeps: dict):
+        """Schedule for phase one of the case predicate at step ``pos``;
+        pruned by the plan steps that precede it."""
+        pred = self.steps[pos]
+        before_exprs = [i for i in range(pos) if isinstance(self.steps[i], Expr)]
+        before_cases = [i for i in range(pos)
+                        if isinstance(self.steps[i], CasePredicate)]
+
+        def skip(g):
+            # phase-one kernels are segment-indexed: skipping is only safe
+            # when a ghost chunk can advance the numbering
+            if not (self.prune and self.can_ghost):
+                return False
+            if any(self.proves[i][g] == NONE for i in before_exprs):
+                return True
+            if pred.phase1_prove(self.metas[g]) == NONE:
+                return True
+            return any(self._keep_refutes(g, i, keeps) for i in before_cases)
+
+        def residual(g):
+            # keep every conjunct the zone maps did not PROVE: a group that
+            # is read despite a NONE proof (no ghost available) still needs
+            # its refuting predicate applied to mask the rows
+            if not self.prune:
+                return before_exprs
+            return [i for i in before_exprs if self.proves[i][g] != ALL]
+
+        return self._schedule(skip, residual, tuple(before_cases),
+                              ghosts=self.can_ghost and self.prune)
+
+    def final_schedule(self, keeps: dict, ghosts: bool = True,
+                       skippable: bool = True):
+        """Schedule for the final (mine / materialize) pass.
+
+        ``skippable=False`` reads every group (consumers that inspect
+        masked rows — ``mask_exact=False`` kernels) while still skipping
+        residual evaluation on groups the zone maps prove.
+        """
+        exprs = [i for i, s in enumerate(self.steps) if isinstance(s, Expr)]
+        cases = [i for i, s in enumerate(self.steps)
+                 if isinstance(s, CasePredicate)]
+        # with ghosts requested (mine path), a skip is only safe when the
+        # segment metadata can stand in for the unread rows; without ghosts
+        # (materialize path) skipped rows are simply dropped
+        can_skip = self.prune and skippable and (self.can_ghost or not ghosts)
+
+        def skip(g):
+            if not can_skip:
+                return False
+            if any(self.proves[i][g] == NONE for i in exprs):
+                return True
+            return any(self._keep_refutes(g, i, keeps) for i in cases)
+
+        def residual(g):
+            # non-ALL (not just SOME): a NONE-proved group can still be
+            # read — mask_exact=False consumers, or no ghost metadata —
+            # and must then arrive with its rows masked
+            if not self.prune:
+                return exprs
+            return [i for i in exprs if self.proves[i][g] != ALL]
+
+        return self._schedule(skip, residual, tuple(cases),
+                              ghosts=ghosts and self.can_ghost and self.prune)
+
+
+def compile_plan(plan: Plan, prune: bool = True) -> PhysicalPlan:
+    reader = EDFReader(plan.path)
+    steps = tuple(s.resolve(reader.tables) if isinstance(s, CasePredicate)
+                  else bind_schema(s, reader.schema) for s in plan.steps)
+    exprs = [(i, s) for i, s in enumerate(steps) if isinstance(s, Expr)]
+    case_steps = [s for s in steps if isinstance(s, CasePredicate)]
+
+    chunk_columns = tuple(plan.projection) if plan.projection is not None \
+        else reader.column_names
+    unknown = set(chunk_columns) - set(reader.column_names)
+    for _, e in exprs:
+        unknown |= e.columns() - set(reader.column_names)
+    for s in case_steps:
+        unknown |= s.columns() - set(reader.column_names)
+    if unknown:
+        raise KeyError(f"plan references columns not in {plan.path!r}: "
+                       f"{sorted(unknown)}")
+    read = set(chunk_columns)
+    for _, e in exprs:
+        read |= e.columns()
+    for s in case_steps:
+        # phase-one kernels + segment broadcast + the predicate's column
+        read |= {CASE, ACTIVITY} | s.columns()
+    read_columns = tuple(sorted(read))
+
+    metas = None
+    proves: dict = {}
+    seg_start = seg_count = None
+    num_cases = None
+    can_ghost = False
+    if prune or case_steps:
+        # case predicates need the segment accounting (kernel capacity +
+        # keep-mask broadcast) even on an unpruned scan
+        metas = [reader.group_meta(g) for g in range(reader.num_groups)]
+        if prune:
+            proves = {i: [e.prove(metas[g]) for g in range(reader.num_groups)]
+                      for i, e in exprs}
+        nonempty = [g for g in range(reader.num_groups)
+                    if reader.group_nrows(g) > 0]
+        can_ghost = (CASE in reader.schema and
+                     all("segments" in metas[g] for g in nonempty))
+        if can_ghost:
+            seg_start = np.zeros(reader.num_groups, np.int64)
+            seg_count = np.zeros(reader.num_groups, np.int64)
+            last_seg, prev_tail = -1, None
+            for g in nonempty:
+                first = metas[g]["zones"][CASE]["min"]
+                cont = prev_tail is not None and first == prev_tail
+                seg_start[g] = last_seg if cont else last_seg + 1
+                seg_count[g] = int(metas[g]["segments"])
+                last_seg = seg_start[g] + seg_count[g] - 1
+                prev_tail = metas[g]["tail"]["values"][CASE]
+            num_cases = int(last_seg) + 1
+    return PhysicalPlan(reader, plan, steps, chunk_columns, read_columns,
+                        prune, metas, proves, seg_start, seg_count,
+                        num_cases, can_ghost)

@@ -1,0 +1,75 @@
+"""Logical query plans: ``scan -> filter* -> project -> mine``.
+
+A :class:`Plan` is an immutable description of *what* to compute over an
+EDF file — which predicates restrict the rows, which columns the consumer
+needs — with no commitment to *how*.  The how (which row groups are read
+at all, which predicates still need a residual mask, how global segment
+numbering survives the skips) is decided by ``repro.query.optimize`` from
+the file's zone maps, and executed by ``repro.query.exec``::
+
+    from repro.query import scan, col, execute
+    plan = (scan("log.edf")
+            .filter(col(CASE).between(1_000, 2_000))
+            .filter(col(ACTIVITY).isin([2, 5]))
+            .project([CASE, ACTIVITY]))
+    graph, report = execute(plan, mine=dfg_kernel(num_activities))
+
+Filters are applied in order; each step is either a row-level
+:class:`~repro.query.expr.Expr` or a two-pass
+:class:`~repro.query.expr.CasePredicate`.  The composed semantics are
+exactly the eager chain of ``repro.core.filtering`` calls the plan
+replaces — the executor's contract is bitwise identity with
+``mine(filterN(...filter1(edf.read(path))))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from .expr import CasePredicate, Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Immutable logical plan over one EDF file (see module docstring)."""
+
+    path: str
+    steps: tuple = ()               # Expr | CasePredicate, in application order
+    projection: tuple | None = None  # None = every column in the schema
+
+    def filter(self, predicate) -> "Plan":
+        """Append a filter step (row-level ``Expr`` or ``CasePredicate``)."""
+        if not isinstance(predicate, (Expr, CasePredicate)):
+            raise TypeError(
+                f"filter() takes an Expr or CasePredicate, got "
+                f"{type(predicate).__name__} (build one with col()/"
+                f"cases_containing()/case_size())")
+        return dataclasses.replace(self, steps=self.steps + (predicate,))
+
+    def project(self, columns: Iterable[str]) -> "Plan":
+        """Restrict the columns the scan materializes (the downstream
+        kernel must find every column it reads in this set)."""
+        return dataclasses.replace(self, projection=tuple(columns))
+
+    # ------------------------------------------------------------- views
+    @property
+    def exprs(self) -> tuple:
+        return tuple(s for s in self.steps if isinstance(s, Expr))
+
+    @property
+    def case_predicates(self) -> tuple:
+        return tuple(s for s in self.steps if isinstance(s, CasePredicate))
+
+    def describe(self) -> str:
+        """One line per plan node (scan -> filters -> project)."""
+        lines = [f"scan({self.path!r})"]
+        lines += [f"  filter {s!r}" for s in self.steps]
+        if self.projection is not None:
+            lines.append(f"  project {list(self.projection)}")
+        return "\n".join(lines)
+
+
+def scan(path: str) -> Plan:
+    """Start a lazy plan over an EDF file (any version; zone maps are
+    synthesized on open for v1/v2 files)."""
+    return Plan(path)

@@ -1,12 +1,12 @@
 """EDF — a columnar event-log container (the Parquet/ORC role of the paper).
 
-Two on-disk layouts share one reader:
+Three on-disk layouts share one reader:
 
 EDFV0001 (legacy, whole-column blocks)::
 
     [8B magic "EDFV0001"] [4B header_len] [header json] [column blocks...]
 
-EDFV0002 (current, row groups — the out-of-core layout)::
+EDFV0002 (row groups — the out-of-core layout)::
 
     [8B magic "EDFV0002"] [4B header_len] [header json]
     [group 0: column blocks...] [group 1: column blocks...] ...
@@ -19,8 +19,29 @@ decoded (the paper's "attribute selection at load time", now also bounded in
 *rows*). Per-column compression (raw | zlib1 | zlib6 | zlib9) exploits type
 homogeneity exactly as Parquet does (Snappy ~ zlib1, Gzip ~ zlib9).
 
-``read`` loads any version whole; ``read_streaming`` / ``read_group`` are
-the chunk sources for ``repro.core.chunked.ChunkedEventFrame``.
+EDFV0003 (current: v2 + per-group **zone maps**) keeps the v2 byte layout
+and adds three header-only aggregates per row group, the statistics the
+``repro.query`` planner prunes scans with (Parquet's column-index /
+ORC-stripe-statistics role):
+
+* ``zones``    — per column: min / max over the group's stored values,
+  ``nulls`` (epsilon count), and for dictionary columns a packed *presence
+  bitset* of the dictionary ids that occur in the group, so a predicate
+  like ``activity == "pay"`` can refute a group exactly;
+* ``segments`` — number of distinct contiguous case segments in the group
+  (a (case,time)-sorted log makes this the case count), which lets a pruned
+  scan advance global segment numbering across skipped groups without
+  reading them;
+* ``tail``     — the last row's values (+ epsilon flags): the one-row halo
+  ``repro.core.engine`` carries across chunk boundaries, persisted so a
+  skipped group can still hand the correct carry to its successor.
+
+All three are synthesized on open for v1/v2 files (one streaming pass — a
+compatibility fallback, not a fast path), so the query layer treats every
+EDF file uniformly.  ``read`` loads any version whole; ``read_streaming`` /
+``read_group`` are the chunk sources for
+``repro.core.chunked.ChunkedEventFrame``; :class:`EDFReader` is the cached
+random-access view the query planner uses.
 """
 from __future__ import annotations
 
@@ -31,11 +52,16 @@ from typing import Iterable, Mapping
 
 import numpy as np
 
-from repro.core.eventframe import EventFrame
+from repro.core.eventframe import CASE, EventFrame
 
 MAGIC = b"EDFV0001"          # legacy, still readable
-MAGIC_V2 = b"EDFV0002"
+MAGIC_V2 = b"EDFV0002"       # row groups, no zone maps — still readable
+MAGIC_V3 = b"EDFV0003"
 CODECS = ("raw", "zlib1", "zlib6", "zlib9")
+
+# dictionary presence bitsets are only recorded for tables up to this size
+# (a 4096-entry alphabet packs to 512 bytes of header per column per group)
+MAX_BITSET_TABLE = 4096
 
 
 def _encode(buf: bytes, codec: str) -> bytes:
@@ -52,6 +78,47 @@ def _decode(buf: bytes, codec: str) -> bytes:
         # another producer) — nothing to decompress
         return b""
     return buf if codec == "raw" else zlib.decompress(buf)
+
+
+def _scalar(x):
+    """A JSON-safe Python scalar preserving the stored value exactly
+    (``float(np.float32)`` is the exact binary64 widening of the float32)."""
+    return int(x) if np.issubdtype(np.asarray(x).dtype, np.integer) else float(x)
+
+
+def _group_aux(data: Mapping[str, np.ndarray], valid: Mapping[str, np.ndarray],
+               tables: Mapping[str, list], lo: int, hi: int) -> dict:
+    """Zone maps + segment count + tail halo for rows ``[lo, hi)``.
+
+    Shared between the v3 writer and the on-open synthesis fallback for
+    v1/v2 files (there ``lo=0, hi=nrows`` of one loaded group).
+    """
+    zones: dict[str, dict] = {}
+    for name in sorted(data):
+        arr = data[name][lo:hi]
+        z: dict = {"nulls": 0}
+        if name in valid:
+            z["nulls"] = int((~np.asarray(valid[name][lo:hi], bool)).sum())
+        if arr.size:
+            z["min"] = _scalar(arr.min())
+            z["max"] = _scalar(arr.max())
+            table = tables.get(name)
+            if table is not None and len(table) <= MAX_BITSET_TABLE:
+                present = np.zeros(len(table), bool)
+                ids = arr[(arr >= 0) & (arr < len(table))].astype(np.int64)
+                present[ids] = True
+                z["bits"] = np.packbits(present).tobytes().hex()
+        zones[name] = z
+    aux: dict = {"zones": zones}
+    if hi > lo:
+        if CASE in data:
+            case = data[CASE][lo:hi]
+            aux["segments"] = int((case[1:] != case[:-1]).sum()) + 1
+        aux["tail"] = {
+            "values": {name: _scalar(data[name][hi - 1]) for name in sorted(data)},
+            "valid": {name: bool(valid[name][hi - 1]) for name in sorted(valid)},
+        }
+    return aux
 
 
 # ------------------------------------------------------------------ write
@@ -96,19 +163,21 @@ def _write_v1(path: str, frame: EventFrame, tables, codec: str) -> dict:
 
 def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None,
           codec: str = "zlib1", row_group_rows: int | None = None,
-          version: int = 2) -> dict:
+          version: int = 3) -> dict:
     """Serialize an EventFrame. Returns the header (for size accounting).
 
     ``row_group_rows`` splits the rows into groups of that size (the unit of
-    streaming reads); ``None`` writes a single group. ``version=1`` emits
-    the legacy layout.
+    streaming reads); ``None`` writes a single group.  ``version=3`` (the
+    default) additionally records per-group zone maps / segment counts /
+    tail halos in the header (byte layout identical to v2); ``version=2``
+    and ``version=1`` emit the older layouts for back-compat round-trips.
     """
     tables = dict(tables or {})
     if version == 1:
         if row_group_rows is not None:
-            raise ValueError("row groups need version=2")
+            raise ValueError("row groups need version>=2")
         return _write_v1(path, frame, tables, codec)
-    if version != 2:
+    if version not in (2, 3):
         raise ValueError(f"unknown EDF version {version!r}")
 
     data = {k: np.ascontiguousarray(v) for k, v in frame.to_numpy().items()}
@@ -151,13 +220,16 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
                 blobs.append(venc)
                 offset += len(venc)
             gcols[name] = ext
-        groups.append({"nrows": hi - lo, "columns": gcols})
+        group = {"nrows": hi - lo, "columns": gcols}
+        if version >= 3:
+            group.update(_group_aux(data, valid, tables, lo, hi))
+        groups.append(group)
 
-    header = {"version": 2, "nrows": nrows, "codec": codec,
+    header = {"version": version, "nrows": nrows, "codec": codec,
               "columns": schema, "groups": groups}
     hjson = json.dumps(header).encode()
     with open(path, "wb") as f:
-        f.write(MAGIC_V2)
+        f.write(MAGIC_V3 if version >= 3 else MAGIC_V2)
         f.write(struct.pack("<I", len(hjson)))
         f.write(hjson)
         for b in blobs:
@@ -169,15 +241,16 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
 def read_header(path: str) -> tuple[dict, int]:
     with open(path, "rb") as f:
         magic = f.read(8)
-        assert magic in (MAGIC, MAGIC_V2), "not an EDF file"
+        assert magic in (MAGIC, MAGIC_V2, MAGIC_V3), "not an EDF file"
         (hlen,) = struct.unpack("<I", f.read(4))
         header = json.loads(f.read(hlen))
-        header.setdefault("version", 1 if magic == MAGIC else 2)
+        header.setdefault("version",
+                          {MAGIC: 1, MAGIC_V2: 2, MAGIC_V3: 3}[magic])
         return header, 12 + hlen
 
 
 def num_row_groups_header(header: dict) -> int:
-    return len(header["groups"]) if header.get("version", 1) == 2 else 1
+    return len(header["groups"]) if header.get("version", 1) >= 2 else 1
 
 
 def num_row_groups(path: str) -> int:
@@ -291,20 +364,115 @@ def read_streaming(path: str, columns: Iterable[str] | None = None):
 
 
 def file_sizes(path: str) -> dict:
-    """Per-column compressed/raw byte accounting (Table 2 style)."""
-    header, _ = read_header(path)
-    out = {"total": 0, "raw": 0}
+    """Per-column compressed/raw byte accounting (Table 2 style).
+
+    ``total`` equals ``os.path.getsize(path)`` exactly: magic + header +
+    every column extent *including* the packed validity bitmaps.  ``raw``
+    is the uncompressed size of the column data.  ``groups`` is the
+    per-row-group breakdown (``nrows`` / ``nbytes`` / per-column bytes)
+    the query planner's skip-ratio reporting sums over; v1 files expose
+    their single whole-column block as one pseudo-group.
+    """
+    header, base = read_header(path)
+    out: dict = {"total": base, "raw": 0, "header": base}
+    groups: list[dict] = []
     if header["version"] == 1:
+        gcols = {}
         for c in header["columns"]:
-            out["total"] += c["nbytes"]
+            gcols[c["name"]] = c["nbytes"] + c.get("valid_nbytes", 0)
             out["raw"] += c["raw_nbytes"]
-            out[c["name"]] = c["nbytes"]
-        return out
-    per_col = {c["name"]: 0 for c in header["columns"]}
-    for group in header["groups"]:
-        for name, ext in group["columns"].items():
-            per_col[name] += ext["nbytes"]
-            out["total"] += ext["nbytes"]
-            out["raw"] += ext["raw_nbytes"]
+        groups.append({"nrows": header["nrows"],
+                       "nbytes": sum(gcols.values()), "columns": gcols})
+    else:
+        for group in header["groups"]:
+            gcols = {}
+            for name, ext in group["columns"].items():
+                gcols[name] = ext["nbytes"] + ext.get("valid_nbytes", 0)
+                out["raw"] += ext["raw_nbytes"]
+            groups.append({"nrows": group["nrows"],
+                           "nbytes": sum(gcols.values()), "columns": gcols})
+    per_col: dict[str, int] = {c["name"]: 0 for c in header["columns"]}
+    for g in groups:
+        for name, nb in g["columns"].items():
+            per_col[name] += nb
+        out["total"] += g["nbytes"]
     out.update(per_col)
+    out["groups"] = groups
     return out
+
+
+# ---------------------------------------------------------------- reader
+class EDFReader:
+    """Cached-header random access to an EDF file — the query planner's view.
+
+    One header parse serves every ``read_group`` / ``group_meta`` /
+    ``group_nbytes`` call.  ``group_meta`` returns the zone-map / segment /
+    tail metadata of a row group: for EDFV0003 files straight from the
+    header (no data I/O); for v1/v2 files it is synthesized by loading each
+    group once on first access (a compatibility fallback — correct pruning,
+    but the synthesis pass itself reads the data it would later skip).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.header, self.base = read_header(path)
+        self.version: int = self.header["version"]
+        self.tables = _tables_from_schema(self.header)
+        self.schema = {c["name"]: c for c in self.header["columns"]}
+        self.column_names = tuple(sorted(self.schema))
+        self.nrows: int = self.header["nrows"]
+        self._synth: list[dict] | None = None   # v1/v2 metadata cache
+
+    @property
+    def num_groups(self) -> int:
+        return num_row_groups_header(self.header)
+
+    def _groups(self) -> list[dict]:
+        if self.version == 1:
+            # present the single whole-column block as one pseudo-group
+            return [{"nrows": self.nrows, "columns": {
+                c["name"]: c for c in self.header["columns"]}}]
+        return self.header["groups"]
+
+    def group_nrows(self, index: int) -> int:
+        return self._groups()[index]["nrows"]
+
+    def read_group(self, index: int, columns: Iterable[str] | None = None
+                   ) -> EventFrame:
+        if self.version == 1:
+            if index != 0:
+                raise IndexError("EDFV0001 has a single row group")
+            return _read_v1(self.path, columns)[0]
+        group = self.header["groups"][index]
+        want = set(columns) if columns is not None else None
+        with open(self.path, "rb") as f:
+            return _read_group_v2(f, self.base, self.header, group, want)
+
+    def group_meta(self, index: int) -> dict:
+        """``{"nrows", "zones", "segments"?, "tail"?}`` for one row group."""
+        group = self._groups()[index]
+        if "zones" in group:
+            return group
+        if self._synth is None:
+            self._synth = [dict() for _ in range(self.num_groups)]
+        if not self._synth[index]:
+            frame = self.read_group(index)
+            data = {k: np.asarray(v) for k, v in frame.columns.items()}
+            valid = {k: np.asarray(v) for k, v in frame.valid.items()}
+            meta = {"nrows": frame.nrows}
+            meta.update(_group_aux(data, valid, self.tables, 0, frame.nrows))
+            self._synth[index] = meta
+        return self._synth[index]
+
+    def group_nbytes(self, index: int, columns: Iterable[str] | None = None
+                     ) -> int:
+        """On-disk bytes of one group restricted to ``columns`` (data +
+        validity bitmap extents — what a projected read actually touches)."""
+        group = self._groups()[index]
+        want = set(columns) if columns is not None else None
+        total = 0
+        for name, ext in group["columns"].items():
+            if want is not None and name not in want:
+                continue
+            total += ext["nbytes"] + ext.get("valid_nbytes", 0)
+        return total

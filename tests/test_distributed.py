@@ -150,3 +150,45 @@ assert dict(m.shape) == {"data": 3, "model": 2}
 print("OK")
 """)
     assert out.startswith("OK")
+
+
+def test_sharded_pruned_query_matches_filter_then_mine():
+    """distributed.query: zone-map-pruned scan sharded over 8 devices ==
+    eager filter-then-mine, bitwise — ghost rows carry the halo across
+    skipped row groups, the psum merge is the kernel's merge."""
+    out = run_child("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import numpy as np
+from repro.core import CASE, engine, ops
+from repro.core.dfg import dfg_kernel
+from repro.core.discovery import discovery_kernel
+from repro.data import synthetic
+from repro.storage import edf
+from repro.query import col, scan
+from repro.distributed.query import (query_sharded_dfg_host,
+                                     query_sharded_discovery_host)
+
+frame, tables = synthetic.generate(num_cases=3000, num_activities=11, seed=4)
+d = tempfile.mkdtemp()
+p = os.path.join(d, "q.edf")
+edf.write(p, frame, tables, row_group_rows=1111)
+plan = scan(p).filter(col(CASE).between(500, 900))
+c = frame[CASE]
+ff = ops.proj(frame, (c >= 500) & (c <= 900))
+ref = engine.run_single(dfg_kernel(11), ff)
+for shards in (1, 2, 4, 8):
+    got, rep = query_sharded_dfg_host(plan, 11, shards)
+    assert rep.groups_skipped > 0
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(got, nm)) == np.asarray(getattr(ref, nm))).all(), (shards, nm)
+refd = engine.run_single(discovery_kernel(11), ff)
+for shards in (2, 8):
+    gotd, repd = query_sharded_discovery_host(plan, 11, shards)
+    assert (np.asarray(gotd.l2_counts) == np.asarray(refd.l2_counts)).all()
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(gotd.dfg, nm)) == np.asarray(getattr(refd.dfg, nm))).all(), (shards, nm)
+print("OK")
+""")
+    assert out.startswith("OK")

@@ -1,0 +1,433 @@
+"""Lazy query subsystem: zone-map pushdown, pruned-scan parity, EDFV0003.
+
+The load-bearing invariant: for every supported predicate,
+``execute(plan, mine=K)`` over an EDF file is **bitwise equal** to
+``K(filter(read(path)))`` — while a selective predicate provably reads
+fewer bytes (skip ratio > 0, asserted against the file_sizes accounting).
+Plus the satellite regressions: ``filter_time_range`` validity,
+``file_sizes`` totals, most-common-activity tie-breaking, filter
+composition under both segment backends.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ACTIVITY, CASE, TIMESTAMP, ChunkedEventFrame,
+                        EventFrame, backend, engine, filtering, ops,
+                        run_streaming)
+from repro.core.dfg import dfg_kernel
+from repro.core.discovery import discovery_kernel
+from repro.core.performance import eventually_follows_kernel
+from repro.core.stats import (activity_counts_kernel, case_durations_kernel,
+                              case_sizes_kernel, sojourn_times_kernel)
+from repro.core.variants import variants_kernel
+from repro.data import synthetic
+from repro.query import (case_size, cases_containing, col, compile_plan,
+                         execute, execute_frame, pruned_source, scan)
+from repro.storage import edf
+
+
+@pytest.fixture(scope="module")
+def log(tmp_path_factory):
+    """One v3 file + the loaded whole frame, shared by the parity tests."""
+    frame, tables = synthetic.generate(num_cases=300, num_activities=8,
+                                       seed=21)
+    path = str(tmp_path_factory.mktemp("q") / "log.edf")
+    edf.write(path, frame, tables, row_group_rows=199)
+    whole, _ = edf.read(path)
+    ncases = compile_plan(scan(path)).num_cases
+    return path, whole, ncases
+
+
+def _assert_tree_equal(a, b, msg=""):
+    import jax
+
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=msg)
+
+
+# --------------------------------------------------------------- EDFV0003
+def test_v3_header_zones_segments_tail(tmp_path):
+    frame = EventFrame.from_numpy(
+        {CASE: np.array([0, 0, 1, 1, 2], np.int32),
+         ACTIVITY: np.array([3, 1, 1, 2, 0], np.int32),
+         TIMESTAMP: np.array([1., 2., 3., 4., 5.], np.float32)},
+        {TIMESTAMP: np.array([True, False, True, True, True])})
+    p = str(tmp_path / "z.edf")
+    header = edf.write(p, frame, {ACTIVITY: list("abcd")}, row_group_rows=3)
+    assert header["version"] == 3
+    with open(p, "rb") as f:
+        assert f.read(8) == edf.MAGIC_V3
+    g0, g1 = header["groups"]
+    assert g0["segments"] == 2 and g1["segments"] == 2
+    z0 = g0["zones"]
+    assert z0[ACTIVITY]["min"] == 1 and z0[ACTIVITY]["max"] == 3
+    assert z0[TIMESTAMP]["nulls"] == 1
+    assert g1["zones"][TIMESTAMP]["nulls"] == 0
+    bits = np.unpackbits(np.frombuffer(
+        bytes.fromhex(z0[ACTIVITY]["bits"]), np.uint8))
+    np.testing.assert_array_equal(bits[:4], [False, True, False, True])
+    assert g0["tail"]["values"][CASE] == 1
+    assert g1["tail"]["values"][ACTIVITY] == 0
+    assert g0["tail"]["valid"][TIMESTAMP] is True
+    # the file still round-trips through every reader entry point
+    f2, t2 = edf.read(p)
+    for k in frame.names:
+        np.testing.assert_array_equal(np.asarray(frame[k]), np.asarray(f2[k]))
+    np.testing.assert_array_equal(np.asarray(frame.valid[TIMESTAMP]),
+                                  np.asarray(f2.valid[TIMESTAMP]))
+    assert [fr.nrows for fr, _ in edf.read_streaming(p)] == [3, 2]
+
+
+@pytest.mark.parametrize("version", [1, 2, 3])
+def test_file_sizes_total_equals_getsize(tmp_path, version):
+    """Satellite: totals must equal the bytes on disk, with a per-group
+    breakdown whose nbytes tile the data section."""
+    frame, tables = synthetic.generate(num_cases=80, num_activities=5, seed=2)
+    p = str(tmp_path / f"s{version}.edf")
+    kw = {"row_group_rows": 137} if version >= 2 else {}
+    edf.write(p, frame, tables, version=version, **kw)
+    sizes = edf.file_sizes(p)
+    assert sizes["total"] == os.path.getsize(p)
+    assert sizes["header"] > 0
+    groups = sizes["groups"]
+    assert len(groups) == edf.num_row_groups(p)
+    assert sum(g["nbytes"] for g in groups) == sizes["total"] - sizes["header"]
+    assert sum(g["nrows"] for g in groups) == frame.nrows
+    # per-group per-column bytes agree with the reader's accounting
+    reader = edf.EDFReader(p)
+    for i, g in enumerate(groups):
+        assert g["nbytes"] == reader.group_nbytes(i)
+        assert reader.group_nbytes(i, [CASE]) == g["columns"][CASE]
+
+
+def test_reader_synthesizes_metadata_for_v2(tmp_path):
+    frame, tables = synthetic.generate(num_cases=60, num_activities=6, seed=5)
+    p = str(tmp_path / "v2.edf")
+    edf.write(p, frame, tables, row_group_rows=101, version=2)
+    reader = edf.EDFReader(p)
+    meta = reader.group_meta(0)
+    assert {"zones", "segments", "tail"} <= set(meta)
+    case0 = np.asarray(frame[CASE])[:101]
+    assert meta["zones"][CASE]["min"] == int(case0.min())
+    assert meta["segments"] == len(np.unique(case0))
+    assert meta["tail"]["values"][CASE] == int(case0[-1])
+
+
+# -------------------------------------------------------- pruning parity
+def _reference(whole, ncases, name):
+    """The eager filter chain each plan's executor must match bitwise."""
+    ts_lo, ts_hi = 3e5, 7e5
+    if name == "isin":
+        return filtering.filter_attr_values(whole, ACTIVITY, [2, 5])
+    if name == "not_isin":
+        return filtering.filter_attr_values(whole, ACTIVITY, [2, 5],
+                                            keep=False)
+    if name == "eq_case_band":
+        c = whole[CASE]
+        return ops.proj(whole, (c >= 90) & (c <= 140))
+    if name == "time_range":
+        return filtering.filter_time_range(whole, TIMESTAMP, ts_lo, ts_hi)
+    if name == "bool_combo":
+        c, a = whole[CASE], whole[ACTIVITY]
+        return ops.proj(whole, ((c <= 60) | (c >= 250)) & ~(a == 3))
+    if name == "contains":
+        return filtering.filter_cases_containing(whole, 4, ncases)
+    if name == "case_size":
+        return filtering.filter_case_size(whole, 3, 7, ncases)
+    if name == "chain":
+        f = filtering.filter_attr_values(whole, ACTIVITY, [1, 2, 4, 6])
+        f = filtering.filter_cases_containing(f, 4, ncases)
+        return filtering.filter_time_range(f, TIMESTAMP, ts_lo, ts_hi)
+    raise KeyError(name)
+
+
+def _plan(path, name):
+    ts_lo, ts_hi = 3e5, 7e5
+    p = scan(path)
+    if name == "isin":
+        return p.filter(col(ACTIVITY).isin([2, 5]))
+    if name == "not_isin":
+        return p.filter(~col(ACTIVITY).isin([2, 5]))
+    if name == "eq_case_band":
+        return p.filter((col(CASE) >= 90) & (col(CASE) <= 140))
+    if name == "time_range":
+        return p.filter(col(TIMESTAMP).between(ts_lo, ts_hi))
+    if name == "bool_combo":
+        return p.filter(((col(CASE) <= 60) | (col(CASE) >= 250))
+                        & ~(col(ACTIVITY) == 3))
+    if name == "contains":
+        return p.filter(cases_containing(4))
+    if name == "case_size":
+        return p.filter(case_size(3, 7))
+    if name == "chain":
+        return (p.filter(col(ACTIVITY).isin([1, 2, 4, 6]))
+                .filter(cases_containing(4))
+                .filter(col(TIMESTAMP).between(ts_lo, ts_hi)))
+    raise KeyError(name)
+
+
+PREDICATES = ["isin", "not_isin", "eq_case_band", "time_range", "bool_combo",
+              "contains", "case_size", "chain"]
+
+
+@pytest.mark.parametrize("pred", PREDICATES)
+def test_execute_matches_filter_then_mine(log, pred):
+    path, whole, ncases = log
+    ref_frame = _reference(whole, ncases, pred)
+    plan = _plan(path, pred)
+    kernels = {
+        "dfg": dfg_kernel(8),
+        "acts": activity_counts_kernel(8),
+        "sizes": case_sizes_kernel(ncases),
+        "durs": case_durations_kernel(ncases),
+        "sojourn": sojourn_times_kernel(8),
+        "efg": eventually_follows_kernel(8),
+        "discovery": discovery_kernel(8),
+        "variants": variants_kernel(ncases),
+    }
+    for kname, kernel in kernels.items():
+        got, report = execute(plan, mine=kernel)
+        ref = engine.run_single(kernel, ref_frame)
+        _assert_tree_equal(got, ref, f"{pred}/{kname}")
+        # pruning never over-reads relative to the full scan
+        assert report.bytes_read <= report.bytes_total, (pred, kname)
+
+
+def test_selective_predicate_skips_bytes(log):
+    """Zone-map parity proof: the pruned scan reads strictly fewer bytes
+    than the full scan on a selective predicate, same bitwise result."""
+    path, whole, ncases = log
+    plan = scan(path).filter(col(CASE).between(90, 140))
+    pruned, rep = execute(plan, mine=dfg_kernel(8))
+    full, rep_full = execute(plan, mine=dfg_kernel(8), prune=False)
+    _assert_tree_equal(pruned, full, "pruned vs full")
+    assert rep.groups_skipped > 0
+    assert rep_full.groups_skipped == 0
+    assert rep.bytes_read < rep_full.bytes_read
+    assert rep.bytes_total == rep_full.bytes_read  # full scan == every byte
+    assert 0.0 < rep.skip_ratio <= 1.0
+    assert rep.bytes_saved_ratio > 0.0
+
+
+def test_refuted_everything_yields_empty_result(log):
+    path, whole, ncases = log
+    plan = scan(path).filter(col(ACTIVITY) >= 100)   # impossible
+    got, rep = execute(plan, mine=dfg_kernel(8))
+    assert rep.groups_read == 0 and rep.bytes_read == 0
+    assert int(np.asarray(got.counts).sum()) == 0
+    assert int(np.asarray(got.starts).sum()) == 0
+
+
+def test_mask_exact_false_reads_everything(log):
+    """Variants hash masked rows — the planner must not skip groups."""
+    path, whole, ncases = log
+    plan = scan(path).filter(col(CASE).between(90, 140))
+    got, rep = execute(plan, mine=variants_kernel(ncases))
+    assert rep.groups_skipped == 0
+    c = whole[CASE]
+    ref_frame = ops.proj(whole, (c >= 90) & (c <= 140))
+    _assert_tree_equal(got, engine.run_single(variants_kernel(ncases),
+                                              ref_frame))
+
+
+def test_unpruned_stream_masks_refuted_groups(log):
+    """Regression: a group the zone maps refute can still be *read* (a
+    mask_exact=False consumer forces a full read) — its refuting
+    predicate must then be applied as a residual mask, not dropped."""
+    path, whole, ncases = log
+    plan = scan(path).filter(col(CASE).between(90, 140))
+    src, rep = pruned_source(plan, mask_exact=False)
+    assert rep.groups_skipped == 0
+    got = run_streaming(dfg_kernel(8), src)
+    c = whole[CASE]
+    ref = engine.run_single(dfg_kernel(8),
+                            ops.proj(whole, (c >= 90) & (c <= 140)))
+    _assert_tree_equal(got, ref, "mask_exact=False stream")
+    # composed kernel containing variants propagates mask_exact=False
+    comp = engine.compose({"v": variants_kernel(ncases), "d": dfg_kernel(8)})
+    assert not comp.mask_exact
+    got2, rep2 = execute(plan, mine=comp)
+    ref2 = engine.run_single(comp, ops.proj(whole, (c >= 90) & (c <= 140)))
+    _assert_tree_equal(got2, ref2, "compose(variants, dfg)")
+    assert rep2.groups_skipped == 0
+
+
+def test_cases_containing_custom_column(log):
+    """Regression: cases_containing(value, column=...) must test the named
+    column, read it in phase one, and prune by its zones."""
+    path, whole, ncases = log
+    got, rep = execute(scan(path).filter(cases_containing(500, column="attr0")),
+                       mine=dfg_kernel(8))
+    case = np.asarray(whole[CASE])
+    hit_cases = np.unique(case[np.asarray(whole["attr0"]) == 500])
+    ref = engine.run_single(dfg_kernel(8),
+                            ops.proj(whole, jnp.asarray(np.isin(case, hit_cases))))
+    _assert_tree_equal(got, ref, "contains on attr0")
+
+
+def test_execute_frame_all_groups_refuted(log):
+    path, whole, ncases = log
+    frame, tables, rep = execute_frame(
+        scan(path).filter(col(ACTIVITY) >= 100).project([CASE]))
+    assert frame.nrows == 0 and set(frame.names) == {CASE}
+    assert ACTIVITY not in tables      # projection filters the tables too
+    assert rep.groups_read == 0
+
+
+def test_projection_pushdown_reads_fewer_columns(log):
+    path, whole, ncases = log
+    plan = scan(path).filter(col(ACTIVITY).isin([2])).project(
+        [CASE, ACTIVITY])
+    _, rep = execute(plan, mine=dfg_kernel(8))
+    reader = edf.EDFReader(path)
+    all_cols = sum(reader.group_nbytes(g) for g in range(reader.num_groups))
+    assert rep.bytes_total < all_cols          # projected scan < full width
+    assert set(rep.columns) == {CASE, ACTIVITY}
+
+
+def test_execute_frame_matches_compact(log):
+    path, whole, ncases = log
+    plan = (scan(path).filter(col(CASE).between(90, 140))
+            .project([CASE, ACTIVITY]))
+    frame, tables, rep = execute_frame(plan)
+    c = whole[CASE]
+    ref = ops.proj(whole, (c >= 90) & (c <= 140)).compact()
+    np.testing.assert_array_equal(np.asarray(frame[CASE]), np.asarray(ref[CASE]))
+    np.testing.assert_array_equal(np.asarray(frame[ACTIVITY]),
+                                  np.asarray(ref[ACTIVITY]))
+    assert set(frame.names) == {CASE, ACTIVITY}
+    assert rep.groups_skipped > 0
+    assert ACTIVITY in tables
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_older_versions_prune_via_synthesized_zones(tmp_path, log, version):
+    path, whole, ncases = log
+    p = str(tmp_path / f"old{version}.edf")
+    kw = {"row_group_rows": 199} if version == 2 else {}
+    edf.write(p, whole, edf.EDFReader(path).tables, version=version, **kw)
+    plan = scan(p).filter(col(CASE).between(90, 140))
+    got, rep = execute(plan, mine=dfg_kernel(8))
+    c = whole[CASE]
+    ref = engine.run_single(dfg_kernel(8),
+                            ops.proj(whole, (c >= 90) & (c <= 140)))
+    _assert_tree_equal(got, ref, f"v{version}")
+    if version == 2:
+        assert rep.groups_skipped > 0      # zones synthesized on open
+
+
+def test_pruned_source_feeds_streaming_engine(log):
+    path, whole, ncases = log
+    src, rep = pruned_source(scan(path).filter(col(CASE) <= 75))
+    got = run_streaming(dfg_kernel(8), src)
+    ref = engine.run_single(dfg_kernel(8), ops.proj(whole, whole[CASE] <= 75))
+    _assert_tree_equal(got, ref)
+    # re-iterable: a second pass yields the same result
+    _assert_tree_equal(run_streaming(dfg_kernel(8), src), ref)
+
+
+def test_case_predicate_accepts_decoded_activity_name(log):
+    path, whole, ncases = log
+    table = edf.EDFReader(path).tables[ACTIVITY]
+    got, _ = execute(scan(path).filter(cases_containing(table[4])),
+                     mine=dfg_kernel(8))
+    ref = engine.run_single(dfg_kernel(8),
+                            filtering.filter_cases_containing(whole, 4, ncases))
+    _assert_tree_equal(got, ref)
+
+
+def test_plan_describe_and_unknown_column(log):
+    path, _, _ = log
+    plan = scan(path).filter(col(ACTIVITY) == 1).project([CASE, ACTIVITY])
+    assert "scan" in plan.describe() and "project" in plan.describe()
+    with pytest.raises(KeyError):
+        execute(scan(path).filter(col("nope") == 1), mine=dfg_kernel(8))
+    with pytest.raises(TypeError):
+        scan(path).filter("not a predicate")
+
+
+def test_float32_constant_never_refutes_matching_rows(tmp_path):
+    """Regression: zone proofs compare in binary64, masks in the column's
+    float32 — a constant like 0.1 must be snapped to the column dtype so
+    a proof can never skip a group whose rows the mask would keep."""
+    ts = np.array([np.float32(0.1), 0.5, 0.9], np.float32)
+    frame = EventFrame.from_numpy({
+        CASE: np.arange(3, dtype=np.int32),
+        ACTIVITY: np.zeros(3, np.int32), TIMESTAMP: ts})
+    p = str(tmp_path / "f32.edf")
+    edf.write(p, frame, {ACTIVITY: ["a"]}, row_group_rows=1)
+    for pred in (col(TIMESTAMP) <= 0.1, col(TIMESTAMP).between(0.05, 0.1),
+                 col(TIMESTAMP) == 0.1):
+        got, rep = execute(scan(p).filter(pred), mine=activity_counts_kernel(1))
+        full, _ = execute(scan(p).filter(pred), mine=activity_counts_kernel(1),
+                          prune=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+        assert int(np.asarray(got)[0]) == 1, pred   # float32(0.1) row kept
+
+
+# ------------------------------------------------------ satellite fixes
+def test_filter_time_range_respects_validity():
+    """Regression: an epsilon cell whose sentinel falls inside [lo, hi]
+    must not survive the range filter."""
+    frame = EventFrame.from_numpy(
+        {CASE: np.zeros(3, np.int32),
+         ACTIVITY: np.arange(3, dtype=np.int32),
+         TIMESTAMP: np.array([1.0, 5.0, 9.0], np.float32)},
+        {TIMESTAMP: np.array([True, False, True])})
+    out = filtering.filter_time_range(frame, TIMESTAMP, 4.0, 6.0)
+    np.testing.assert_array_equal(np.asarray(out.rows_valid()),
+                                  [False, False, False])
+    out2 = filtering.filter_time_range(frame, TIMESTAMP, 0.0, 10.0)
+    np.testing.assert_array_equal(np.asarray(out2.rows_valid()),
+                                  [True, False, True])
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_streaming_most_common_activity_tie_break(impl):
+    """argmax tie-breaking: the lowest activity id wins, streaming ==
+    whole-log, under both segment backends."""
+    with backend.use_backend(impl):
+        acts = np.array([4, 1, 4, 1, 2, 1, 4, 0], np.int32)  # 1 and 4 tie
+        frame = EventFrame.from_numpy({
+            CASE: np.zeros(len(acts), np.int32), ACTIVITY: acts,
+            TIMESTAMP: np.arange(len(acts), dtype=np.float32)})
+        whole = int(filtering.most_common_activity(frame, 6))
+        for cuts in ([3], [1, 2, 5], list(range(1, len(acts)))):
+            src = ChunkedEventFrame.from_cuts(frame, cuts)
+            assert filtering.streaming_most_common_activity(src, 6) == whole
+        assert whole == 1          # ties resolve to the smallest id
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_filter_composition_projection_chunk_invariance(impl):
+    """filter_attr_values o filter_case_size on a column-projected frame:
+    any chunking of the streamed two-phase pipeline matches the whole-log
+    chain bitwise, on both segment backends."""
+    with backend.use_backend(impl):
+        frame, tables = synthetic.generate(num_cases=40, num_activities=6,
+                                           seed=17)
+        proj = frame.select([CASE, ACTIVITY])
+        nc = 40
+        ref = filtering.filter_case_size(
+            filtering.filter_attr_values(proj, ACTIVITY, [1, 3, 5]),
+            2, 6, nc)
+        rng = np.random.default_rng(0)
+        for trial in range(3):
+            cuts = sorted(rng.integers(1, proj.nrows, size=5).tolist())
+            base = ChunkedEventFrame.from_cuts(proj, cuts)
+            masked = ChunkedEventFrame(
+                lambda: (filtering.filter_attr_values(ch, ACTIVITY, [1, 3, 5])
+                         for ch in base),
+                num_chunks=base.num_chunks)
+            keep = filtering.streaming_case_size_keep(masked, 2, 6, nc)
+            got = np.concatenate(
+                [np.asarray(ch.rows_valid()) for ch in
+                 filtering.stream_apply_case_mask(masked, keep)])
+            np.testing.assert_array_equal(got, np.asarray(ref.rows_valid()),
+                                          err_msg=f"{impl}/cuts={cuts}")
