@@ -11,7 +11,7 @@ import jax
 
 from repro.core import ClassicEventLog, dfg
 from repro.core.eventframe import ACTIVITY, CASE
-from repro.core import filtering
+from repro.core import filtering, ops
 from repro.data import synthetic
 
 from .common import emit, timeit
@@ -37,7 +37,8 @@ def run(sizes=(2_000, 8_000, 32_000, 128_000)):
             lambda: log.filter_events(ACTIVITY, acts), repeat=1))
         ids = np.asarray([tables[ACTIVITY].index(a) for a in acts])
         t_filter_frame.append(timeit(lambda: jax.block_until_ready(
-            filtering.filter_attr_values(frame, ACTIVITY, ids).rows_valid())))
+            ops.proj(frame, filtering.isin_mask(
+                frame[ACTIVITY], ids)).rows_valid())))
         t_dfg_classic.append(timeit(lambda: log.dfg_iterative(), repeat=1))
         t_dfg_frame.append(timeit(lambda: jax.block_until_ready(
             dfg(frame, 26, method="shift").counts)))

@@ -1,0 +1,191 @@
+"""Dataset-facade benchmark: multi-log pruning, union overhead, dispatch.
+
+Three measurements over one synthetic log written both as a single EDF
+file and as N monthly partitions:
+
+* **selectivity sweep** — a case-band filter over the multi-file dataset
+  at decreasing selectivity, engine=streaming vs engine=eager; asserts
+  streaming == eager bitwise at every point and (smoke) that a selective
+  multi-log query reads < 20% of the dataset's bytes;
+* **1-vs-N overhead** — the same unselective whole-log mine over one file
+  vs N files (the cost of per-file compile + stream chaining);
+* **dispatch crossover** — what engine="auto" picks across the sweep and
+  how its latency compares to the best of eager/streaming (the cost
+  model's regret).
+
+Writes the ``BENCH_dataset.json`` trajectory artifact.
+
+Standalone:  python benchmarks/bench_dataset.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only dataset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # script mode
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+SELECTIVITIES = (0.02, 0.10, 0.30, 1.0)
+
+
+def run(num_cases: int = 50_000, num_activities: int = 12, seed: int = 23,
+        num_files: int = 6, groups_per_file: int = 8,
+        out_json: str | None = "BENCH_dataset.json", smoke: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.core import CASE
+    from repro.data import synthetic
+    from repro.query import col
+    from repro.storage import edf
+
+    a = num_activities
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=a, seed=seed)
+    n = frame.nrows
+    emit("dataset/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n}")
+
+    d = tempfile.mkdtemp()
+    case = np.asarray(frame[CASE])
+    # one file vs N monthly partitions of the same sorted log
+    single = os.path.join(d, "whole.edf")
+    edf.write(single, frame, tables, codec="zlib1",
+              row_group_rows=max(1, n // (num_files * groups_per_file)))
+    paths = []
+    per = -(-num_cases // num_files)
+    for m in range(num_files):
+        lo = int(np.searchsorted(case, m * per))
+        hi = int(np.searchsorted(case, (m + 1) * per))
+        if lo == hi:
+            continue
+        p = os.path.join(d, f"month_{m:02d}.edf")
+        edf.write(p, frame.take(jnp.arange(lo, hi)), tables, codec="zlib1",
+                  row_group_rows=max(1, (hi - lo) // groups_per_file))
+        paths.append(p)
+    total_bytes = sum(os.path.getsize(p) for p in paths)
+    emit("dataset/write_partitions", 0.0,
+         f"files={len(paths)};bytes={total_bytes}")
+
+    ds = repro.open(paths)
+
+    # ------------------------------------------------- selectivity sweep
+    sweep = []
+    for sel in SELECTIVITIES:
+        hi = max(0, int(num_cases * sel) - 1)
+        flt = ds.filter(col(CASE).between(0, hi))
+        r_stream = flt.collect("dfg", engine="streaming")
+        us_stream = timeit(lambda: flt.collect("dfg", engine="streaming"))
+        r_eager = flt.collect("dfg", engine="eager")
+        us_eager = timeit(lambda: flt.collect("dfg", engine="eager"))
+        r_auto = flt.collect("dfg")
+        us_auto = timeit(lambda: flt.collect("dfg"))
+        for nm in ("counts", "starts", "ends"):
+            got = np.asarray(getattr(r_stream.result, nm))
+            ref = np.asarray(getattr(r_eager.result, nm))
+            assert (got == ref).all(), f"streaming != eager at sel={sel}:{nm}"
+        rep = r_stream.report
+        point = {
+            "selectivity": sel,
+            "groups_total": rep.groups_total,
+            "groups_skipped": rep.groups_skipped,
+            "bytes_read": rep.bytes_read,
+            "bytes_total": rep.bytes_total,
+            "read_fraction": rep.bytes_read / max(rep.bytes_total, 1),
+            "us_streaming": us_stream * 1e6,
+            "us_eager": us_eager * 1e6,
+            "us_auto": us_auto * 1e6,
+            "auto_engine": r_auto.engine,
+            "auto_regret": us_auto / max(min(us_stream, us_eager), 1e-9),
+        }
+        sweep.append(point)
+        emit(f"dataset/sweep_sel={sel}", us_stream,
+             f"read={rep.bytes_read}/{rep.bytes_total};"
+             f"auto={r_auto.engine};eager_us={us_eager*1e6:.0f}")
+
+    # a selective multi-log query must beat a full read at every size;
+    # the hard < 20%-of-bytes acceptance gate is the smoke configuration
+    # (fixed sizes — a full-scale run may shape groups differently)
+    best = min(p["read_fraction"] for p in sweep)
+    assert best < 1.0, "pruning never skipped a byte on a selective query"
+    if smoke:
+        assert best < 0.20, \
+            f"selective multi-log query read {best:.1%} of bytes (want <20%)"
+
+    # ------------------------------------------------- 1-vs-N overhead
+    one = repro.open(single)
+    us_one = timeit(lambda: one.collect("dfg", engine="streaming"))
+    us_many = timeit(lambda: ds.collect("dfg", engine="streaming"))
+    r1 = one.collect("dfg", engine="streaming").result
+    rN = ds.collect("dfg", engine="streaming").result
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(r1, nm))
+                == np.asarray(getattr(rN, nm))).all(), f"1 vs N file:{nm}"
+    emit("dataset/one_file_full_mine", us_one, f"files=1")
+    emit("dataset/n_file_full_mine", us_many,
+         f"files={len(paths)};overhead={us_many/max(us_one,1e-9):.2f}x")
+
+    # ------------------------------------------------- dispatch crossover
+    crossover = None
+    for p in sweep:
+        want = "streaming" if p["us_streaming"] <= p["us_eager"] else "eager"
+        if crossover is None and want == "eager":
+            crossover = p["selectivity"]
+        emit(f"dataset/dispatch_sel={p['selectivity']}", p["us_auto"] / 1e6,
+             f"auto={p['auto_engine']};best={want};"
+             f"regret={p['auto_regret']:.2f}x")
+
+    if out_json:
+        artifact = {
+            "bench": "dataset",
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "backend": jax.default_backend(),
+            "config": {"num_cases": num_cases, "num_activities": a,
+                       "events": n, "files": len(paths),
+                       "bytes_total": total_bytes},
+            "sweep": sweep,
+            "min_read_fraction": best,
+            "one_vs_n": {"us_one_file": us_one * 1e6,
+                         "us_n_files": us_many * 1e6,
+                         "overhead": us_many / max(us_one, 1e-9)},
+            "eager_streaming_crossover_selectivity": crossover,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"dataset/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; asserts <20%% bytes read + parity")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_dataset.json")
+    args = ap.parse_args()
+    header()
+    cases = 200_000 if args.full else (15_000 if args.smoke else 50_000)
+    sweep = run(num_cases=cases, out_json=args.out, smoke=args.smoke)
+    if args.smoke:
+        print(f"dataset/SMOKE_OK,0.0,min_read_fraction="
+              f"{min(p['read_fraction'] for p in sweep):.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,7 @@ def run(num_cases: int = 50_000, num_activities: int = 16, seed: int = 11,
     from repro.core import CASE, engine, ops
     from repro.core.dfg import dfg_kernel
     from repro.data import synthetic
-    from repro.query import col, execute, scan
+    from repro.query import Plan, col, execute
     from repro.storage import edf
 
     a = num_activities
@@ -66,7 +66,7 @@ def run(num_cases: int = 50_000, num_activities: int = 16, seed: int = 11,
     sweep = []
     for sel in SELECTIVITIES:
         hi = max(0, int(num_cases * sel) - 1)
-        plan = scan(path).filter(col(CASE).between(0, hi))
+        plan = Plan(path).filter(col(CASE).between(0, hi))
 
         pruned, rep = execute(plan, mine=kernel)
         us_pruned = timeit(lambda: execute(plan, mine=kernel))

@@ -12,7 +12,7 @@ import jax
 
 from repro.core import dfg
 from repro.core.eventframe import ACTIVITY, CASE
-from repro.core import filtering
+from repro.core import filtering, ops
 from repro.data import synthetic
 from repro.storage import edf
 
@@ -45,7 +45,8 @@ def run(scale=1.0):
         emit(f"table5/{name}/load_2col", t, f"events_per_s={frame.nrows/t:.0f}")
 
         top = filtering.most_common_activity(frame, a)
-        f = jax.jit(lambda fr: filtering.filter_attr_values(fr, ACTIVITY, top[None]).rows_valid().sum())
+        f = jax.jit(lambda fr: ops.proj(
+            fr, filtering.isin_mask(fr[ACTIVITY], top[None])).rows_valid().sum())
         t = timeit(lambda: f(frame).block_until_ready())
         emit(f"table5/{name}/filter_top_activity", t,
              f"events_per_s={frame.nrows/t:.0f}")

@@ -13,7 +13,7 @@ import jax
 
 from repro.core import dfg
 from repro.core.eventframe import ACTIVITY, CASE
-from repro.core import filtering
+from repro.core import filtering, ops
 from repro.data import synthetic
 from repro.storage import edf
 
@@ -37,7 +37,8 @@ def run(scale=0.1, levels=(1, 2, 3, 4, 5)):
         emit(f"table6/L{lvl}/load_2col", t, f"events_per_s={n/t:.0f}")
         top = filtering.most_common_activity(frame, 26)
         t = timeit(lambda: jax.block_until_ready(
-            filtering.filter_attr_values(frame, ACTIVITY, top[None]).rows_valid().sum()))
+            ops.proj(frame, filtering.isin_mask(
+                frame[ACTIVITY], top[None])).rows_valid().sum()))
         emit(f"table6/L{lvl}/filter", t, f"events_per_s={n/t:.0f}")
         t = timeit(lambda: jax.block_until_ready(dfg(frame, 26, method='shift').counts))
         emit(f"table6/L{lvl}/dfg", t, f"events_per_s={n/t:.0f}")

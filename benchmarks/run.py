@@ -8,10 +8,10 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_complexity, bench_discovery, bench_distributed_dfg,
-               bench_kernels, bench_query, bench_segment_ops,
-               bench_streaming, bench_table1_loading, bench_table2_sizes,
-               bench_table5_ops, bench_table6_biglogs)
+from . import (bench_complexity, bench_dataset, bench_discovery,
+               bench_distributed_dfg, bench_kernels, bench_query,
+               bench_segment_ops, bench_streaming, bench_table1_loading,
+               bench_table2_sizes, bench_table5_ops, bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -40,6 +40,11 @@ SUITES = {
     "query": lambda full: bench_query.run(
         num_cases=200_000 if full else 50_000,
         out_json="BENCH_query.json"),
+    # Dataset facade: multi-log pruning, 1-vs-N union overhead, and the
+    # engine-dispatch crossover; writes BENCH_dataset.json
+    "dataset": lambda full: bench_dataset.run(
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_dataset.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

@@ -1,13 +1,14 @@
-"""Quickstart: the paper's pipeline end to end on one page.
+"""Quickstart: the paper's pipeline end to end on one page — Dataset API.
 
-generate log -> columnar EDF (Parquet role) -> load 2 columns -> filter ->
-DFG (shifting-and-counting, Fig. 3) -> discover models (IMDF-style cut,
-alpha miner, heuristics miner — all finalize steps of the same columnar
-state) -> conformance replay -> lazy pushdown query (zone maps skip row
-groups before any I/O).
+generate log -> columnar EDF (Parquet role) -> repro.open() -> fluent
+filters (pushed down to zone maps: cold row groups are never read) ->
+DFG / stats / alpha miner / heuristics miner / conformance replay, each a
+terminal verb that compiles to the same chunk-kernel engine whatever the
+execution engine (eager | streaming | sharded | auto).
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--cases N]
 """
+import argparse
 import os
 import sys
 import tempfile
@@ -17,77 +18,79 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ACTIVITY, CASE, conformance, dfg, discovery, filtering
+import repro
+from repro import col
+from repro.core import ACTIVITY, CASE, conformance
 from repro.data import synthetic
 from repro.storage import edf
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cases", type=int, default=100_000)
+    args = ap.parse_args()
+
     t0 = time.time()
-    frame, tables = synthetic.generate(num_cases=100_000, num_activities=12, seed=0)
-    print(f"generated {frame.nrows:,} events / 100k cases in {time.time()-t0:.2f}s")
+    frame, tables = synthetic.generate(num_cases=args.cases,
+                                       num_activities=12, seed=0)
+    print(f"generated {frame.nrows:,} events / {args.cases:,} cases "
+          f"in {time.time()-t0:.2f}s")
 
     d = tempfile.mkdtemp()
     path = os.path.join(d, "log.edf")
-    edf.write(path, frame, tables, codec="zlib1")
+    edf.write(path, frame, tables, codec="zlib1",
+              row_group_rows=max(1, frame.nrows // 24))
     print(f"EDF on disk: {os.path.getsize(path)/2**20:.1f} MiB "
-          f"({edf.file_sizes(path)['raw']/2**20:.1f} MiB raw)")
+          f"({edf.file_sizes(path)['raw']/2**20:.1f} MiB raw, "
+          f"{edf.num_row_groups(path)} row groups + zone maps)")
+
+    # one fluent facade over every engine ------------------------------
+    ds = repro.open(path)
+    acts = ds.tables[ACTIVITY]
 
     t0 = time.time()
-    frame2, tables2 = edf.read(path, columns=[CASE, ACTIVITY])
-    print(f"loaded case+activity columns in {time.time()-t0:.3f}s "
-          f"(column projection — paper Fig. 1)")
-
-    acts = tables2[ACTIVITY]
-    t0 = time.time()
-    graph = dfg(frame2, len(acts), method="shift")
+    graph = ds.dfg()                       # engine picked by cost (auto)
     graph.counts.block_until_ready()
-    print(f"DFG (shift-and-count) in {time.time()-t0:.3f}s: "
-          f"{len(graph.edges())} edges, {int(graph.counts.sum()):,} df-pairs")
-    top = sorted(graph.edges(), key=lambda e: -e[1])[:5]
-    for (a, b), c in top:
+    print(f"DFG in {time.time()-t0:.3f}s: {len(graph.edges())} edges, "
+          f"{int(graph.counts.sum()):,} df-pairs")
+    for (a, b), c in sorted(graph.edges(), key=lambda e: -e[1])[:5]:
         print(f"   {acts[a]:>8s} -> {acts[b]:<8s} x{c:,}")
 
     model = conformance.discover_model(graph, noise_threshold=0.05)
     fit = conformance.footprint_fitness(graph, model)
     print(f"discovered model (IMDF-style 5% noise cut): fitness {float(fit):.3f}")
 
-    # alpha + heuristics miners: pure finalize over the columnar state
-    # (case + activity columns suffice — the same projected load as the DFG)
+    # alpha + heuristics miners: terminal verbs over the same state
     t0 = time.time()
-    state = discovery.discovery_state(frame2, len(acts))
-    alpha_model = discovery.discover_alpha(state.dfg)
-    net = discovery.discover_heuristics(state)
+    alpha_model = ds.alpha()
+    net = ds.heuristics()
     print(f"alpha miner in {time.time()-t0:.3f}s: {alpha_model.num_places} "
           f"places, starts={sorted(acts[i] for i in alpha_model.start_activities)}")
     n_edges = int(np.asarray(net.graph).sum())
     print(f"heuristics miner: {n_edges} dependency edges, "
-          f"fitness {float(conformance.heuristics_fitness(state.dfg, net)):.3f}, "
-          f"footprint conformance "
-          f"{float(conformance.footprint_conformance(state.dfg, alpha_model)):.3f}")
+          f"fitness {float(ds.conformance(net)):.3f}, "
+          f"alpha conformance {float(ds.conformance(alpha_model)):.3f}")
 
-    top_act = int(filtering.most_common_activity(frame2, len(acts)))
-    filtered = filtering.filter_attr_values(frame2, ACTIVITY, [top_act])
-    print(f"filter most-common activity ({acts[top_act]}): "
-          f"{int(filtered.rows_valid().sum()):,} events kept")
-
-    # lazy pushdown query: the plan's zone maps decide which row groups to
-    # read BEFORE any I/O — same DFG, a fraction of the bytes
-    path3 = os.path.join(d, "log_v3.edf")
-    edf.write(path3, frame, tables, codec="zlib1",
-              row_group_rows=frame.nrows // 24)
-    from repro.core.dfg import dfg_kernel
-    from repro.query import scan, col, execute
-
-    plan = (scan(path3)
-            .filter(col(CASE).between(10_000, 15_000))
-            .project([CASE, ACTIVITY]))
+    # pushdown filters: the zone maps decide which row groups to read
+    # BEFORE any I/O — same bitwise DFG, a fraction of the bytes
+    lo, hi = args.cases // 10, args.cases // 10 + args.cases // 20
+    sel = ds.filter(col(CASE).between(lo, hi)).project([CASE, ACTIVITY])
     t0 = time.time()
-    pruned, report = execute(plan, mine=dfg_kernel(len(acts)))
+    r = sel.collect("dfg", engine="streaming")
     print(f"pushdown query in {time.time()-t0:.3f}s: skipped "
-          f"{report.groups_skipped}/{report.groups_total} row groups, read "
-          f"{report.bytes_read/2**10:.0f} KiB of {report.bytes_total/2**10:.0f} KiB "
-          f"-> {int(pruned.counts.sum()):,} df-pairs (bitwise == filter-then-mine)")
+          f"{r.report.groups_skipped}/{r.report.groups_total} row groups, "
+          f"read {r.report.bytes_read/2**10:.0f} KiB of "
+          f"{r.report.bytes_total/2**10:.0f} KiB "
+          f"-> {int(r.result.counts.sum()):,} df-pairs "
+          f"(bitwise == filter-then-mine)")
+
+    # the cost model explains itself
+    print(sel.explain("dfg"))
+
+    top = int(np.argmax(np.asarray(ds.collect("activity_counts").result)))
+    kept = ds.filter(col(ACTIVITY) == top).to_frame()
+    print(f"filter most-common activity ({acts[top]}): "
+          f"{kept.nrows:,} events kept")
 
 
 if __name__ == "__main__":

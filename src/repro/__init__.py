@@ -1,0 +1,47 @@
+"""repro — scalable process mining on event dataframes (JAX/Pallas).
+
+The public surface is the ``Dataset`` facade::
+
+    import repro
+    from repro import col, cases_containing, case_size
+
+    ds = repro.open(["jan.edf", "feb.edf"])          # or one path, or a frame
+    graph = ds.filter(col("concept:name") == 3).dfg()
+    stats = ds.stats(engine="streaming")
+
+Everything below it stays importable directly (``repro.core`` kernels,
+``repro.query`` plans, ``repro.storage.edf`` files, ``repro.distributed``
+lowerings); the attributes here are loaded lazily so ``import repro`` is
+cheap and subprocess tests can still set JAX flags before anything
+touches a device.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "open": ("repro.dataset", "open_dataset"),
+    "open_dataset": ("repro.dataset", "open_dataset"),
+    "Dataset": ("repro.dataset", "Dataset"),
+    "CollectResult": ("repro.dataset.engines", "CollectResult"),
+    "col": ("repro.query.expr", "col"),
+    "cases_containing": ("repro.query.expr", "cases_containing"),
+    "case_size": ("repro.query.expr", "case_size"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") \
+            from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value         # cache: next access skips the import
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

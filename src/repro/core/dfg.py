@@ -187,3 +187,12 @@ def dfg(frame: EventFrame, num_activities: int, method: str = "auto") -> DFG:
     if method == "shift":
         return dfg_shift_count(frame, num_activities)
     return engine.run_single(dfg_kernel(num_activities, method), frame)
+
+
+engine.register_kernel(engine.KernelSpec(
+    "dfg",
+    make=lambda dims, method="auto": dfg_kernel(dims.num_activities, method),
+    columns=(CASE, ACTIVITY),
+    sharded_state="dfg",
+    from_sharded=lambda state, **_: state,
+    doc="directly-follows graph (counts + start/end histograms)"))

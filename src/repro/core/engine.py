@@ -72,6 +72,73 @@ class ChunkKernel:
     mask_exact: bool = True
 
 
+# ------------------------------------------------------- kernel registry
+class Dims(NamedTuple):
+    """The two capacity dimensions that size every kernel's state."""
+
+    num_activities: int
+    num_cases: int
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A terminal mining verb as *data* — the registry entry behind the
+    ``repro.dataset`` facade (and any other generic driver).
+
+    Instead of an if-chain mapping verb names to kernel factories, each
+    algorithm module registers one spec describing everything a driver
+    needs to run it over any source:
+
+    * ``make(dims, **kwargs)`` — build the :class:`ChunkKernel` (``dims``
+      carries both capacity dimensions; the factory picks the one(s) its
+      state needs);
+    * ``columns`` — the event columns the kernel's ``update`` reads (what a
+      scan must project; predicates add their own columns at plan time);
+    * ``sharded_state`` — name of the distributed driver that produces this
+      verb's mergeable state (``"dfg"`` / ``"discovery"``), or ``None`` when
+      the verb has no exact distributed lowering (order-sensitive float
+      sums, validity-blind hashes);
+    * ``from_sharded(state, **kwargs)`` — host-side finalize mapping that
+      distributed state to the verb's result (identity for DFG, the model
+      discovery step for alpha/heuristics).
+    """
+
+    name: str
+    make: Callable[..., ChunkKernel]
+    columns: tuple
+    sharded_state: str | None = None
+    from_sharded: Callable | None = None
+    doc: str = ""
+
+
+_KERNEL_SPECS: dict[str, KernelSpec] = {}
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    """Register (or replace) a terminal verb; returns the spec for chaining."""
+    _KERNEL_SPECS[spec.name] = spec
+    return spec
+
+
+def kernel_spec(name: str) -> KernelSpec:
+    """Look up a registered verb by name (KeyError lists what exists)."""
+    # algorithm modules register their specs at import time; make sure the
+    # standard set is loaded before deciding a name is unknown
+    if name not in _KERNEL_SPECS:
+        from . import dfg, discovery, performance, stats, variants  # noqa: F401
+    try:
+        return _KERNEL_SPECS[name]
+    except KeyError:
+        raise KeyError(f"no kernel spec named {name!r}; registered: "
+                       f"{sorted(_KERNEL_SPECS)}") from None
+
+
+def kernel_specs() -> dict[str, KernelSpec]:
+    """Snapshot of the registry (import the core modules to populate it)."""
+    from . import dfg, discovery, performance, stats, variants  # noqa: F401
+    return dict(_KERNEL_SPECS)
+
+
 # --------------------------------------------------------------- carries
 def init_row_carry(**extra) -> Carry:
     """The halo before the first row: ``exists=False`` masks everything."""

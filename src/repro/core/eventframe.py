@@ -146,3 +146,34 @@ class EventFrame:
 
     def to_numpy(self) -> dict[str, np.ndarray]:
         return {k: np.asarray(v) for k, v in self.columns.items()}
+
+
+def concat_frames(parts) -> EventFrame:
+    """Row-wise concatenation of same-schema frames (host-side).
+
+    Epsilon masks and the lazy ``row_valid`` projection mask concatenate
+    *separately* — folding ``row_valid`` into per-column validity would
+    change what ``rows_valid()`` means to the kernels.  A column missing
+    a part's epsilon mask contributes all-valid rows.  The single shared
+    implementation behind dataset unions, eager multi-file loads, and
+    pruned-scan materialization.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("concat_frames() needs at least one frame")
+    names = set(parts[0].names)
+    for p in parts[1:]:
+        if set(p.names) != names:
+            raise ValueError(f"concat of frames with different columns: "
+                             f"{sorted(names)} vs {sorted(p.names)}")
+    cols = {k: np.concatenate([np.asarray(p.columns[k]) for p in parts])
+            for k in parts[0].names}
+    valid_names = set().union(*(set(p.valid) for p in parts))
+    valid = {k: np.concatenate([
+        np.asarray(p.valid[k]) if k in p.valid else np.ones(p.nrows, bool)
+        for p in parts]) for k in valid_names}
+    out = EventFrame.from_numpy(cols, valid)
+    if any(p.row_valid is not None for p in parts):
+        rv = np.concatenate([np.asarray(p.rows_valid()) for p in parts])
+        out = EventFrame(out.columns, out.valid, jnp.asarray(rv))
+    return out

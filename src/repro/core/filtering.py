@@ -12,6 +12,7 @@ chunk from a carry and narrows each chunk's ``row_valid``.
 """
 from __future__ import annotations
 
+import warnings
 from functools import lru_cache, partial
 
 import jax
@@ -48,8 +49,23 @@ def time_range_mask(frame: EventFrame, name: str, lo, hi) -> jax.Array:
     return (col >= lo) & (col <= hi) & frame.cell_valid(name)
 
 
+def _warn_deprecated(old: str, verb: str) -> None:
+    """The eager ``filter_*`` entry points are deprecated shims over the
+    same masks the ``repro.dataset`` facade pushes down — behavior is
+    unchanged (bitwise), but new code should go through the facade so the
+    planner can skip I/O and pick the engine."""
+    warnings.warn(
+        f"repro.core.filtering.{old} is deprecated; use the Dataset facade: "
+        f"repro.open(...).{verb}", DeprecationWarning, stacklevel=3)
+
+
 def filter_attr_values(frame: EventFrame, name: str, values, keep: bool = True) -> EventFrame:
-    """Keep (or drop) events whose ``name`` is in ``values`` (event-level)."""
+    """Keep (or drop) events whose ``name`` is in ``values`` (event-level).
+
+    .. deprecated:: use ``repro.open(...).filter(col(name).isin(values))``.
+    """
+    _warn_deprecated("filter_attr_values",
+                     "filter(col(name).isin(values))  # ~ for keep=False")
     m = isin_mask(frame[name], values)
     return ops.proj(frame, m if keep else ~m)
 
@@ -61,7 +77,10 @@ def filter_time_range(frame: EventFrame, name: str, lo, hi) -> EventFrame:
     sentinel value of a missing timestamp happening to fall inside
     ``[lo, hi]`` must not resurrect the row, so the range mask is ANDed
     with ``cell_valid`` (column epsilon mask + row projection mask).
+
+    .. deprecated:: use ``repro.open(...).filter(col(name).between(lo, hi))``.
     """
+    _warn_deprecated("filter_time_range", "filter(col(name).between(lo, hi))")
     return ops.proj(frame, time_range_mask(frame, name, lo, hi))
 
 
@@ -149,7 +168,11 @@ def filter_cases_containing(frame: EventFrame, activity: int, num_cases: int) ->
 
     Requires frame sorted by (case, time); the single-chunk special case of
     ``cases_containing_kernel`` + mask broadcast.
+
+    .. deprecated:: use ``repro.open(...).filter(cases_containing(activity))``.
     """
+    _warn_deprecated("filter_cases_containing",
+                     "filter(cases_containing(activity))")
     kernel = cases_containing_kernel(activity, num_cases)
     state, carry = kernel.init()
     case_keep, _ = kernel.update(state, carry, frame)
@@ -158,7 +181,11 @@ def filter_cases_containing(frame: EventFrame, activity: int, num_cases: int) ->
 
 
 def filter_case_size(frame: EventFrame, min_events: int, max_events: int, num_cases: int) -> EventFrame:
-    """Case-level: keep cases whose (valid-)event count is within bounds."""
+    """Case-level: keep cases whose (valid-)event count is within bounds.
+
+    .. deprecated:: use ``repro.open(...).filter(case_size(lo, hi))``.
+    """
+    _warn_deprecated("filter_case_size", "filter(case_size(lo, hi))")
     from .stats import case_sizes
 
     sizes = case_sizes(frame, num_cases)

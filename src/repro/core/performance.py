@@ -134,3 +134,17 @@ def remaining_time_targets(frame: EventFrame, backend: str | None = None) -> jax
     n = int(seg.shape[0])
     tmax = segment_reduce(ts, seg, n, "max", impl=_backend.resolve(backend))
     return tmax[seg] - ts
+
+
+engine.register_kernel(engine.KernelSpec(
+    "performance_dfg",
+    make=lambda dims, backend=None: performance_dfg_kernel(
+        dims.num_activities, backend),
+    columns=(ACTIVITY, CASE, TIMESTAMP),
+    doc="mean/total waiting time per directly-follows edge"))
+engine.register_kernel(engine.KernelSpec(
+    "eventually_follows",
+    make=lambda dims, backend=None: eventually_follows_kernel(
+        dims.num_activities, backend),
+    columns=(ACTIVITY, CASE),
+    doc="eventually-follows pair counts within cases"))

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.kernels.segment_ops import histogram, segment_reduce
 
-from .eventframe import ACTIVITY, TIMESTAMP, EventFrame
+from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
 from . import backend as _backend
 from . import engine
 
@@ -174,3 +174,47 @@ def sojourn_times(frame: EventFrame, num_activities: int,
     """Mean inter-event time by *source* activity (bottleneck analysis)."""
     return engine.run_single(sojourn_times_kernel(num_activities, backend),
                              frame)
+
+
+def stats_kernel(num_activities: int, num_cases: int,
+                 backend: str | None = None) -> engine.ChunkKernel:
+    """All four statistics fused into one pass over the stream (one disk
+    scan serves a whole dashboard panel)."""
+    return engine.compose({
+        "activity_counts": activity_counts_kernel(num_activities, backend),
+        "case_sizes": case_sizes_kernel(num_cases, backend),
+        "case_durations": case_durations_kernel(num_cases, backend),
+        "sojourn_times": sojourn_times_kernel(num_activities, backend),
+    })
+
+
+engine.register_kernel(engine.KernelSpec(
+    "activity_counts",
+    make=lambda dims, backend=None: activity_counts_kernel(
+        dims.num_activities, backend),
+    columns=(ACTIVITY, CASE),
+    doc="per-activity event histogram"))
+engine.register_kernel(engine.KernelSpec(
+    "case_sizes",
+    make=lambda dims, backend=None: case_sizes_kernel(dims.num_cases, backend),
+    columns=(ACTIVITY, CASE),
+    doc="valid-event count per case"))
+engine.register_kernel(engine.KernelSpec(
+    "case_durations",
+    make=lambda dims, backend=None: case_durations_kernel(
+        dims.num_cases, backend),
+    columns=(ACTIVITY, CASE, TIMESTAMP),
+    doc="max(ts) - min(ts) per case"))
+engine.register_kernel(engine.KernelSpec(
+    "sojourn_times",
+    make=lambda dims, backend=None: sojourn_times_kernel(
+        dims.num_activities, backend),
+    columns=(ACTIVITY, CASE, TIMESTAMP),
+    doc="mean inter-event time by source activity"))
+engine.register_kernel(engine.KernelSpec(
+    "stats",
+    make=lambda dims, backend=None: stats_kernel(
+        dims.num_activities, dims.num_cases, backend),
+    columns=(ACTIVITY, CASE, TIMESTAMP),
+    doc="activity_counts + case_sizes + case_durations + sojourn_times, "
+        "one fused pass"))

@@ -160,3 +160,11 @@ def streaming_variant_counts(chunks, num_cases: int) -> dict[tuple[int, int], in
     """Out-of-core 'Variants': one pass over the chunk stream."""
     fp1, fp2, ncases = engine.run_streaming(variants_kernel(num_cases), chunks)
     return _counts_from_fps(fp1, fp2, min(int(ncases), num_cases))
+
+
+engine.register_kernel(engine.KernelSpec(
+    "variants",
+    make=lambda dims, backend=None: variants_kernel(dims.num_cases, backend),
+    columns=(ACTIVITY, CASE),
+    doc="per-case variant fingerprints (hashing is validity-blind: no "
+        "distributed lowering, scans stream unpruned)"))

@@ -1,0 +1,17 @@
+"""Unified ``Dataset`` facade: one fluent API over eager, lazy, multi-log,
+and distributed mining (see ``repro.dataset.dataset`` for the full story).
+
+    import repro
+    ds = repro.open(["jan.edf", "feb.edf"])
+    ds.filter(repro.col("concept:name") == 3).dfg()
+"""
+from .dataset import Dataset, open_dataset  # noqa: F401
+from .engines import (ENGINES, CollectResult, CostEstimate,  # noqa: F401
+                      choose, estimate)
+
+open = open_dataset  # the facade's entry point: ``repro.open(...)``
+
+__all__ = [
+    "CollectResult", "CostEstimate", "Dataset", "ENGINES", "choose",
+    "estimate", "open", "open_dataset",
+]

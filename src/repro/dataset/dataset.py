@@ -1,0 +1,329 @@
+"""The ``Dataset`` facade: one fluent API over every execution engine.
+
+``repro.open(...)`` accepts a path, an ordered list of paths (the
+partitions of one (case,time)-sorted log), or an in-memory
+:class:`~repro.core.eventframe.EventFrame`, and returns an immutable
+:class:`Dataset`.  Transformations (``filter`` / ``project`` / ``union``)
+return new datasets and never touch data; terminal verbs (``dfg`` /
+``variants`` / ``stats`` / ``alpha`` / ``heuristics`` / ``conformance`` /
+``to_frame``) compile the accumulated steps into one logical plan over the
+whole file set and hand it to an execution engine::
+
+    import repro
+    from repro import col, cases_containing
+
+    ds = repro.open(["jan.edf", "feb.edf", "mar.edf"])
+    graph = ds.filter(col("org:resource") == 7).dfg()     # cold groups unread
+    net   = ds.filter(cases_containing("pay")).heuristics()
+
+Every verb resolves through the :class:`~repro.core.engine.KernelSpec`
+registry (verbs are data, not if-chains) and accepts ``engine=``:
+
+* ``"eager"``      — load everything, filter in memory, mine once (the
+  paper's baseline; fastest for small survivors);
+* ``"streaming"``  — zone-map-pruned scans, one chunk resident at a time
+  (``repro.query``); refuted row groups are never read;
+* ``"sharded"``    — the pruned stream sharded over devices
+  (``repro.distributed.query``; DFG/discovery-backed verbs);
+* ``"auto"``       — cost-based choice from header metadata only (file
+  sizes + zone-map selectivity; see ``repro.dataset.engines``).
+
+Whatever the engine, the result is bitwise equal to mining the eagerly
+filtered concatenation of the files — the engines are interchangeable
+lowerings of one logical plan, which is what makes the choice safe to
+automate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Any, Iterable, Mapping
+
+import numpy as np
+
+from repro.core.eventframe import (ACTIVITY, CASE, EventFrame,
+                                   concat_frames)
+from repro.query.plan import MultiPlan, check_predicate
+
+from . import engines
+
+
+def _is_pathlike(x) -> bool:
+    import os
+
+    return isinstance(x, (str, os.PathLike))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Dataset:
+    """Immutable, fluent view over a set of EDF files or one in-memory
+    frame (see module docstring).  Construct with :func:`repro.open`."""
+
+    paths: tuple = ()
+    frame: EventFrame | None = None
+    frame_tables: dict = dataclasses.field(default_factory=dict)
+    steps: tuple = ()
+    projection: tuple | None = None
+    hint_activities: int | None = None
+    hint_cases: int | None = None
+
+    # -------------------------------------------------------- transforms
+    def filter(self, predicate) -> "Dataset":
+        """Append a predicate (row-level ``Expr`` or two-pass
+        ``CasePredicate``); composes like the eager filter chain."""
+        check_predicate(predicate)
+        return dataclasses.replace(self, steps=self.steps + (predicate,))
+
+    def project(self, columns: Iterable[str]) -> "Dataset":
+        """Restrict the columns the dataset exposes (and the scans read)."""
+        return dataclasses.replace(self, projection=tuple(columns))
+
+    def union(self, other: "Dataset") -> "Dataset":
+        """Concatenate another dataset's files (or frame rows) after this
+        one's.  Both sides must be in the same filter/projection state —
+        union the raw opens first, then filter the union."""
+        if not isinstance(other, Dataset):
+            raise TypeError(f"union() takes a Dataset, got "
+                            f"{type(other).__name__}")
+        if self.steps != other.steps or self.projection != other.projection:
+            raise ValueError(
+                "union() requires identical filter/projection state on both "
+                "sides; build the union first, then filter it")
+        # capacity hints never carry over: num_cases of a union is the sum
+        # (minus straddles) and must be re-derived; num_activities only
+        # survives when both sides agree
+        acts = (self.hint_activities
+                if self.hint_activities == other.hint_activities else None)
+        if self.is_files and other.is_files:
+            return dataclasses.replace(self, paths=self.paths + other.paths,
+                                       hint_activities=acts, hint_cases=None)
+        if not self.is_files and not other.is_files:
+            if self.frame_tables != other.frame_tables:
+                raise ValueError("union() of frames with different "
+                                 "dictionary tables")
+            out = concat_frames([self.frame, other.frame])
+            return dataclasses.replace(self, frame=out,
+                                       hint_activities=acts, hint_cases=None)
+        raise ValueError("union() cannot mix file-backed and in-memory "
+                         "datasets; write the frame to EDF first")
+
+    # ------------------------------------------------------------- shape
+    @property
+    def is_files(self) -> bool:
+        return bool(self.paths)
+
+    @cached_property
+    def _readers(self) -> tuple:
+        from repro.storage.edf import pooled_reader
+
+        return tuple(pooled_reader(p) for p in self.paths)
+
+    @cached_property
+    def tables(self) -> dict:
+        """Dictionary tables (validated identical across the file set)."""
+        if not self.is_files:
+            return dict(self.frame_tables)
+        first = self._readers[0].tables
+        for r in self._readers[1:]:
+            if r.tables != first:
+                raise ValueError(
+                    f"dataset files disagree on dictionary tables: "
+                    f"{self.paths[0]!r} vs {r.path!r}")
+        return dict(first)
+
+    @cached_property
+    def schema(self) -> dict:
+        """Column name -> {"dtype": ...} (from the files, or synthesized
+        from the frame's arrays) — what predicate constants bind against."""
+        if self.is_files:
+            return dict(self._readers[0].schema)
+        return {k: {"dtype": str(np.asarray(v).dtype)}
+                for k, v in self.frame.columns.items()}
+
+    @cached_property
+    def num_activities(self) -> int:
+        if self.hint_activities is not None:
+            return int(self.hint_activities)
+        table = self.tables.get(ACTIVITY)
+        if table is not None:
+            return len(table)
+        if self.is_files:
+            hi = -1
+            for r in self._readers:
+                for g in range(r.num_groups):
+                    if r.group_nrows(g) == 0:
+                        continue
+                    z = r.group_meta(g)["zones"].get(ACTIVITY)
+                    if z is None or "max" not in z:
+                        raise ValueError(
+                            "cannot infer num_activities (no dictionary "
+                            "table, no zone maps); pass "
+                            "repro.open(..., num_activities=N)")
+                    hi = max(hi, int(z["max"]))
+            return hi + 1
+        acts = np.asarray(self.frame[ACTIVITY])
+        return int(acts.max()) + 1 if acts.size else 0
+
+    @cached_property
+    def num_cases(self) -> int:
+        if self.hint_cases is not None:
+            return int(self.hint_cases)
+        if self.is_files:
+            from repro.query.exec import count_cases
+
+            total = count_cases(MultiPlan(self.paths))
+            if total is None:
+                raise ValueError(
+                    "cannot infer num_cases (a file lacks segment "
+                    "metadata); pass repro.open(..., num_cases=N)")
+            return total
+        case = np.asarray(self.frame[CASE])
+        return int((case[1:] != case[:-1]).sum()) + 1 if case.size else 0
+
+    def file_sizes(self) -> dict:
+        """Summed ``storage.edf.file_sizes`` accounting over the file set."""
+        from repro.storage.edf import file_sizes
+
+        if not self.is_files:
+            raise ValueError("file_sizes() needs a file-backed dataset")
+        sizes = [file_sizes(p) for p in self.paths]
+        return {"total": sum(s["total"] for s in sizes),
+                "raw": sum(s["raw"] for s in sizes),
+                "per_file": sizes}
+
+    def plan(self, columns: Iterable[str] | None = None) -> MultiPlan:
+        """The logical plan the streaming/sharded engines execute.
+
+        ``columns`` is the verb's column requirement: used as the scan
+        projection when the user has not projected explicitly (predicates
+        add their own columns at compile time).
+        """
+        if not self.is_files:
+            raise ValueError("in-memory datasets have no scan plan")
+        proj = self.projection
+        if proj is not None and columns is not None:
+            missing = set(columns) & set(self.schema) - set(proj)
+            if missing:
+                raise ValueError(
+                    f"verb needs columns {sorted(missing)} but the dataset "
+                    f"is projected to {list(proj)}")
+        if proj is None and columns is not None:
+            proj = tuple(c for c in columns if c in self.schema)
+        return MultiPlan(self.paths, self.steps, proj)
+
+    def describe(self) -> str:
+        """One line per logical node, dataset-level."""
+        if self.is_files:
+            lines = [f"open({list(self.paths)!r})"]
+        else:
+            lines = [f"open(<frame: {self.frame.nrows} rows>)"]
+        lines += [f"  filter {s!r}" for s in self.steps]
+        if self.projection is not None:
+            lines.append(f"  project {list(self.projection)}")
+        return "\n".join(lines)
+
+    def explain(self, verb: str = "dfg") -> str:
+        """The plan plus the engine the cost model would pick for ``verb``."""
+        est = engines.estimate(self) if self.is_files else None
+        choice = engines.choose(self, engines.spec_for(verb), est)
+        lines = [self.describe(), f"  engine {choice} (auto)"]
+        if est is not None:
+            lines.append(f"  estimate {est.bytes_est}/{est.bytes_total} "
+                         f"bytes, {est.groups_est}/{est.groups_total} groups")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------- verbs
+    def collect(self, verb: str, *, engine: str = "auto",
+                num_shards: int | None = None,
+                **kwargs) -> "engines.CollectResult":
+        """Run a registered terminal verb; returns result + I/O report +
+        the engine that ran (the named verbs below are sugar over this)."""
+        return engines.collect(self, verb, engine=engine,
+                               num_shards=num_shards, **kwargs)
+
+    def dfg(self, *, engine: str = "auto", method: str = "auto", **kw):
+        """Directly-follows graph (counts + start/end histograms)."""
+        return self.collect("dfg", engine=engine, method=method, **kw).result
+
+    def stats(self, *, engine: str = "auto", **kw) -> dict:
+        """Activity counts, case sizes, case durations, sojourn times —
+        one fused pass over the stream."""
+        return self.collect("stats", engine=engine, **kw).result
+
+    def variants(self, *, engine: str = "auto", **kw) -> dict:
+        """{variant fingerprint: number of cases} (the paper's Variants).
+
+        The fingerprint hash is validity-blind, so this verb always reads
+        every surviving group (``mask_exact=False``); there is no sharded
+        lowering.
+        """
+        from repro.core.variants import _counts_from_fps
+
+        fp1, fp2, ncases = self.collect("variants", engine=engine,
+                                        **kw).result
+        return _counts_from_fps(fp1, fp2, min(int(ncases), self.num_cases))
+
+    def alpha(self, *, engine: str = "auto", min_count: int = 1,
+              method: str = "auto", **kw):
+        """Alpha miner (places + start/end activities) over the dataset."""
+        return self.collect("alpha", engine=engine, min_count=min_count,
+                            method=method, **kw).result
+
+    def heuristics(self, *, engine: str = "auto", method: str = "auto",
+                   **thresholds):
+        """Heuristics miner (dependency graph + AND/XOR bindings)."""
+        return self.collect("heuristics", engine=engine, method=method,
+                            **thresholds).result
+
+    def conformance(self, model, *, engine: str = "auto",
+                    method: str = "auto", **kw):
+        """Replay the dataset's DFG against a discovered model.
+
+        Dispatches on the model type: :class:`HeuristicsNet` -> heuristics
+        fitness, :class:`AlphaModel` -> alpha fitness, anything array-like
+        -> footprint fitness against an allowed-relation matrix.
+        """
+        import jax.numpy as jnp
+
+        from repro.core import conformance as _conformance
+        from repro.core.discovery import AlphaModel, HeuristicsNet
+
+        d = self.collect("dfg", engine=engine, method=method, **kw).result
+        if isinstance(model, HeuristicsNet):
+            return _conformance.heuristics_fitness(d, model)
+        if isinstance(model, AlphaModel):
+            return _conformance.alpha_fitness(d, model)
+        return _conformance.footprint_fitness(d, jnp.asarray(model))
+
+    def to_frame(self) -> EventFrame:
+        """Materialize the filtered, projected events as one compact frame
+        (refuted rows dropped; multi-file datasets concatenate in order)."""
+        return engines.to_frame(self)
+
+
+def open_dataset(source, *, tables: Mapping[str, list] | None = None,
+                 num_activities: int | None = None,
+                 num_cases: int | None = None) -> Dataset:
+    """Open an event dataset: the single entry point of the facade.
+
+    ``source`` is an EDF path, an ordered iterable of EDF paths (the
+    partitions of one (case,time)-sorted log — any mix of v1/v2/v3 files
+    with one schema), or an in-memory ``EventFrame`` (pass its dictionary
+    ``tables`` alongside).  ``num_activities`` / ``num_cases`` override the
+    inferred capacity dimensions (useful for files without dictionary
+    tables or segment metadata).
+    """
+    if isinstance(source, EventFrame):
+        return Dataset(frame=source, frame_tables=dict(tables or {}),
+                       hint_activities=num_activities, hint_cases=num_cases)
+    if tables is not None:
+        raise ValueError("tables= is only for in-memory frames (files carry "
+                         "their own dictionary tables)")
+    if _is_pathlike(source):
+        paths: tuple = (str(source),)
+    else:
+        paths = tuple(str(p) for p in source)
+    if not paths:
+        raise ValueError("open() needs at least one path")
+    return Dataset(paths=paths, hint_activities=num_activities,
+                   hint_cases=num_cases)

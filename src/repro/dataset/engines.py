@@ -1,0 +1,236 @@
+"""Engine dispatch for the ``Dataset`` facade — the first cost-based plan.
+
+Three interchangeable lowerings of one logical plan:
+
+* **eager** — ``edf.read`` every file whole, apply the filter chain in
+  memory (the same masks the planner pushes down), run the kernel once.
+  No per-group overhead: the fastest path when the surviving data is
+  small and pruning would not skip much.
+* **streaming** — ``repro.query`` pruned scans: zone maps refute row
+  groups before any I/O, one chunk resident at a time, ghost carries keep
+  case-indexed kernels exact.  Wins when the predicate is selective or
+  the data outgrows memory.
+* **sharded** — the same pruned stream split over devices
+  (``repro.distributed.query``): one kernel update per shard, ppermute
+  halo, psum merge.  Available for verbs whose mergeable state has an
+  exact distributed lowering (``KernelSpec.sharded_state``).
+
+``engine="auto"`` picks between them from *header metadata only*: total
+on-disk bytes per ``edf.file_sizes``-style group accounting, and the
+fraction of groups/bytes the zone maps already refute (case predicates
+are conservatively assumed to keep everything).  The thresholds are
+deliberately simple and environment-tunable:
+
+* ``REPRO_DATASET_EAGER_BYTES`` (default 64 MiB) — above this total, never
+  load eagerly;
+* ``REPRO_DATASET_PRUNE_RATIO`` (default 0.5) — below this surviving-bytes
+  fraction, stream (pruning pays even for small files);
+* ``REPRO_DATASET_SHARD_ROWS`` (default 2M) — above this many surviving
+  rows, shard when more than one device is attached.
+
+Every lowering returns bitwise-identical results, so a wrong guess costs
+time, never correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core.eventframe import CASE, EventFrame
+
+EAGER_BYTES = int(os.environ.get("REPRO_DATASET_EAGER_BYTES", 64 * 2**20))
+PRUNE_RATIO = float(os.environ.get("REPRO_DATASET_PRUNE_RATIO", 0.5))
+SHARD_ROWS = int(os.environ.get("REPRO_DATASET_SHARD_ROWS", 2_000_000))
+
+ENGINES = ("auto", "eager", "streaming", "sharded")
+
+
+def spec_for(verb: str) -> _engine.KernelSpec:
+    return _engine.kernel_spec(verb)
+
+
+# ------------------------------------------------------------ cost model
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Plan-time I/O estimate from zone maps (no data bytes touched for
+    EDFV0003 files; v1/v2 files pay their one-off metadata synthesis)."""
+
+    bytes_total: int
+    bytes_est: int          # bytes the pruned scan would read
+    rows_total: int
+    rows_est: int
+    groups_total: int
+    groups_est: int
+
+    @property
+    def selectivity(self) -> float:
+        """Estimated surviving-bytes fraction (1.0 = nothing refuted)."""
+        return self.bytes_est / self.bytes_total if self.bytes_total else 1.0
+
+
+def estimate(dataset) -> CostEstimate:
+    """Zone-map selectivity estimate for the dataset's current plan."""
+    from repro.query.expr import NONE
+    from repro.query.optimize import compile_plan
+
+    bt = be = rt = re_ = gt = ge = 0
+    for plan in dataset.plan().per_file():
+        ph = compile_plan(plan, True)
+        exprs = list(ph.proves)
+        for g in range(ph.reader.num_groups):
+            n = ph.reader.group_nrows(g)
+            if n == 0:
+                continue
+            nbytes = ph.reader.group_nbytes(g, ph.read_columns)
+            gt += 1
+            rt += n
+            bt += nbytes
+            if any(ph.proves[i][g] == NONE for i in exprs):
+                continue            # provably refuted: the scan skips it
+            ge += 1
+            re_ += n
+            be += nbytes
+    return CostEstimate(bt, be, rt, re_, gt, ge)
+
+
+def choose(dataset, spec: _engine.KernelSpec,
+           est: CostEstimate | None, n_devices: int | None = None) -> str:
+    """The cost-based engine decision (see module docstring)."""
+    if not dataset.is_files:
+        return "eager"
+    if est is None:
+        est = estimate(dataset)
+    if n_devices is None:
+        import jax
+
+        n_devices = len(jax.devices())
+    if (spec.sharded_state is not None and n_devices > 1
+            and est.rows_est >= SHARD_ROWS):
+        return "sharded"
+    if est.selectivity < PRUNE_RATIO:
+        return "streaming"          # pruning pays: read under half the bytes
+    if est.bytes_total <= EAGER_BYTES:
+        return "eager"
+    return "streaming"              # too big to hold; stream it
+
+
+# --------------------------------------------------------------- engines
+def eager_frame(dataset) -> EventFrame:
+    """Load everything, apply the filter chain in memory.
+
+    Uses the *same* predicate masks and phase-one kernels the planner
+    pushes down, so eager == streaming bitwise by construction.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import ops
+    from repro.query.expr import CasePredicate, bind_schema
+    from repro.storage import edf
+
+    if dataset.is_files:
+        from repro.core.eventframe import concat_frames
+        from repro.query.exec import check_homogeneous
+
+        check_homogeneous(dataset._readers)     # fail like streaming would
+        frame = concat_frames([edf.read(p)[0] for p in dataset.paths])
+    else:
+        frame = dataset.frame
+    tables = dataset.tables
+    for step in dataset.steps:
+        if isinstance(step, CasePredicate):
+            resolved = step.resolve(tables)
+            kernel = resolved.phase1_kernel(dataset.num_cases)
+            keep = resolved.finalize_keep(_engine.run_single(kernel, frame))
+            seg, _ = ops.segment_ids_sorted(frame[CASE])
+            frame = ops.proj(frame, jnp.asarray(np.asarray(keep))[seg])
+        else:
+            bound = bind_schema(step, dataset.schema)
+            frame = ops.proj(frame, bound.mask(frame))
+    if dataset.projection is not None:
+        frame = frame.select(dataset.projection)
+    return frame
+
+
+def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
+    import jax
+
+    from repro.distributed.query import (query_sharded_dfg,
+                                         query_sharded_discovery)
+
+    if spec.sharded_state is None:
+        raise ValueError(
+            f"verb {spec.name!r} has no exact distributed lowering "
+            f"(order-sensitive or validity-blind state); use "
+            f"engine='streaming' or 'eager'")
+    if not dataset.is_files:
+        raise ValueError("engine='sharded' needs a file-backed dataset")
+    devs = jax.devices()
+    num_shards = len(devs) if num_shards is None else int(num_shards)
+    mesh = jax.sharding.Mesh(np.array(devs[:num_shards]), ("data",))
+    driver = {"dfg": query_sharded_dfg,
+              "discovery": query_sharded_discovery}[spec.sharded_state]
+    # same projection/column validation as the other engines (the driver
+    # re-projects the scan to its own (activity, case) columns anyway)
+    plan = dataset.plan(columns=spec.columns)
+    state, report = driver(plan, dims.num_activities, mesh,
+                           method=kwargs.get("method", "auto"))
+    return spec.from_sharded(state, **kwargs), report
+
+
+# ------------------------------------------------------------- front door
+@dataclasses.dataclass(frozen=True)
+class CollectResult:
+    """A verb's result plus how it ran (I/O report is None for eager)."""
+
+    result: Any
+    report: Any | None
+    engine: str
+    verb: str
+    estimate: CostEstimate | None = None
+
+
+def collect(dataset, verb: str, *, engine: str = "auto",
+            num_shards: int | None = None, **kwargs) -> CollectResult:
+    """Resolve the verb through the kernel registry, pick an engine, run."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    spec = spec_for(verb)
+    dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
+    est = None
+    if engine == "auto":
+        est = estimate(dataset) if dataset.is_files else None
+        engine = choose(dataset, spec, est)
+    if engine == "eager":
+        if dataset.is_files:
+            dataset.plan(columns=spec.columns)  # same projection/column
+            # validation (and error) the streaming engine would raise
+        kernel = spec.make(dims, **kwargs)
+        frame = eager_frame(dataset)
+        # a zero-row dataset still finalizes cleanly (like run_streaming)
+        result = (_engine.run_single(kernel, frame) if frame.nrows
+                  else kernel.finalize(*kernel.init()))
+        return CollectResult(result, None, "eager", verb, est)
+    if engine == "sharded":
+        result, report = _sharded(dataset, spec, dims, num_shards, **kwargs)
+        return CollectResult(result, report, "sharded", verb, est)
+    # streaming: the pruned multi-scan
+    from repro.query.exec import execute
+
+    kernel = spec.make(dims, **kwargs)
+    result, report = execute(dataset.plan(columns=spec.columns), kernel)
+    return CollectResult(result, report, "streaming", verb, est)
+
+
+def to_frame(dataset) -> EventFrame:
+    """Materialize the filtered, projected events (engine-agnostic: files
+    stream through ``execute_frame``, frames compact in place)."""
+    if dataset.is_files:
+        from repro.query.exec import execute_frame
+
+        frame, _tables, _report = execute_frame(dataset.plan())
+        return frame
+    return eager_frame(dataset).compact()

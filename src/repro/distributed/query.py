@@ -28,14 +28,20 @@ from repro.core.dfg import DFG, dfg_kernel
 from repro.core.discovery import DiscoveryState, discovery_kernel
 from repro.core.eventframe import ACTIVITY, CASE
 from repro.query.exec import pruned_source
-from repro.query.plan import Plan
+from repro.query.plan import MultiPlan, Plan
 
 from .dfg import fix_trailing_end, run_sharded_kernel
 from .discovery import _fix_end as fix_discovery_end
 
 
-def _gather(plan: Plan, prune: bool):
-    """Concatenate the pruned stream's (case, activity, rows_valid)."""
+def _gather(plan: "Plan | MultiPlan", prune: bool):
+    """Concatenate the pruned stream's (case, activity, rows_valid).
+
+    Multi-file plans concatenate every file's pruned scan in path order
+    (``repro.query.multi_pruned_source``), so the shards of a dataset-wide
+    mine see one contiguous sorted log with ghost rows standing in for
+    every skipped row group of every file.
+    """
     src, report = pruned_source(plan.project((ACTIVITY, CASE)), prune=prune,
                                 mask_exact=True)
     case_parts, act_parts, rv_parts = [], [], []
@@ -95,7 +101,7 @@ def _apply_tail_end(dfg: DFG, tail) -> DFG:
                dfg.ends.at[tail[1]].add(jnp.int32(1), mode="drop"))
 
 
-def query_sharded_dfg(plan: Plan, num_activities: int, mesh,
+def query_sharded_dfg(plan: "Plan | MultiPlan", num_activities: int, mesh,
                       axis_name: str = "data", *, prune: bool = True,
                       method: str = "auto"):
     """Full DFG of a filtered log, mined from the pruned scan sharded over
@@ -106,7 +112,7 @@ def query_sharded_dfg(plan: Plan, num_activities: int, mesh,
     return _apply_tail_end(state, tail), report
 
 
-def query_sharded_discovery(plan: Plan, num_activities: int, mesh,
+def query_sharded_discovery(plan: "Plan | MultiPlan", num_activities: int, mesh,
                             axis_name: str = "data", *, prune: bool = True,
                             method: str = "auto"):
     """DFG + L2-loop discovery state over the pruned, sharded scan
@@ -117,7 +123,7 @@ def query_sharded_discovery(plan: Plan, num_activities: int, mesh,
                           state["l2"]), report
 
 
-def query_sharded_dfg_host(plan: Plan, num_activities: int, num_shards: int,
+def query_sharded_dfg_host(plan: "Plan | MultiPlan", num_activities: int, num_shards: int,
                            **kw):
     """CPU-host validation path (virtual device mesh), as in
     ``distributed.dfg.dfg_sharded_host``."""
@@ -126,7 +132,7 @@ def query_sharded_dfg_host(plan: Plan, num_activities: int, num_shards: int,
     return query_sharded_dfg(plan, num_activities, mesh, **kw)
 
 
-def query_sharded_discovery_host(plan: Plan, num_activities: int,
+def query_sharded_discovery_host(plan: "Plan | MultiPlan", num_activities: int,
                                  num_shards: int, **kw):
     devs = jax.devices()[:num_shards]
     mesh = jax.sharding.Mesh(devs, ("data",))

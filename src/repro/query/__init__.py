@@ -6,22 +6,28 @@ story by deciding — from EDFV0003 zone maps, before any data I/O — which
 row groups cannot possibly contribute and never reading their bytes.
 Plans compile down to the existing chunk-kernel engine, so every miner
 (DFG, stats, variants, alpha, heuristics) runs over a pruned scan with
-results bitwise identical to filter-then-mine on the whole log.
+results bitwise identical to filter-then-mine on the whole log.  A
+:class:`MultiPlan` widens a scan to an ordered *set* of EDF files (one
+logical plan, N pruned scans, one kernel driven across all of them).
 
-    from repro.query import scan, col, cases_containing, execute
-    plan = scan("log.edf").filter(col("time:timestamp").between(t0, t1))
-    dfg, report = execute(plan, mine=dfg_kernel(num_activities))
-    print(report.groups_skipped, report.bytes_read, report.bytes_total)
+This package is the planner/executor IR; the user-facing surface is the
+``repro.dataset`` facade::
+
+    import repro
+    ds = repro.open(["jan.edf", "feb.edf"]).filter(repro.col("a") == 3)
+    graph = ds.dfg()                      # engine picked by cost, I/O pruned
 """
-from .exec import (ScanReport, execute, execute_frame,  # noqa: F401
+from .exec import (ScanReport, count_cases, execute,  # noqa: F401
+                   execute_frame, merge_reports, multi_pruned_source,
                    pruned_source)
 from .expr import (CasePredicate, Col, Expr, case_size,  # noqa: F401
                    cases_containing, col)
 from .optimize import PhysicalPlan, compile_plan  # noqa: F401
-from .plan import Plan, scan  # noqa: F401
+from .plan import MultiPlan, Plan, scan, scan_many  # noqa: F401
 
 __all__ = [
-    "CasePredicate", "Col", "Expr", "Plan", "PhysicalPlan", "ScanReport",
-    "case_size", "cases_containing", "col", "compile_plan", "execute",
-    "execute_frame", "pruned_source", "scan",
+    "CasePredicate", "Col", "Expr", "MultiPlan", "Plan", "PhysicalPlan",
+    "ScanReport", "case_size", "cases_containing", "col", "compile_plan",
+    "count_cases", "execute", "execute_frame", "merge_reports",
+    "multi_pruned_source", "pruned_source", "scan", "scan_many",
 ]

@@ -44,7 +44,7 @@ from repro.storage.edf import EDFReader
 
 from .expr import CasePredicate
 from .optimize import GhostItem, PhysicalPlan, ReadItem, compile_plan
-from .plan import Plan
+from .plan import MultiPlan, Plan
 
 
 # ------------------------------------------------------------- reporting
@@ -66,6 +66,7 @@ class ScanReport:
     bytes_read: int = 0
     phase1_groups_read: int = 0
     phase1_bytes_read: int = 0
+    per_file: tuple = ()        # multi-file plans: the per-file reports
 
     @property
     def skip_ratio(self) -> float:
@@ -82,7 +83,24 @@ class ScanReport:
         out["columns"] = list(self.columns)
         out["skip_ratio"] = self.skip_ratio
         out["bytes_saved_ratio"] = self.bytes_saved_ratio
+        out["per_file"] = [r.to_dict() for r in self.per_file]
         return out
+
+
+def merge_reports(reports) -> ScanReport:
+    """Aggregate per-file reports into one dataset-level report (the
+    originals remain available on ``per_file``)."""
+    reports = tuple(reports)
+    if len(reports) == 1:
+        return reports[0]
+    out = ScanReport(";".join(r.path for r in reports),
+                     reports[0].columns if reports else (),
+                     any(r.pruned for r in reports), per_file=reports)
+    for f in ("groups_total", "groups_read", "groups_skipped",
+              "groups_proved", "rows_total", "rows_read", "bytes_total",
+              "bytes_read", "phase1_groups_read", "phase1_bytes_read"):
+        setattr(out, f, sum(getattr(r, f) for r in reports))
+    return out
 
 
 def _account(report: ScanReport, physical: PhysicalPlan, schedule,
@@ -174,33 +192,6 @@ def _iter_chunks(physical: PhysicalPlan, schedule, keeps: dict,
         yield EventFrame(sel.columns, sel.valid, jnp.asarray(mask))
 
 
-def _phase1_keeps(physical: PhysicalPlan, report: ScanReport) -> dict:
-    """Run phase one of every case predicate, in plan order, each pass
-    pruned by the steps that precede it."""
-    keeps: dict = {}
-    for pos, step in enumerate(physical.steps):
-        if not isinstance(step, CasePredicate):
-            continue
-        if physical.num_cases is None:
-            raise ValueError(
-                f"case-level predicates need a {CASE!r} column with "
-                f"per-group segment metadata in {physical.plan.path!r}")
-        chunk_cols = tuple(sorted({CASE, ACTIVITY} | set(step.columns())))
-        read = set(chunk_cols)
-        for i in range(pos):
-            s = physical.steps[i]
-            if not isinstance(s, CasePredicate):
-                read |= s.columns()
-        schedule = physical.phase1_schedule(pos, keeps)
-        _account(report, physical, schedule, tuple(sorted(read)), phase1=True)
-        result = engine.run_streaming(
-            step.phase1_kernel(physical.num_cases),
-            _iter_chunks(physical, schedule, keeps, chunk_cols,
-                         tuple(sorted(read))))
-        keeps[pos] = np.asarray(step.finalize_keep(result), bool)
-    return keeps
-
-
 def _base_report(physical: PhysicalPlan) -> ScanReport:
     reader = physical.reader
     report = ScanReport(physical.plan.path, physical.read_columns,
@@ -215,57 +206,205 @@ def _base_report(physical: PhysicalPlan) -> ScanReport:
     return report
 
 
+# -------------------------------------------------------- multi-file plans
+def check_homogeneous(readers) -> None:
+    """A multi-file dataset needs one schema: identical column names,
+    dtypes, kinds, dictionary tables and validity flags across every file
+    (byte layout/version may differ — v1/v2/v3 files mix freely).  Shared
+    by every engine, so eager and streaming fail the same way."""
+
+    def shape(reader):
+        return {
+            name: (meta["dtype"], meta.get("kind", "numeric"),
+                   tuple(meta.get("table", ())),
+                   bool(meta.get("has_valid") or "valid_offset" in meta))
+            for name, meta in reader.schema.items()
+        }
+
+    readers = list(readers)
+    first = shape(readers[0])
+    for reader in readers[1:]:
+        if shape(reader) != first:
+            raise ValueError(
+                f"multi-file plan over incompatible schemas: "
+                f"{readers[0].path!r} vs {reader.path!r}")
+
+
+def _case_extent(ph: PhysicalPlan):
+    """(first case id, last case id) of a file, from header metadata."""
+    if ph.metas is None or CASE not in ph.reader.schema:
+        return None, None
+    nonempty = [g for g in range(ph.reader.num_groups)
+                if ph.reader.group_nrows(g) > 0]
+    if not nonempty:
+        return None, None
+    first = ph.metas[nonempty[0]]["zones"].get(CASE, {}).get("min")
+    tail = ph.metas[nonempty[-1]].get("tail", {}).get("values", {}).get(CASE)
+    return first, tail
+
+
+def _multi_offsets(physicals):
+    """Global segment id of each file's first segment, plus the total case
+    count — the multi-file extension of the per-group segment accounting.
+    A case straddling a file boundary (same id on both sides) is counted
+    once: the next file's offset backs up by one.  Returns ``(None, None)``
+    when any file lacks segment metadata (case predicates then raise, like
+    the single-file path)."""
+    offsets: list[int] = []
+    total = 0
+    prev_tail = None
+    for ph in physicals:
+        if ph.num_cases is None:
+            return None, None
+        first, tail = _case_extent(ph)
+        cont = (prev_tail is not None and first is not None
+                and first == prev_tail)
+        off = total - 1 if cont else total
+        offsets.append(off)
+        total = off + ph.num_cases
+        if tail is not None:
+            prev_tail = tail
+    return offsets, total
+
+
+def _local_keeps(keeps: dict, off: int, num_cases: int) -> dict:
+    """Slice global per-case keep masks to one file's segment range."""
+    return {pos: k[off:off + num_cases] for pos, k in keeps.items()}
+
+
+def _multi_phase1(physicals, reports, offsets, total) -> dict:
+    """Phase one of every case predicate, streamed across the whole file
+    set with one kernel (its carry numbers segments globally, so a case
+    straddling a file boundary accumulates into a single slot)."""
+    steps = physicals[0].steps
+    keeps: dict = {}
+    for pos, step in enumerate(steps):
+        if not isinstance(step, CasePredicate):
+            continue
+        if total is None:
+            raise ValueError(
+                f"case-level predicates need a {CASE!r} column with "
+                f"per-group segment metadata in every file of the plan")
+        chunk_cols = tuple(sorted({CASE, ACTIVITY} | set(step.columns())))
+        read = set(chunk_cols)
+        for i in range(pos):
+            s = steps[i]
+            if not isinstance(s, CasePredicate):
+                read |= s.columns()
+        read_cols = tuple(sorted(read))
+        locals_ = [_local_keeps(keeps, off, ph.num_cases)
+                   for ph, off in zip(physicals, offsets)]
+        schedules = [ph.phase1_schedule(pos, lk)
+                     for ph, lk in zip(physicals, locals_)]
+        for ph, rep, sched in zip(physicals, reports, schedules):
+            _account(rep, ph, sched, read_cols, phase1=True)
+
+        def gen():
+            for ph, sched, lk in zip(physicals, schedules, locals_):
+                yield from _iter_chunks(ph, sched, lk, chunk_cols, read_cols)
+
+        result = engine.run_streaming(step.phase1_kernel(total), gen())
+        keeps[pos] = np.asarray(step.finalize_keep(result), bool)
+    return keeps
+
+
+def _multi_compile(mplan: MultiPlan, prune: bool):
+    physicals = [compile_plan(p, prune) for p in mplan.per_file()]
+    check_homogeneous(ph.reader for ph in physicals)
+    reports = [_base_report(ph) for ph in physicals]
+    offsets, total = _multi_offsets(physicals)
+    keeps = _multi_phase1(physicals, reports, offsets, total)
+    if offsets is None:
+        offsets = [0] * len(physicals)
+    return physicals, reports, offsets, keeps
+
+
+def _multi_schedules(physicals, reports, offsets, keeps, *, ghosts,
+                     skippable):
+    schedules, locals_ = [], []
+    for ph, rep, off in zip(physicals, reports, offsets):
+        lk = _local_keeps(keeps, off, ph.num_cases or 0)
+        sched = ph.final_schedule(lk, ghosts=ghosts, skippable=skippable)
+        _account(rep, ph, sched, ph.read_columns)
+        rep.groups_skipped = rep.groups_total - rep.groups_read
+        schedules.append(sched)
+        locals_.append(lk)
+    return schedules, locals_
+
+
+def multi_pruned_source(mplan: MultiPlan, *, prune: bool = True,
+                        mask_exact: bool = True
+                        ) -> tuple[ChunkedEventFrame, ScanReport]:
+    """Compile a multi-file plan into one re-iterable pruned chunk stream.
+
+    The stream is the concatenation of every file's pruned scan; a single
+    kernel driven over it is bitwise equal to mining the concatenation of
+    the files (the engine's carry crosses file boundaries exactly as it
+    crosses row-group boundaries — no state merging, no float reordering).
+    The returned report aggregates the per-file reports (``per_file``).
+    """
+    physicals, reports, offsets, keeps = _multi_compile(mplan, prune)
+    schedules, locals_ = _multi_schedules(physicals, reports, offsets, keeps,
+                                          ghosts=mask_exact,
+                                          skippable=mask_exact)
+
+    def factory():
+        for ph, sched, lk in zip(physicals, schedules, locals_):
+            yield from _iter_chunks(ph, sched, lk, ph.chunk_columns,
+                                    ph.read_columns)
+
+    src = ChunkedEventFrame(factory,
+                            num_chunks=sum(len(s) for s in schedules),
+                            tables=dict(physicals[0].reader.tables))
+    return src, merge_reports(reports)
+
+
 # ------------------------------------------------------------ public API
-def pruned_source(plan: Plan, *, prune: bool = True, mask_exact: bool = True
+def count_cases(plan: "Plan | MultiPlan") -> int | None:
+    """Total case segments across the plan's file(s), from header metadata
+    only (None when any file lacks segment metadata)."""
+    if isinstance(plan, MultiPlan):
+        physicals = [compile_plan(Plan(p), True) for p in plan.paths]
+        _, total = _multi_offsets(physicals)
+        return total
+    return compile_plan(Plan(plan.path), True).num_cases
+
+
+def pruned_source(plan: "Plan | MultiPlan", *, prune: bool = True,
+                  mask_exact: bool = True
                   ) -> tuple[ChunkedEventFrame, ScanReport]:
     """Compile a plan into a re-iterable pruned chunk stream.
 
     ``mask_exact=False`` keeps every group in the stream (residual masks
     only) for consumers that inspect masked rows.  The returned source
     plugs into ``engine.run_streaming`` / ``repro.distributed.query``.
+    A single-file ``Plan`` is the one-path special case of
+    :func:`multi_pruned_source` (one code path, one set of invariants).
     """
-    physical = compile_plan(plan, prune)
-    report = _base_report(physical)
-    keeps = _phase1_keeps(physical, report)
-    schedule = physical.final_schedule(keeps, ghosts=mask_exact,
-                                       skippable=mask_exact)
-    _account(report, physical, schedule, physical.read_columns)
-    report.groups_skipped = report.groups_total - report.groups_read
-    src = ChunkedEventFrame(
-        lambda: _iter_chunks(physical, schedule, keeps,
-                             physical.chunk_columns, physical.read_columns),
-        num_chunks=len(schedule), tables=dict(physical.reader.tables))
-    return src, report
+    if isinstance(plan, Plan):
+        plan = MultiPlan((plan.path,), plan.steps, plan.projection)
+    return multi_pruned_source(plan, prune=prune, mask_exact=mask_exact)
 
 
-def execute(plan: Plan, mine: engine.ChunkKernel, *, prune: bool = True):
+def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
+            prune: bool = True):
     """Fold a chunk kernel over the pruned scan of ``plan``.
 
     Returns ``(result, report)`` with ``result`` bitwise equal to running
-    the same kernel over the eagerly filtered whole log.  ``prune=False``
-    executes the identical plan without zone-map skipping (the full-scan
-    baseline the benchmarks compare against).
+    the same kernel over the eagerly filtered whole log (for multi-file
+    plans: the eagerly filtered concatenation of the files).
+    ``prune=False`` executes the identical plan without zone-map skipping
+    (the full-scan baseline the benchmarks compare against).
     """
     src, report = pruned_source(
         plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True))
     return engine.run_streaming(mine, src), report
 
 
-def execute_frame(plan: Plan, *, prune: bool = True):
-    """Materialize the filtered, projected frame (rows the predicates
-    refute are dropped — equal to the eager filter chain + ``compact``).
+def _materialize(parts, physical: PhysicalPlan):
+    """Concatenate compacted parts into one frame (+ projected tables)."""
+    from repro.core.eventframe import concat_frames
 
-    Returns ``(frame, tables, report)``.
-    """
-    physical = compile_plan(plan, prune)
-    report = _base_report(physical)
-    keeps = _phase1_keeps(physical, report)
-    schedule = physical.final_schedule(keeps, ghosts=False, skippable=True)
-    _account(report, physical, schedule, physical.read_columns)
-    report.groups_skipped = report.groups_total - report.groups_read
-    parts = [c.compact() for c in
-             _iter_chunks(physical, schedule, keeps, physical.chunk_columns,
-                          physical.read_columns)]
     parts = [p for p in parts if p.nrows] or parts[:1]
     tables = {k: v for k, v in physical.reader.tables.items()
               if k in physical.chunk_columns}
@@ -275,9 +414,27 @@ def execute_frame(plan: Plan, *, prune: bool = True):
                 for k in physical.chunk_columns}
         valid = {k: np.zeros(0, bool) for k in physical.chunk_columns
                  if schema[k].get("has_valid") or "valid_offset" in schema[k]}
-        return EventFrame.from_numpy(cols, valid), tables, report
-    cols = {k: np.concatenate([np.asarray(p.columns[k]) for p in parts])
-            for k in parts[0].names}
-    valid = {k: np.concatenate([np.asarray(p.valid[k]) for p in parts])
-             for k in parts[0].valid}
-    return EventFrame.from_numpy(cols, valid), tables, report
+        return EventFrame.from_numpy(cols, valid), tables
+    return concat_frames(parts), tables
+
+
+def execute_frame(plan: "Plan | MultiPlan", *, prune: bool = True):
+    """Materialize the filtered, projected frame (rows the predicates
+    refute are dropped — equal to the eager filter chain + ``compact``;
+    multi-file plans concatenate in path order).
+
+    Returns ``(frame, tables, report)``.
+    """
+    if isinstance(plan, Plan):
+        plan = MultiPlan((plan.path,), plan.steps, plan.projection)
+    physicals, reports, offsets, keeps = _multi_compile(plan, prune)
+    schedules, locals_ = _multi_schedules(physicals, reports, offsets,
+                                          keeps, ghosts=False,
+                                          skippable=True)
+    parts = []
+    for ph, sched, lk in zip(physicals, schedules, locals_):
+        parts += [c.compact() for c in
+                  _iter_chunks(ph, sched, lk, ph.chunk_columns,
+                               ph.read_columns)]
+    frame, tables = _materialize(parts, physicals[0])
+    return frame, tables, merge_reports(reports)

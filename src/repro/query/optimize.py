@@ -35,7 +35,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.eventframe import ACTIVITY, CASE
-from repro.storage.edf import EDFReader
+from repro.storage.edf import EDFReader, pooled_reader
 
 from .expr import ALL, NONE, CasePredicate, Expr, bind_schema
 from .plan import Plan
@@ -188,7 +188,10 @@ class PhysicalPlan:
 
 
 def compile_plan(plan: Plan, prune: bool = True) -> PhysicalPlan:
-    reader = EDFReader(plan.path)
+    # readers are pooled: every plan over the same file shares one cached
+    # header (and one open handle) — a multi-file Dataset compiles N plans
+    # without re-parsing or re-synthesizing anything
+    reader = pooled_reader(plan.path)
     steps = tuple(s.resolve(reader.tables) if isinstance(s, CasePredicate)
                   else bind_schema(s, reader.schema) for s in plan.steps)
     exprs = [(i, s) for i, s in enumerate(steps) if isinstance(s, Expr)]

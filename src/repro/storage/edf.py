@@ -46,8 +46,11 @@ random-access view the query planner uses.
 from __future__ import annotations
 
 import json
+import os
 import struct
+import threading
 import zlib
+from collections import OrderedDict
 from typing import Iterable, Mapping
 
 import numpy as np
@@ -422,6 +425,47 @@ class EDFReader:
         self.column_names = tuple(sorted(self.schema))
         self.nrows: int = self.header["nrows"]
         self._synth: list[dict] | None = None   # v1/v2 metadata cache
+        self._file = None                       # persistent handle (lazy)
+        self._io_lock = threading.Lock()        # seek/read pairs are shared
+        st = os.stat(path)
+        self._sig = (st.st_mtime_ns, st.st_size)
+
+    # --------------------------------------------------------- file handle
+    def _check_sig(self) -> None:
+        """Re-stat before touching bytes with no open handle: decoding a
+        rewritten file against the cached header would return garbage, so
+        it fails loudly instead."""
+        st = os.stat(self.path)
+        if (st.st_mtime_ns, st.st_size) != self._sig:
+            raise ValueError(
+                f"{self.path!r} changed on disk since this reader cached "
+                f"its header; get a fresh reader via pooled_reader()")
+
+    def _fh(self):
+        """The persistent read handle, reopened transparently if the reader
+        was closed (or evicted from a :class:`ReaderPool`) between uses —
+        what makes pruned-scan sources safely re-iterable."""
+        if self._file is None or self._file.closed:
+            self._check_sig()
+            self._file = open(self.path, "rb")
+        return self._file
+
+    @property
+    def closed(self) -> bool:
+        return self._file is None or self._file.closed
+
+    def close(self) -> None:
+        """Release the file handle. The reader stays usable: the next read
+        reopens the handle (the header is already cached)."""
+        with self._io_lock:             # never yank the handle mid-read
+            if self._file is not None and not self._file.closed:
+                self._file.close()
+
+    def __enter__(self) -> "EDFReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @property
     def num_groups(self) -> int:
@@ -442,11 +486,15 @@ class EDFReader:
         if self.version == 1:
             if index != 0:
                 raise IndexError("EDFV0001 has a single row group")
+            self._check_sig()           # v1 re-opens per read: same guard
             return _read_v1(self.path, columns)[0]
         group = self.header["groups"][index]
         want = set(columns) if columns is not None else None
-        with open(self.path, "rb") as f:
-            return _read_group_v2(f, self.base, self.header, group, want)
+        # one handle serves every plan over this file (ReaderPool); its
+        # seek/read pairs must not interleave across threads
+        with self._io_lock:
+            return _read_group_v2(self._fh(), self.base, self.header, group,
+                                  want)
 
     def group_meta(self, index: int) -> dict:
         """``{"nrows", "zones", "segments"?, "tail"?}`` for one row group."""
@@ -476,3 +524,71 @@ class EDFReader:
                 continue
             total += ext["nbytes"] + ext.get("valid_nbytes", 0)
         return total
+
+
+# ------------------------------------------------------------ reader pool
+class ReaderPool:
+    """Shared cache of :class:`EDFReader` instances, keyed by path.
+
+    A multi-file dataset compiles one plan per file and may re-iterate each
+    pruned scan several times (phase-one passes, benchmarks, dashboards); the
+    pool gives all of them the *same* cached-header reader per file — one
+    header parse, one v1/v2 metadata synthesis, one open handle.  Entries are
+    validated against the file's (mtime, size) on every ``get``, so a file
+    rewritten in place is picked up fresh; least-recently-used readers beyond
+    ``capacity`` are closed (not invalidated — a plan still holding an
+    evicted reader keeps working because :meth:`EDFReader._fh` reopens).
+    """
+
+    def __init__(self, capacity: int = 16):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._readers: OrderedDict[str, EDFReader] = OrderedDict()
+        self._lock = threading.Lock()   # get/evict race across threads
+
+    def get(self, path: str) -> EDFReader:
+        key = os.path.abspath(path)
+        st = os.stat(key)
+        sig = (st.st_mtime_ns, st.st_size)
+        evicted = []
+        with self._lock:
+            reader = self._readers.get(key)
+            if reader is not None and reader._sig != sig:
+                evicted.append(reader)         # stale: the file changed
+                reader = None
+            if reader is None:
+                reader = EDFReader(key)
+                self._readers[key] = reader
+            self._readers.move_to_end(key)
+            while len(self._readers) > self.capacity:
+                _, old = self._readers.popitem(last=False)
+                evicted.append(old)
+        for old in evicted:                    # close() takes the reader's
+            old.close()                        # io lock — never mid-read
+        return reader
+
+    def close(self) -> None:
+        """Close every pooled handle (readers reopen lazily if reused)."""
+        with self._lock:
+            readers, self._readers = list(self._readers.values()), \
+                OrderedDict()
+        for reader in readers:
+            reader.close()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._readers)
+
+
+_POOL = ReaderPool()
+
+
+def reader_pool() -> ReaderPool:
+    """The process-wide pool the query planner draws readers from."""
+    return _POOL
+
+
+def pooled_reader(path: str) -> EDFReader:
+    """Shared cached-header reader for ``path`` (see :class:`ReaderPool`)."""
+    return _POOL.get(path)

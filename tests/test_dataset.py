@@ -1,0 +1,447 @@
+"""Unified Dataset facade: multi-file plans, engine parity, shims, pooling.
+
+The load-bearing invariant (the PR's acceptance bar): for every terminal
+verb K and any multi-file Dataset D with a filter F, ``D.filter(F).K()``
+is **bitwise equal** to ``K(filter(concat(read(files))))`` at every
+engine — eager, streaming, and (for DFG/discovery-backed verbs) sharded
+over 1..8 devices.  Plus the satellites: mixed v1/v2/v3 file sets under
+both segment backends, deprecation shims with unchanged results, and
+re-iteration safety when a pooled reader is closed mid-stream.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (ACTIVITY, CASE, TIMESTAMP, backend, engine,
+                        filtering, ops)
+from repro.core.dfg import dfg_kernel
+from repro.core.discovery import discovery_kernel
+from repro.core.stats import stats_kernel
+from repro.core.variants import variants_kernel
+from repro.data import synthetic
+from repro.dataset import engines
+from repro.query import Plan, col, case_size, cases_containing, pruned_source
+from repro.storage import edf
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+A = 7          # activities in the shared fixture
+NC = 240       # cases in the shared fixture
+
+
+def _split_paths(frame, tables, tmpdir, case_cuts, versions=None,
+                 row_group_rows=97):
+    """Write the (case,time)-sorted frame as consecutive case-range files."""
+    case = np.asarray(frame[CASE])
+    bounds = [0] + [int(np.searchsorted(case, c)) for c in case_cuts] \
+        + [frame.nrows]
+    paths = []
+    for i, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+        version = versions[i] if versions else 3
+        kw = {} if version == 1 else {"row_group_rows": row_group_rows}
+        p = str(tmpdir / f"part{i}_v{version}.edf")
+        edf.write(p, frame.take(jnp.arange(lo, hi)), tables,
+                  version=version, **kw)
+        paths.append(p)
+    return paths
+
+
+@pytest.fixture(scope="module")
+def logset(tmp_path_factory):
+    """Three v3 files partitioning one sorted log + the whole frame."""
+    frame, tables = synthetic.generate(num_cases=NC, num_activities=A, seed=3)
+    d = tmp_path_factory.mktemp("ds")
+    paths = _split_paths(frame, tables, d, case_cuts=[80, 160])
+    return paths, frame, tables
+
+
+def _assert_tree_equal(a, b, msg=""):
+    """Structural bitwise equality: arrays elementwise, models field by
+    field (AlphaModel/HeuristicsNet are not flat pytrees)."""
+    import dataclasses
+
+    if isinstance(a, (jax.Array, np.ndarray)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=msg)
+    elif dataclasses.is_dataclass(a) and not isinstance(a, type):
+        assert type(a) is type(b), msg
+        for f in dataclasses.fields(a):
+            _assert_tree_equal(getattr(a, f.name), getattr(b, f.name),
+                               f"{msg}.{f.name}")
+    elif isinstance(a, dict):
+        assert set(a) == set(b), msg
+        for k in a:
+            _assert_tree_equal(a[k], b[k], f"{msg}[{k}]")
+    elif isinstance(a, (tuple, list)):
+        assert len(a) == len(b), msg
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_tree_equal(x, y, f"{msg}[{i}]")
+    else:
+        assert a == b, msg
+
+
+def _ref_frame(whole, name):
+    """The eager reference chain each Dataset filter must match bitwise."""
+    c, a = whole[CASE], whole[ACTIVITY]
+    if name == "band":
+        return ops.proj(whole, (c >= 50) & (c <= 170))
+    if name == "isin":
+        return ops.proj(whole, filtering.isin_mask(a, np.array([2, 5])))
+    if name == "chain":
+        f = ops.proj(whole, filtering.isin_mask(a, np.array([1, 2, 4])))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return filtering.filter_cases_containing(f, 3, NC)
+    raise KeyError(name)
+
+
+def _filtered(ds, name):
+    if name == "band":
+        return ds.filter((col(CASE) >= 50) & (col(CASE) <= 170))
+    if name == "isin":
+        return ds.filter(col(ACTIVITY).isin([2, 5]))
+    if name == "chain":
+        return ds.filter(col(ACTIVITY).isin([1, 2, 4])).filter(
+            cases_containing(3))
+    raise KeyError(name)
+
+
+VERBS = ["dfg", "stats", "variants", "alpha", "heuristics", "discovery",
+         "eventually_follows", "performance_dfg"]
+
+
+@pytest.mark.parametrize("pred", ["band", "isin", "chain"])
+def test_every_verb_eager_equals_streaming_equals_reference(logset, pred):
+    """The acceptance bar: D.filter(F).K() == K(filter(concat(files)))
+    bitwise, at both local engines, for every registered verb."""
+    paths, whole, _ = logset
+    ds = _filtered(repro.open(paths), pred)
+    ref_frame = _ref_frame(whole, pred)
+    dims = engine.Dims(A, NC)
+    for verb in VERBS:
+        spec = engine.kernel_spec(verb)
+        ref = engine.run_single(spec.make(dims), ref_frame)
+        for eng in ("eager", "streaming"):
+            got = ds.collect(verb, engine=eng)
+            assert got.engine == eng
+            _assert_tree_equal(got.result, ref, f"{pred}/{verb}/{eng}")
+            if eng == "streaming":
+                assert got.report.bytes_read <= got.report.bytes_total
+
+
+def test_multi_file_plan_prunes_cold_groups(logset):
+    """A selective multi-log query must skip whole row groups across the
+    file set — including entire files outside the case band — and read
+    well under the full byte budget."""
+    paths, whole, _ = logset
+    ds = repro.open(paths).filter((col(CASE) >= 90) & (col(CASE) <= 110))
+    r = ds.collect("dfg", engine="streaming")
+    assert r.report.groups_skipped > 0
+    assert r.report.bytes_read < 0.5 * r.report.bytes_total
+    assert len(r.report.per_file) == 3
+    # the first and last files are entirely outside the band
+    assert r.report.per_file[0].groups_read == 0
+    assert r.report.per_file[2].groups_read == 0
+    ref = engine.run_single(
+        dfg_kernel(A),
+        ops.proj(whole, (whole[CASE] >= 90) & (whole[CASE] <= 110)))
+    _assert_tree_equal(r.result, ref, "pruned multi-file")
+
+
+def test_union_matches_list_open_and_is_immutable(logset):
+    paths, whole, _ = logset
+    u = repro.open(paths[0]).union(repro.open(paths[1])).union(
+        repro.open(paths[2]))
+    assert u.paths == tuple(paths)
+    base = repro.open(paths)
+    flt = base.filter(col(CASE) <= 100)
+    assert base.steps == ()            # immutable: filter returned a copy
+    _assert_tree_equal(
+        u.filter(col(CASE) <= 100).dfg(engine="streaming"),
+        flt.dfg(engine="streaming"), "union == list open")
+    with pytest.raises(ValueError):
+        flt.union(base)                # differing filter state
+    with pytest.raises(TypeError):
+        base.filter("not a predicate")
+    # capacity hints never leak across a union (regression: a stale
+    # num_cases hint would silently undersize case-indexed kernels)
+    hinted = repro.open(paths[0], num_cases=80).union(repro.open(paths[1]))
+    assert hinted.num_cases == 160     # re-derived, not 80
+
+
+def test_case_predicates_spanning_files(logset):
+    """cases_containing / case_size keep masks are global: phase one
+    streams across all files with one kernel, keep slices broadcast per
+    file — results match the whole-log chain bitwise."""
+    paths, whole, _ = logset
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ref = filtering.filter_case_size(whole, 3, 7, NC)
+    ref_sizes = engine.run_single(
+        stats_kernel(A, NC), ref)["case_sizes"]
+    ds = repro.open(paths).filter(case_size(3, 7))
+    for eng in ("eager", "streaming"):
+        got = ds.collect("stats", engine=eng).result["case_sizes"]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_sizes),
+                                      err_msg=eng)
+
+
+def test_case_straddling_file_boundary(tmp_path):
+    """A case split *across two files* is still one case: the carry flows
+    over the boundary and the segment offsets back up by one."""
+    frame, tables = synthetic.generate(num_cases=60, num_activities=5,
+                                       seed=11)
+    case = np.asarray(frame[CASE])
+    mid = int(np.searchsorted(case, 30)) + 2   # cut INSIDE case 30
+    assert case[mid - 1] == case[mid] == 30
+    p0, p1 = str(tmp_path / "a.edf"), str(tmp_path / "b.edf")
+    edf.write(p0, frame.take(jnp.arange(0, mid)), tables, row_group_rows=53)
+    edf.write(p1, frame.take(jnp.arange(mid, frame.nrows)), tables,
+              row_group_rows=53)
+    ds = repro.open([p0, p1])
+    assert ds.num_cases == 60                  # not 61
+    ref = engine.run_single(stats_kernel(5, 60), frame)
+    for eng in ("eager", "streaming"):
+        got = ds.collect("stats", engine=eng).result
+        _assert_tree_equal(got, ref, eng)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        reff = filtering.filter_cases_containing(frame, 2, 60)
+    refd = engine.run_single(dfg_kernel(5), reff)
+    got = repro.open([p0, p1]).filter(cases_containing(2)).dfg(
+        engine="streaming")
+    _assert_tree_equal(got, refd, "contains across boundary")
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_mixed_version_multi_log_both_backends(tmp_path, impl):
+    """Satellite: a Dataset over one v1, one v2, and one v3 file mines
+    bitwise-equal to the concatenated in-memory frame, under both
+    REPRO_SEGMENT_BACKENDs."""
+    with backend.use_backend(impl):
+        frame, tables = synthetic.generate(num_cases=90, num_activities=6,
+                                           seed=7)
+        paths = _split_paths(frame, tables, tmp_path, case_cuts=[30, 60],
+                             versions=[1, 2, 3], row_group_rows=71)
+        ds = repro.open(paths)
+        assert ds.num_cases == 90 and ds.num_activities == 6
+        dims = engine.Dims(6, 90)
+        flt = ds.filter(col(ACTIVITY).isin([0, 2, 3]))
+        mask = filtering.isin_mask(frame[ACTIVITY], np.array([0, 2, 3]))
+        ref_frame = ops.proj(frame, mask)
+        for verb in ("dfg", "stats", "variants", "heuristics"):
+            spec = engine.kernel_spec(verb)
+            ref = engine.run_single(spec.make(dims), ref_frame)
+            for eng in ("eager", "streaming"):
+                got = flt.collect(verb, engine=eng)
+                _assert_tree_equal(got.result, ref,
+                                   f"v123/{impl}/{verb}/{eng}")
+        # v1 has no row groups to skip, but v2/v3 still prune
+        r = ds.filter((col(CASE) >= 61) & (col(CASE) <= 75)).collect(
+            "dfg", engine="streaming")
+        assert r.report.groups_skipped > 0
+
+
+def test_sharded_engine_1_to_8_shards(logset):
+    """Dataset sharded dispatch == eager reference at 1..8 shards (8
+    virtual devices in a subprocess; DFG + alpha + heuristics)."""
+    paths, _, _ = logset
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import repro
+from repro.query import col
+from repro.core.eventframe import CASE
+
+paths = {paths!r}
+ds = repro.open(paths).filter((col(CASE) >= 50) & (col(CASE) <= 170))
+ref = ds.dfg(engine="eager")
+ref_alpha = ds.alpha(engine="eager")
+ref_net = ds.heuristics(engine="eager")
+for shards in (1, 2, 4, 8):
+    r = ds.collect("dfg", engine="sharded", num_shards=shards)
+    assert r.engine == "sharded"
+    assert r.report.groups_skipped > 0
+    for nm in ("counts", "starts", "ends"):
+        assert (np.asarray(getattr(r.result, nm))
+                == np.asarray(getattr(ref, nm))).all(), (shards, nm)
+for shards in (2, 8):
+    m = ds.alpha(engine="sharded", num_shards=shards)
+    assert m.places == ref_alpha.places and \
+        m.start_activities == ref_alpha.start_activities
+    net = ds.heuristics(engine="sharded", num_shards=shards)
+    assert (np.asarray(net.graph) == np.asarray(ref_net.graph)).all()
+try:
+    ds.collect("variants", engine="sharded")
+except ValueError:
+    print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert res.stdout.strip().endswith("OK")
+
+
+def test_engine_auto_is_cost_based(logset, monkeypatch):
+    """auto must switch engines as the cost thresholds move — the
+    decision reads zone-map selectivity and byte totals, not a constant."""
+    paths, _, _ = logset
+    ds = repro.open(paths)
+    # tiny unselective dataset -> everything survives -> eager
+    r = ds.collect("dfg")
+    assert r.engine == "eager" and r.estimate is not None
+    assert r.estimate.selectivity == 1.0
+    # a selective band -> zone maps refute most groups -> streaming
+    sel = ds.filter((col(CASE) >= 90) & (col(CASE) <= 110))
+    r2 = sel.collect("dfg")
+    assert r2.engine == "streaming"
+    assert r2.estimate.selectivity < engines.PRUNE_RATIO
+    # shrink the eager budget -> even the unselective scan streams
+    monkeypatch.setattr(engines, "EAGER_BYTES", 0)
+    assert ds.collect("dfg").engine == "streaming"
+    # in-memory datasets always run eagerly
+    frame, tables = synthetic.generate(num_cases=30, num_activities=5,
+                                       seed=1)
+    mem = repro.open(frame, tables=tables)
+    assert mem.collect("dfg").engine == "eager"
+    with pytest.raises(ValueError):
+        mem.collect("dfg", engine="warp")
+
+
+def test_in_memory_dataset_matches_files(logset):
+    paths, whole, tables = logset
+    mem = repro.open(whole, tables=tables)
+    assert mem.num_activities == A and mem.num_cases == NC
+    f = (col(CASE) >= 50) & (col(CASE) <= 170)
+    _assert_tree_equal(mem.filter(f).dfg(),
+                       repro.open(paths).filter(f).dfg(engine="streaming"),
+                       "memory == files")
+    tf = mem.filter(f).project([CASE, ACTIVITY]).to_frame()
+    ref = ops.proj(whole, (whole[CASE] >= 50) & (whole[CASE] <= 170))
+    ref = ref.select([CASE, ACTIVITY]).compact()
+    np.testing.assert_array_equal(np.asarray(tf[CASE]), np.asarray(ref[CASE]))
+    assert set(tf.names) == {CASE, ACTIVITY}
+
+
+def test_frame_union_preserves_masks(logset):
+    """In-memory union keeps epsilon masks and the lazy row_valid mask
+    separate (folding them together would change rows_valid())."""
+    paths, whole, tables = logset
+    half = whole.nrows // 2
+    a = whole.take(jnp.arange(0, half))
+    b = whole.take(jnp.arange(half, whole.nrows))
+    a = ops.proj(a, a[ACTIVITY] >= 0)       # attach a row_valid mask
+    u = repro.open(a, tables=tables).union(repro.open(b, tables=tables))
+    np.testing.assert_array_equal(np.asarray(u.frame.rows_valid()),
+                                  np.ones(whole.nrows, bool))
+    _assert_tree_equal(u.dfg(), repro.open(whole, tables=tables).dfg(),
+                       "frame union")
+    with pytest.raises(ValueError):
+        repro.open(a, tables=tables).union(repro.open(paths[0]))
+
+
+def test_to_frame_matches_compact(logset):
+    paths, whole, _ = logset
+    got = repro.open(paths).filter(col(ACTIVITY) == 2).to_frame()
+    ref = ops.proj(whole, whole[ACTIVITY] == 2).compact()
+    for k in (CASE, ACTIVITY):
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(ref[k]))
+
+
+def test_deprecation_shims_warn_and_match(logset):
+    """Satellite: the old eager entry points still work bitwise, but tell
+    the user where the new API lives."""
+    paths, whole, _ = logset
+    ds = repro.open(paths)
+    with pytest.warns(DeprecationWarning, match="Dataset"):
+        old = filtering.filter_attr_values(whole, ACTIVITY, [2, 5])
+    new = ds.filter(col(ACTIVITY).isin([2, 5])).collect(
+        "activity_counts", engine="streaming").result
+    ref = engine.run_single(
+        engine.kernel_spec("activity_counts").make(engine.Dims(A, NC)), old)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(ref))
+    with pytest.warns(DeprecationWarning, match="between"):
+        old_t = filtering.filter_time_range(whole, TIMESTAMP, 3e5, 7e5)
+    new_t = ds.filter(col(TIMESTAMP).between(3e5, 7e5))
+    _assert_tree_equal(new_t.dfg(engine="streaming"),
+                       engine.run_single(dfg_kernel(A), old_t), "time range")
+    with pytest.warns(DeprecationWarning, match="cases_containing"):
+        old_c = filtering.filter_cases_containing(whole, 3, NC)
+    _assert_tree_equal(
+        ds.filter(cases_containing(3)).dfg(engine="streaming"),
+        engine.run_single(dfg_kernel(A), old_c), "contains")
+    with pytest.warns(DeprecationWarning, match="case_size"):
+        old_s = filtering.filter_case_size(whole, 3, 7, NC)
+    _assert_tree_equal(
+        ds.filter(case_size(3, 7)).dfg(engine="streaming"),
+        engine.run_single(dfg_kernel(A), old_s), "case size")
+    with pytest.warns(DeprecationWarning, match="repro.open"):
+        from repro.query import scan
+
+        plan = scan(paths[0])
+    assert isinstance(plan, Plan)
+
+
+def test_pruned_source_survives_reader_close(logset):
+    """Satellite bugfix: closing the pooled EDFReader between iterations
+    must not break a re-iterable pruned source — the reader reopens."""
+    paths, whole, _ = logset
+    plan = Plan(paths[0]).filter(col(CASE) <= 75)
+    src, rep = pruned_source(plan)
+    first = engine.run_streaming(dfg_kernel(A), src)
+    reader = edf.pooled_reader(paths[0])
+    assert not reader.closed            # the scan left a live handle
+    reader.close()
+    assert reader.closed
+    second = engine.run_streaming(dfg_kernel(A), src)   # reopens on demand
+    _assert_tree_equal(first, second, "re-iteration after close")
+    # pool eviction closes handles the same way; a tiny pool exercises it
+    pool = edf.ReaderPool(capacity=1)
+    r0 = pool.get(paths[0])
+    pool.get(paths[1])                  # evicts r0 -> closed
+    assert r0.closed
+    assert r0.read_group(0).nrows > 0   # but still readable (reopen)
+    # the pool hands back the same reader while the file is unchanged
+    assert edf.pooled_reader(paths[0]) is edf.pooled_reader(paths[0])
+
+
+def test_closed_reader_refuses_rewritten_file(tmp_path):
+    """Reopening against a file rewritten in place must fail loudly (the
+    cached header would decode the new bytes as garbage); the pool hands
+    out a fresh reader instead."""
+    frame, tables = synthetic.generate(num_cases=20, num_activities=4,
+                                       seed=2)
+    p = str(tmp_path / "mut.edf")
+    edf.write(p, frame, tables, row_group_rows=31)
+    reader = edf.pooled_reader(p)
+    assert reader.read_group(0).nrows > 0
+    reader.close()
+    os.utime(p, ns=(1, 1))              # simulate an in-place rewrite
+    with pytest.raises(ValueError, match="changed on disk"):
+        reader.read_group(0)
+    fresh = edf.pooled_reader(p)        # pool re-stats and replaces it
+    assert fresh is not reader
+    assert fresh.read_group(0).nrows > 0
+
+
+def test_kernel_registry_is_public_and_complete():
+    specs = engine.kernel_specs()
+    for verb in VERBS + ["activity_counts", "case_sizes", "case_durations",
+                         "sojourn_times"]:
+        assert verb in specs, verb
+        assert callable(specs[verb].make)
+    assert specs["dfg"].sharded_state == "dfg"
+    assert specs["alpha"].sharded_state == "dfg"
+    assert specs["heuristics"].sharded_state == "discovery"
+    assert specs["variants"].sharded_state is None
+    with pytest.raises(KeyError, match="registered"):
+        engine.kernel_spec("nope")

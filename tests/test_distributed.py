@@ -166,7 +166,7 @@ from repro.core.dfg import dfg_kernel
 from repro.core.discovery import discovery_kernel
 from repro.data import synthetic
 from repro.storage import edf
-from repro.query import col, scan
+from repro.query import Plan, col
 from repro.distributed.query import (query_sharded_dfg_host,
                                      query_sharded_discovery_host)
 
@@ -174,7 +174,7 @@ frame, tables = synthetic.generate(num_cases=3000, num_activities=11, seed=4)
 d = tempfile.mkdtemp()
 p = os.path.join(d, "q.edf")
 edf.write(p, frame, tables, row_group_rows=1111)
-plan = scan(p).filter(col(CASE).between(500, 900))
+plan = Plan(p).filter(col(CASE).between(500, 900))
 c = frame[CASE]
 ff = ops.proj(frame, (c >= 500) & (c <= 900))
 ref = engine.run_single(dfg_kernel(11), ff)

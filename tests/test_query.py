@@ -24,8 +24,8 @@ from repro.core.stats import (activity_counts_kernel, case_durations_kernel,
                               case_sizes_kernel, sojourn_times_kernel)
 from repro.core.variants import variants_kernel
 from repro.data import synthetic
-from repro.query import (case_size, cases_containing, col, compile_plan,
-                         execute, execute_frame, pruned_source, scan)
+from repro.query import (Plan, case_size, cases_containing, col,
+                         compile_plan, execute, execute_frame, pruned_source)
 from repro.storage import edf
 
 
@@ -37,7 +37,7 @@ def log(tmp_path_factory):
     path = str(tmp_path_factory.mktemp("q") / "log.edf")
     edf.write(path, frame, tables, row_group_rows=199)
     whole, _ = edf.read(path)
-    ncases = compile_plan(scan(path)).num_cases
+    ncases = compile_plan(Plan(path)).num_cases
     return path, whole, ncases
 
 
@@ -149,7 +149,7 @@ def _reference(whole, ncases, name):
 
 def _plan(path, name):
     ts_lo, ts_hi = 3e5, 7e5
-    p = scan(path)
+    p = Plan(path)
     if name == "isin":
         return p.filter(col(ACTIVITY).isin([2, 5]))
     if name == "not_isin":
@@ -203,7 +203,7 @@ def test_selective_predicate_skips_bytes(log):
     """Zone-map parity proof: the pruned scan reads strictly fewer bytes
     than the full scan on a selective predicate, same bitwise result."""
     path, whole, ncases = log
-    plan = scan(path).filter(col(CASE).between(90, 140))
+    plan = Plan(path).filter(col(CASE).between(90, 140))
     pruned, rep = execute(plan, mine=dfg_kernel(8))
     full, rep_full = execute(plan, mine=dfg_kernel(8), prune=False)
     _assert_tree_equal(pruned, full, "pruned vs full")
@@ -217,7 +217,7 @@ def test_selective_predicate_skips_bytes(log):
 
 def test_refuted_everything_yields_empty_result(log):
     path, whole, ncases = log
-    plan = scan(path).filter(col(ACTIVITY) >= 100)   # impossible
+    plan = Plan(path).filter(col(ACTIVITY) >= 100)   # impossible
     got, rep = execute(plan, mine=dfg_kernel(8))
     assert rep.groups_read == 0 and rep.bytes_read == 0
     assert int(np.asarray(got.counts).sum()) == 0
@@ -227,7 +227,7 @@ def test_refuted_everything_yields_empty_result(log):
 def test_mask_exact_false_reads_everything(log):
     """Variants hash masked rows — the planner must not skip groups."""
     path, whole, ncases = log
-    plan = scan(path).filter(col(CASE).between(90, 140))
+    plan = Plan(path).filter(col(CASE).between(90, 140))
     got, rep = execute(plan, mine=variants_kernel(ncases))
     assert rep.groups_skipped == 0
     c = whole[CASE]
@@ -241,7 +241,7 @@ def test_unpruned_stream_masks_refuted_groups(log):
     mask_exact=False consumer forces a full read) — its refuting
     predicate must then be applied as a residual mask, not dropped."""
     path, whole, ncases = log
-    plan = scan(path).filter(col(CASE).between(90, 140))
+    plan = Plan(path).filter(col(CASE).between(90, 140))
     src, rep = pruned_source(plan, mask_exact=False)
     assert rep.groups_skipped == 0
     got = run_streaming(dfg_kernel(8), src)
@@ -262,7 +262,7 @@ def test_cases_containing_custom_column(log):
     """Regression: cases_containing(value, column=...) must test the named
     column, read it in phase one, and prune by its zones."""
     path, whole, ncases = log
-    got, rep = execute(scan(path).filter(cases_containing(500, column="attr0")),
+    got, rep = execute(Plan(path).filter(cases_containing(500, column="attr0")),
                        mine=dfg_kernel(8))
     case = np.asarray(whole[CASE])
     hit_cases = np.unique(case[np.asarray(whole["attr0"]) == 500])
@@ -274,7 +274,7 @@ def test_cases_containing_custom_column(log):
 def test_execute_frame_all_groups_refuted(log):
     path, whole, ncases = log
     frame, tables, rep = execute_frame(
-        scan(path).filter(col(ACTIVITY) >= 100).project([CASE]))
+        Plan(path).filter(col(ACTIVITY) >= 100).project([CASE]))
     assert frame.nrows == 0 and set(frame.names) == {CASE}
     assert ACTIVITY not in tables      # projection filters the tables too
     assert rep.groups_read == 0
@@ -282,7 +282,7 @@ def test_execute_frame_all_groups_refuted(log):
 
 def test_projection_pushdown_reads_fewer_columns(log):
     path, whole, ncases = log
-    plan = scan(path).filter(col(ACTIVITY).isin([2])).project(
+    plan = Plan(path).filter(col(ACTIVITY).isin([2])).project(
         [CASE, ACTIVITY])
     _, rep = execute(plan, mine=dfg_kernel(8))
     reader = edf.EDFReader(path)
@@ -293,7 +293,7 @@ def test_projection_pushdown_reads_fewer_columns(log):
 
 def test_execute_frame_matches_compact(log):
     path, whole, ncases = log
-    plan = (scan(path).filter(col(CASE).between(90, 140))
+    plan = (Plan(path).filter(col(CASE).between(90, 140))
             .project([CASE, ACTIVITY]))
     frame, tables, rep = execute_frame(plan)
     c = whole[CASE]
@@ -312,7 +312,7 @@ def test_older_versions_prune_via_synthesized_zones(tmp_path, log, version):
     p = str(tmp_path / f"old{version}.edf")
     kw = {"row_group_rows": 199} if version == 2 else {}
     edf.write(p, whole, edf.EDFReader(path).tables, version=version, **kw)
-    plan = scan(p).filter(col(CASE).between(90, 140))
+    plan = Plan(p).filter(col(CASE).between(90, 140))
     got, rep = execute(plan, mine=dfg_kernel(8))
     c = whole[CASE]
     ref = engine.run_single(dfg_kernel(8),
@@ -324,7 +324,7 @@ def test_older_versions_prune_via_synthesized_zones(tmp_path, log, version):
 
 def test_pruned_source_feeds_streaming_engine(log):
     path, whole, ncases = log
-    src, rep = pruned_source(scan(path).filter(col(CASE) <= 75))
+    src, rep = pruned_source(Plan(path).filter(col(CASE) <= 75))
     got = run_streaming(dfg_kernel(8), src)
     ref = engine.run_single(dfg_kernel(8), ops.proj(whole, whole[CASE] <= 75))
     _assert_tree_equal(got, ref)
@@ -335,7 +335,7 @@ def test_pruned_source_feeds_streaming_engine(log):
 def test_case_predicate_accepts_decoded_activity_name(log):
     path, whole, ncases = log
     table = edf.EDFReader(path).tables[ACTIVITY]
-    got, _ = execute(scan(path).filter(cases_containing(table[4])),
+    got, _ = execute(Plan(path).filter(cases_containing(table[4])),
                      mine=dfg_kernel(8))
     ref = engine.run_single(dfg_kernel(8),
                             filtering.filter_cases_containing(whole, 4, ncases))
@@ -344,12 +344,12 @@ def test_case_predicate_accepts_decoded_activity_name(log):
 
 def test_plan_describe_and_unknown_column(log):
     path, _, _ = log
-    plan = scan(path).filter(col(ACTIVITY) == 1).project([CASE, ACTIVITY])
+    plan = Plan(path).filter(col(ACTIVITY) == 1).project([CASE, ACTIVITY])
     assert "scan" in plan.describe() and "project" in plan.describe()
     with pytest.raises(KeyError):
-        execute(scan(path).filter(col("nope") == 1), mine=dfg_kernel(8))
+        execute(Plan(path).filter(col("nope") == 1), mine=dfg_kernel(8))
     with pytest.raises(TypeError):
-        scan(path).filter("not a predicate")
+        Plan(path).filter("not a predicate")
 
 
 def test_float32_constant_never_refutes_matching_rows(tmp_path):
@@ -364,8 +364,8 @@ def test_float32_constant_never_refutes_matching_rows(tmp_path):
     edf.write(p, frame, {ACTIVITY: ["a"]}, row_group_rows=1)
     for pred in (col(TIMESTAMP) <= 0.1, col(TIMESTAMP).between(0.05, 0.1),
                  col(TIMESTAMP) == 0.1):
-        got, rep = execute(scan(p).filter(pred), mine=activity_counts_kernel(1))
-        full, _ = execute(scan(p).filter(pred), mine=activity_counts_kernel(1),
+        got, rep = execute(Plan(p).filter(pred), mine=activity_counts_kernel(1))
+        full, _ = execute(Plan(p).filter(pred), mine=activity_counts_kernel(1),
                           prune=False)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
         assert int(np.asarray(got)[0]) == 1, pred   # float32(0.1) row kept
