@@ -9,9 +9,10 @@ import sys
 import traceback
 
 from . import (bench_complexity, bench_dataset, bench_discovery,
-               bench_distributed_dfg, bench_kernels, bench_query,
-               bench_segment_ops, bench_streaming, bench_table1_loading,
-               bench_table2_sizes, bench_table5_ops, bench_table6_biglogs)
+               bench_distributed_dfg, bench_fusion, bench_kernels,
+               bench_query, bench_segment_ops, bench_streaming,
+               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
+               bench_table6_biglogs)
 from .common import header
 
 SUITES = {
@@ -45,6 +46,11 @@ SUITES = {
     "dataset": lambda full: bench_dataset.run(
         num_cases=200_000 if full else 50_000,
         out_json="BENCH_dataset.json"),
+    # fused multi-verb collection vs separate scans + prefetch sweep;
+    # writes BENCH_fusion.json
+    "fusion": lambda full: bench_fusion.run(
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_fusion.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

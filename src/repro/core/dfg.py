@@ -136,7 +136,8 @@ def _dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
         return DFG(state.counts, state.starts, ends)
 
     return engine.ChunkKernel(f"dfg[{impl}]", init, update,
-                              engine.tree_sum, finalize)
+                              engine.tree_sum, finalize,
+                              columns=(CASE, ACTIVITY))
 
 
 # ------------------------------------------------- whole-log entry points

@@ -361,7 +361,8 @@ def _discovery_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
         return DiscoveryState(dk.finalize(state["dfg"], carry), state["l2"])
 
     return engine.ChunkKernel(f"discovery[{impl}]", init, update,
-                              engine.tree_sum, finalize)
+                              engine.tree_sum, finalize,
+                              columns=(ACTIVITY, CASE))
 
 
 def _dfg_kernel_for(num_activities: int, impl: str) -> engine.ChunkKernel:
@@ -376,7 +377,8 @@ def alpha_kernel(num_activities: int, min_count: int = 1,
     dk = dfg_kernel(num_activities, method)
     return engine.ChunkKernel(
         f"alpha[{dk.name}]", dk.init, dk.update, dk.merge,
-        lambda s, c: discover_alpha(dk.finalize(s, c), min_count))
+        lambda s, c: discover_alpha(dk.finalize(s, c), min_count),
+        mask_exact=dk.mask_exact, columns=dk.columns)
 
 
 def heuristics_kernel(num_activities: int, method: str = "auto",
@@ -385,7 +387,8 @@ def heuristics_kernel(num_activities: int, method: str = "auto",
     k = discovery_kernel(num_activities, method)
     return engine.ChunkKernel(
         f"heuristics[{k.name}]", k.init, k.update, k.merge,
-        lambda s, c: discover_heuristics(k.finalize(s, c), **thresholds))
+        lambda s, c: discover_heuristics(k.finalize(s, c), **thresholds),
+        mask_exact=k.mask_exact, columns=k.columns)
 
 
 # ------------------------------------------------- whole-log entry points

@@ -62,6 +62,12 @@ class ChunkKernel:
     predicate with an O(segments) ghost chunk instead of reading it — the
     variants kernel hashes invalid rows too (matching the whole-log
     fingerprints) and therefore opts out.
+
+    ``columns`` names the event columns ``update`` reads (what a
+    projected scan must materialize for this kernel).  The empty tuple
+    means "unknown — read everything"; :func:`compose` unions member
+    column sets, so a fused kernel's scan can never starve one member of
+    a column it needs.
     """
 
     name: str
@@ -70,6 +76,7 @@ class ChunkKernel:
     merge: Callable[[State, State], State]
     finalize: Callable[[State, Carry], Any]
     mask_exact: bool = True
+    columns: tuple = ()
 
 
 # ------------------------------------------------------- kernel registry
@@ -100,7 +107,9 @@ class KernelSpec:
       sums, validity-blind hashes);
     * ``from_sharded(state, **kwargs)`` — host-side finalize mapping that
       distributed state to the verb's result (identity for DFG, the model
-      discovery step for alpha/heuristics).
+      discovery step for alpha/heuristics);
+    * ``members`` — for fused specs (:func:`compose_specs`): the member
+      verb names, in collection order (empty for an ordinary verb).
     """
 
     name: str
@@ -109,6 +118,7 @@ class KernelSpec:
     sharded_state: str | None = None
     from_sharded: Callable | None = None
     doc: str = ""
+    members: tuple = ()
 
 
 _KERNEL_SPECS: dict[str, KernelSpec] = {}
@@ -242,11 +252,30 @@ def run_single(kernel: ChunkKernel, frame: Chunk):
     return kernel.finalize(state, carry)
 
 
+def union_columns(column_sets: Iterable[tuple]) -> tuple:
+    """Union column requirements in first-seen order; any *unknown* set
+    (the empty tuple) makes the union unknown — read everything."""
+    out: list = []
+    for cols in column_sets:
+        if not cols:
+            return ()
+        for c in cols:
+            if c not in out:
+                out.append(c)
+    return tuple(out)
+
+
 def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
     """Fuse kernels into one that shares a single pass over the stream.
 
     States/carries are dicts keyed like ``kernels``; ``finalize`` returns a
     dict of results. One disk scan computes DFG + stats + variants at once.
+
+    The fused kernel's ``columns`` is the *union* of the members' column
+    requirements (unknown if any member's is unknown), and ``mask_exact``
+    the conjunction — projection pushdown cannot starve a member of a
+    column it reads, and pruning degrades to the unpruned stream as soon
+    as one member consumes masked rows.
     """
     names = tuple(kernels)
 
@@ -269,7 +298,49 @@ def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
 
     return ChunkKernel("compose(" + ",".join(names) + ")",
                        init, update, merge, finalize,
-                       mask_exact=all(k.mask_exact for k in kernels.values()))
+                       mask_exact=all(k.mask_exact for k in kernels.values()),
+                       columns=union_columns(
+                           k.columns for k in kernels.values()))
+
+
+def compose_specs(specs: Mapping[str, KernelSpec]) -> KernelSpec:
+    """Fuse registered verbs into one first-class :class:`KernelSpec`.
+
+    The fused spec is what makes multi-verb collection an ordinary verb to
+    every driver: its ``make`` builds the :func:`compose` of the member
+    kernels (``verb_kwargs`` routes per-verb options), its ``columns`` is
+    the union of the member column sets (the projection a shared scan must
+    read), and its ``sharded_state`` is ``"fused"`` exactly when *every*
+    member has an exact distributed lowering — ``repro.distributed.query``
+    then drives the composed state kernels through the same ppermute-halo
+    + psum path in one pass.  Results come back as ``{verb: result}``,
+    bitwise equal per verb to running each member alone.
+    """
+    specs = dict(specs)
+    if not specs:
+        raise ValueError("compose_specs() needs at least one verb")
+    names = tuple(specs)
+
+    def make(dims: Dims, verb_kwargs: Mapping[str, dict] | None = None,
+             **common) -> ChunkKernel:
+        vk = dict(verb_kwargs or {})
+        unknown = set(vk) - set(names)
+        if unknown:
+            raise KeyError(f"verb_kwargs for verbs not in the fused set: "
+                           f"{sorted(unknown)} (fusing {list(names)})")
+        return compose({v: specs[v].make(dims, **{**common, **vk.get(v, {})})
+                        for v in names})
+
+    sharded = ("fused" if all(s.sharded_state is not None
+                              for s in specs.values()) else None)
+    return KernelSpec(
+        name="fused(" + ",".join(names) + ")",
+        make=make,
+        columns=union_columns(s.columns for s in specs.values()),
+        sharded_state=sharded,
+        from_sharded=None,      # the fused driver finalizes per member
+        doc="fused multi-verb collection: " + ", ".join(names),
+        members=names)
 
 
 def tree_sum(a, b):

@@ -69,7 +69,8 @@ def _performance_dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKerne
         return counts, total / jnp.maximum(counts, 1)
 
     return engine.ChunkKernel(f"performance_dfg[{a},{impl}]", init, update,
-                              engine.tree_sum, finalize)
+                              engine.tree_sum, finalize,
+                              columns=(ACTIVITY, CASE, TIMESTAMP))
 
 
 def eventually_follows_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -102,7 +103,8 @@ def _eventually_follows_kernel(num_activities: int, impl: str) -> engine.ChunkKe
         return state.astype(jnp.int32)
 
     return engine.ChunkKernel(f"eventually_follows[{a},{impl}]", init, update,
-                              engine.tree_sum, finalize)
+                              engine.tree_sum, finalize,
+                              columns=(ACTIVITY, CASE))
 
 
 # ------------------------------------------------- whole-log entry points

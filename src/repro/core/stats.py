@@ -53,7 +53,8 @@ def _case_sizes_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
         return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
 
     return engine.ChunkKernel(f"case_sizes[{num_cases},{impl}]", init, update,
-                              engine.tree_sum, lambda s, c: s)
+                              engine.tree_sum, lambda s, c: s,
+                              columns=(ACTIVITY, CASE))
 
 
 def case_durations_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -91,7 +92,8 @@ def _case_durations_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
         return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
 
     return engine.ChunkKernel(f"case_durations[{num_cases},{impl}]", init,
-                              update, merge, finalize)
+                              update, merge, finalize,
+                              columns=(ACTIVITY, CASE, TIMESTAMP))
 
 
 def activity_counts_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -113,7 +115,8 @@ def _activity_counts_kernel(num_activities: int, impl: str) -> engine.ChunkKerne
         return state, engine.next_row_carry(carry, chunk)
 
     return engine.ChunkKernel(f"activity_counts[{a},{impl}]", init, update,
-                              engine.tree_sum, lambda s, c: s)
+                              engine.tree_sum, lambda s, c: s,
+                              columns=(ACTIVITY, CASE))
 
 
 def sojourn_times_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -148,7 +151,8 @@ def _sojourn_times_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
         return tot / jnp.maximum(cnt, 1)
 
     return engine.ChunkKernel(f"sojourn_times[{a},{impl}]", init, update,
-                              engine.tree_sum, finalize)
+                              engine.tree_sum, finalize,
+                              columns=(ACTIVITY, CASE, TIMESTAMP))
 
 
 # ------------------------------------------------- whole-log entry points

@@ -110,7 +110,8 @@ def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
     # hashing ignores row validity (whole-log parity), so a fully-masked
     # chunk still changes fingerprints: the query layer must read it
     return engine.ChunkKernel(f"variants[{num_cases},{impl}]", init, update,
-                              merge, finalize, mask_exact=False)
+                              merge, finalize, mask_exact=False,
+                              columns=(ACTIVITY, CASE))
 
 
 # ------------------------------------------------- whole-log entry points

@@ -222,14 +222,37 @@ class Dataset:
             lines.append(f"  project {list(self.projection)}")
         return "\n".join(lines)
 
-    def explain(self, verb: str = "dfg") -> str:
-        """The plan plus the engine the cost model would pick for ``verb``."""
+    def explain(self, verb: str | None = "dfg",
+                verbs: Iterable[str] | None = None) -> str:
+        """The plan, the engine the calibrated cost model would pick, and
+        — for a fused collection (``verbs=[...]``) — the fused plan: the
+        member verbs, the shared scan columns, whether pruning survives
+        the ``mask_exact`` intersection, and the prefetch depth."""
+        from repro.core.engine import compose_specs
+        from repro.query.exec import prefetch_depth
+
+        if verbs is not None:
+            spec = compose_specs({v: engines.spec_for(v) for v in verbs})
+        else:
+            spec = engines.spec_for(verb)
         est = engines.estimate(self) if self.is_files else None
-        choice = engines.choose(self, engines.spec_for(verb), est)
+        choice = engines.choose(self, spec, est)
         lines = [self.describe(), f"  engine {choice} (auto)"]
         if est is not None:
+            cal = engines.calibration()
             lines.append(f"  estimate {est.bytes_est}/{est.bytes_total} "
                          f"bytes, {est.groups_est}/{est.groups_total} groups")
+            lines.append(f"  cost eager~{cal.eager_us(est):.0f}us "
+                         f"streaming~{cal.streaming_us(est):.0f}us "
+                         f"(calibration: {cal.source})")
+        if verbs is not None:
+            dims = engines._engine.Dims(self.num_activities, self.num_cases)
+            kernel = spec.make(dims)
+            prune = "pruned" if kernel.mask_exact else (
+                "unpruned (a member consumes masked rows)")
+            lines.append(f"  fused [{', '.join(spec.members)}] -> one "
+                         f"{prune} scan of {list(spec.columns)}")
+            lines.append(f"  prefetch {prefetch_depth()} group(s) ahead")
         return "\n".join(lines)
 
     # ------------------------------------------------------------- verbs
@@ -240,6 +263,40 @@ class Dataset:
         the engine that ran (the named verbs below are sugar over this)."""
         return engines.collect(self, verb, engine=engine,
                                num_shards=num_shards, **kwargs)
+
+    def collect_many(self, verbs: Iterable[str], *, engine: str = "auto",
+                     num_shards: int | None = None,
+                     prefetch: int | None = None,
+                     verb_kwargs: Mapping[str, dict] | None = None,
+                     **common) -> "engines.CollectManyResult":
+        """Run several verbs in ONE pass — one fused kernel over one scan
+        (or one eager load / one sharded gather), each verb's result
+        bitwise equal to its separate :meth:`collect`::
+
+            res = ds.collect_many(["dfg", "stats", "variants"])
+            res["dfg"], res["stats"], res["variants"]
+
+        ``verb_kwargs={"alpha": {"min_count": 2}}`` routes per-verb
+        options; remaining keyword arguments apply to every member.
+        Results are the verbs' raw kernel outputs (``variants`` yields the
+        fingerprint triple — post-process with
+        ``repro.core.variants._counts_from_fps`` as :meth:`variants` does).
+        """
+        return engines.collect_many(self, verbs, engine=engine,
+                                    num_shards=num_shards, prefetch=prefetch,
+                                    verb_kwargs=verb_kwargs, **common)
+
+    def profile(self, *, engine: str = "auto",
+                verb_kwargs: Mapping[str, dict] | None = None,
+                **common) -> "engines.CollectManyResult":
+        """Every registered verb, one pass: the whole-dashboard collection
+        (``collect_many`` over the full kernel registry).  Needs the full
+        event schema (timed verbs read ``time:timestamp``)."""
+        from repro.core.engine import kernel_specs
+
+        verbs = tuple(n for n, s in kernel_specs().items() if not s.members)
+        return self.collect_many(verbs, engine=engine,
+                                 verb_kwargs=verb_kwargs, **common)
 
     def dfg(self, *, engine: str = "auto", method: str = "auto", **kw):
         """Directly-follows graph (counts + start/end histograms)."""

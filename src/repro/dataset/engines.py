@@ -16,34 +16,43 @@ Three interchangeable lowerings of one logical plan:
   exact distributed lowering (``KernelSpec.sharded_state``).
 
 ``engine="auto"`` picks between them from *header metadata only*: total
-on-disk bytes per ``edf.file_sizes``-style group accounting, and the
-fraction of groups/bytes the zone maps already refute (case predicates
-are conservatively assumed to keep everything).  The thresholds are
-deliberately simple and environment-tunable:
+on-disk bytes per ``edf.file_sizes``-style group accounting, the
+fraction of groups/bytes the zone maps already refute, and — for
+case-level predicates — the per-group dictionary presence bitsets of
+EDFV0003 zones (a group whose bitset lacks the wanted activity
+contributes no phase-one hits, so its bytes are *estimated* skipped).
+The eager/streaming decision is a **calibrated cost model** rather than
+a static byte threshold: per-byte and per-group costs are fitted by
+least squares to the ``benchmarks/bench_dataset.py`` dispatch-regret
+sweep (``fit_calibration``); the built-in coefficients come from the
+committed ``BENCH_dataset.json`` and can be refitted to the local
+machine via ``REPRO_DATASET_CALIBRATION=/path/to/BENCH_dataset.json``.
+The sharded decision keeps one environment-tunable threshold:
 
-* ``REPRO_DATASET_EAGER_BYTES`` (default 64 MiB) — above this total, never
-  load eagerly;
-* ``REPRO_DATASET_PRUNE_RATIO`` (default 0.5) — below this surviving-bytes
-  fraction, stream (pruning pays even for small files);
 * ``REPRO_DATASET_SHARD_ROWS`` (default 2M) — above this many surviving
   rows, shard when more than one device is attached.
 
 Every lowering returns bitwise-identical results, so a wrong guess costs
 time, never correctness.
+
+**Fused collection** (:func:`collect_many`) resolves several verbs into
+one :func:`~repro.core.engine.compose_specs` fused spec and drives the
+chosen engine ONCE: one pruned scan (columns = the union of the member
+requirements, ``mask_exact`` = their conjunction), one eager load, or
+one sharded pass over the distinct distributed states — each verb's
+result bitwise equal to its separate ``collect`` call.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any
+from typing import Any, Iterable, Mapping
 
 import numpy as np
 
 from repro.core import engine as _engine
 from repro.core.eventframe import CASE, EventFrame
 
-EAGER_BYTES = int(os.environ.get("REPRO_DATASET_EAGER_BYTES", 64 * 2**20))
-PRUNE_RATIO = float(os.environ.get("REPRO_DATASET_PRUNE_RATIO", 0.5))
 SHARD_ROWS = int(os.environ.get("REPRO_DATASET_SHARD_ROWS", 2_000_000))
 
 ENGINES = ("auto", "eager", "streaming", "sharded")
@@ -72,15 +81,110 @@ class CostEstimate:
         return self.bytes_est / self.bytes_total if self.bytes_total else 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Fitted dispatch costs, in microseconds (see module docstring).
+
+    ``eager ~= eager_a + eager_b * bytes_total`` (the whole projected
+    extent — eager decodes everything), ``streaming ~= stream_a +
+    stream_b * bytes_est + stream_g * groups_est`` (only surviving
+    bytes/groups; the intercept is the planner's fixed cost).
+    """
+
+    eager_a: float
+    eager_b: float      # us per byte of the full projected extent
+    stream_a: float
+    stream_b: float     # us per surviving byte the pruned scan reads
+    stream_g: float     # us per surviving row group (per-group overhead)
+    source: str = "builtin"
+
+    def eager_us(self, est: CostEstimate) -> float:
+        return self.eager_a + self.eager_b * est.bytes_total
+
+    def streaming_us(self, est: CostEstimate) -> float:
+        return (self.stream_a + self.stream_b * est.bytes_est
+                + self.stream_g * est.groups_est)
+
+
+# least squares over the committed BENCH_dataset.json sweep (cpu backend);
+# refit to the local machine via REPRO_DATASET_CALIBRATION
+DEFAULT_CALIBRATION = Calibration(
+    eager_a=0.0, eager_b=0.792,
+    stream_a=10367.2, stream_b=0.7532, stream_g=0.0)
+
+
+def fit_calibration(bench: Mapping) -> Calibration:
+    """Least-squares fit of the dispatch cost model to a
+    ``benchmarks/bench_dataset.py`` result dict (its ``sweep`` points
+    carry measured ``us_eager`` / ``us_streaming`` against the bytes and
+    groups each engine touched).
+
+    The sweep varies selectivity over one dataset, so ``bytes_total`` is
+    constant and the eager fit is rank-deficient; the min-norm solution
+    puts the cost on the slope — eager cost extrapolates with file size,
+    which is the behaviour dispatch needs.  The streaming fit tries
+    ``a + b*bytes + g*groups`` and falls back to bytes-only when
+    collinearity drives any coefficient negative (a negative per-byte
+    cost would invert decisions off-sweep)."""
+    pts = [p for p in bench.get("sweep", ())
+           if "us_eager" in p and "us_streaming" in p]
+    if not pts:
+        raise ValueError("no usable sweep points to fit a calibration from")
+    bt = np.array([p["bytes_total"] for p in pts], float)
+    br = np.array([p["bytes_read"] for p in pts], float)
+    gr = np.array([p.get("groups_total", 0) - p.get("groups_skipped", 0)
+                   for p in pts], float)
+    ue = np.array([p["us_eager"] for p in pts], float)
+    us = np.array([p["us_streaming"] for p in pts], float)
+    one = np.ones_like(br)
+    ea, eb = np.linalg.lstsq(np.stack([one, bt], 1), ue, rcond=None)[0]
+    coef = np.linalg.lstsq(np.stack([one, br, gr], 1), us, rcond=None)[0]
+    if len(pts) < 3 or (coef < 0).any():
+        sa, sb = np.linalg.lstsq(np.stack([one, br], 1), us, rcond=None)[0]
+        coef = np.array([sa, sb, 0.0])
+    return Calibration(max(float(ea), 0.0), max(float(eb), 0.0),
+                       max(float(coef[0]), 0.0), max(float(coef[1]), 0.0),
+                       max(float(coef[2]), 0.0), source="fit")
+
+
+_CALIBRATION: Calibration | None = None
+
+
+def calibration() -> Calibration:
+    """The active calibration: fitted from the JSON file named by
+    ``REPRO_DATASET_CALIBRATION`` if set, else the built-in coefficients
+    (cached after first resolution)."""
+    global _CALIBRATION
+    if _CALIBRATION is None:
+        path = os.environ.get("REPRO_DATASET_CALIBRATION", "")
+        if path:
+            import json
+
+            with open(path) as f:
+                fitted = fit_calibration(json.load(f))
+            _CALIBRATION = dataclasses.replace(fitted, source=path)
+        else:
+            _CALIBRATION = DEFAULT_CALIBRATION
+    return _CALIBRATION
+
+
 def estimate(dataset) -> CostEstimate:
-    """Zone-map selectivity estimate for the dataset's current plan."""
-    from repro.query.expr import NONE
+    """Zone-map selectivity estimate for the dataset's current plan.
+
+    Row-level predicates skip groups their zone proofs refute; case-level
+    predicates skip groups whose dictionary presence bitsets show the
+    wanted value cannot occur (``phase1_prove == NONE``) — an *estimate*:
+    a kept case straddling such a group still forces the real scan to
+    read it, so the scan may read slightly more than estimated, never
+    less correctly."""
+    from repro.query.expr import NONE, CasePredicate
     from repro.query.optimize import compile_plan
 
     bt = be = rt = re_ = gt = ge = 0
     for plan in dataset.plan().per_file():
         ph = compile_plan(plan, True)
         exprs = list(ph.proves)
+        preds = [s for s in ph.steps if isinstance(s, CasePredicate)]
         for g in range(ph.reader.num_groups):
             n = ph.reader.group_nrows(g)
             if n == 0:
@@ -91,6 +195,9 @@ def estimate(dataset) -> CostEstimate:
             bt += nbytes
             if any(ph.proves[i][g] == NONE for i in exprs):
                 continue            # provably refuted: the scan skips it
+            if preds and ph.metas is not None and any(
+                    p.phase1_prove(ph.metas[g]) == NONE for p in preds):
+                continue            # presence bitsets: no case hit here
             ge += 1
             re_ += n
             be += nbytes
@@ -111,11 +218,10 @@ def choose(dataset, spec: _engine.KernelSpec,
     if (spec.sharded_state is not None and n_devices > 1
             and est.rows_est >= SHARD_ROWS):
         return "sharded"
-    if est.selectivity < PRUNE_RATIO:
-        return "streaming"          # pruning pays: read under half the bytes
-    if est.bytes_total <= EAGER_BYTES:
-        return "eager"
-    return "streaming"              # too big to hold; stream it
+    cal = calibration()
+    if cal.streaming_us(est) <= cal.eager_us(est):
+        return "streaming"
+    return "eager"
 
 
 # --------------------------------------------------------------- engines
@@ -155,11 +261,16 @@ def eager_frame(dataset) -> EventFrame:
     return frame
 
 
-def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
+def _mesh(num_shards):
     import jax
 
-    from repro.distributed.query import (query_sharded_dfg,
-                                         query_sharded_discovery)
+    devs = jax.devices()
+    num_shards = len(devs) if num_shards is None else int(num_shards)
+    return jax.sharding.Mesh(np.array(devs[:num_shards]), ("data",))
+
+
+def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
+    from repro.distributed.query import query_sharded_multi
 
     if spec.sharded_state is None:
         raise ValueError(
@@ -168,17 +279,40 @@ def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
             f"engine='streaming' or 'eager'")
     if not dataset.is_files:
         raise ValueError("engine='sharded' needs a file-backed dataset")
-    devs = jax.devices()
-    num_shards = len(devs) if num_shards is None else int(num_shards)
-    mesh = jax.sharding.Mesh(np.array(devs[:num_shards]), ("data",))
-    driver = {"dfg": query_sharded_dfg,
-              "discovery": query_sharded_discovery}[spec.sharded_state]
     # same projection/column validation as the other engines (the driver
     # re-projects the scan to its own (activity, case) columns anyway)
     plan = dataset.plan(columns=spec.columns)
-    state, report = driver(plan, dims.num_activities, mesh,
-                           method=kwargs.get("method", "auto"))
-    return spec.from_sharded(state, **kwargs), report
+    out, report = query_sharded_multi(plan, (spec.sharded_state,),
+                                      dims.num_activities, _mesh(num_shards),
+                                      method=kwargs.get("method", "auto"))
+    return spec.from_sharded(out[spec.sharded_state], **kwargs), report
+
+
+def _sharded_many(dataset, specs: Mapping[str, _engine.KernelSpec],
+                  fused: _engine.KernelSpec, dims, num_shards,
+                  verb_kwargs: Mapping[str, dict], common: dict):
+    from repro.distributed.query import query_sharded_multi
+
+    if fused.sharded_state is None:
+        bad = sorted(v for v, s in specs.items() if s.sharded_state is None)
+        raise ValueError(
+            f"fused collection has no exact distributed lowering: verbs "
+            f"{bad} (order-sensitive or validity-blind state); drop them "
+            f"or use engine='streaming' or 'eager'")
+    if not dataset.is_files:
+        raise ValueError("engine='sharded' needs a file-backed dataset")
+    # verbs sharing a distributed state (dfg + alpha, discovery +
+    # heuristics) dedupe: each distinct state is mined once from the one
+    # gathered stream, then every verb finalizes host-side from its state
+    states = tuple(dict.fromkeys(s.sharded_state for s in specs.values()))
+    plan = dataset.plan(columns=fused.columns)
+    out, report = query_sharded_multi(plan, states, dims.num_activities,
+                                      _mesh(num_shards),
+                                      method=common.get("method", "auto"))
+    results = {v: s.from_sharded(out[s.sharded_state],
+                                 **{**common, **dict(verb_kwargs.get(v, {}))})
+               for v, s in specs.items()}
+    return results, report
 
 
 # ------------------------------------------------------------- front door
@@ -194,7 +328,8 @@ class CollectResult:
 
 
 def collect(dataset, verb: str, *, engine: str = "auto",
-            num_shards: int | None = None, **kwargs) -> CollectResult:
+            num_shards: int | None = None, prefetch: int | None = None,
+            **kwargs) -> CollectResult:
     """Resolve the verb through the kernel registry, pick an engine, run."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
@@ -221,8 +356,79 @@ def collect(dataset, verb: str, *, engine: str = "auto",
     from repro.query.exec import execute
 
     kernel = spec.make(dims, **kwargs)
-    result, report = execute(dataset.plan(columns=spec.columns), kernel)
+    result, report = execute(dataset.plan(columns=spec.columns), kernel,
+                             prefetch=prefetch)
     return CollectResult(result, report, "streaming", verb, est)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectManyResult:
+    """Per-verb results of one fused pass, plus how it ran.
+
+    ``results[verb]`` is bitwise equal to ``collect(dataset, verb).result``
+    under the same engine; ``report`` is the single scan's I/O accounting
+    (None for eager).  Indexable: ``res["dfg"]``.
+    """
+
+    results: dict
+    report: Any | None
+    engine: str
+    verbs: tuple
+    estimate: CostEstimate | None = None
+
+    def __getitem__(self, verb: str):
+        return self.results[verb]
+
+
+def collect_many(dataset, verbs: Iterable[str], *, engine: str = "auto",
+                 num_shards: int | None = None, prefetch: int | None = None,
+                 verb_kwargs: Mapping[str, dict] | None = None,
+                 **common) -> CollectManyResult:
+    """Run several registered verbs in ONE pass over the dataset.
+
+    The verbs fuse into a single :func:`~repro.core.engine.compose_specs`
+    spec — one kernel, one scan whose projection is the union of the
+    member column requirements — and dispatch like any other verb:
+    ``engine="auto"`` applies the calibrated cost model to the fused
+    spec, ``"sharded"`` mines each distinct distributed state once from
+    one gathered stream.  A ``mask_exact=False`` member (``variants``)
+    degrades the whole composite to the unpruned stream — still bitwise
+    correct, just reading every surviving group.
+
+    ``verb_kwargs={"alpha": {"min_count": 2}}`` routes per-verb options;
+    other keyword arguments (e.g. ``method=``) apply to every member.
+    """
+    verbs = tuple(verbs)
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    if len(set(verbs)) != len(verbs):
+        raise ValueError(f"duplicate verbs in collect_many: {list(verbs)}")
+    specs = {v: spec_for(v) for v in verbs}
+    fused = _engine.compose_specs(specs)
+    dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
+    vk = dict(verb_kwargs or {})
+    est = None
+    if engine == "auto":
+        est = estimate(dataset) if dataset.is_files else None
+        engine = choose(dataset, fused, est)
+    if engine == "eager":
+        if dataset.is_files:
+            dataset.plan(columns=fused.columns)
+        kernel = fused.make(dims, verb_kwargs=vk, **common)
+        frame = eager_frame(dataset)
+        results = (_engine.run_single(kernel, frame) if frame.nrows
+                   else kernel.finalize(*kernel.init()))
+        return CollectManyResult(dict(results), None, "eager", verbs, est)
+    if engine == "sharded":
+        results, report = _sharded_many(dataset, specs, fused, dims,
+                                        num_shards, vk, common)
+        return CollectManyResult(results, report, "sharded", verbs, est)
+    from repro.query.exec import execute
+
+    kernel = fused.make(dims, verb_kwargs=vk, **common)
+    results, report = execute(dataset.plan(columns=fused.columns), kernel,
+                              prefetch=prefetch)
+    return CollectManyResult(dict(results), report, "streaming", verbs, est)
 
 
 def to_frame(dataset) -> EventFrame:

@@ -83,6 +83,34 @@ def run_sharded_kernel(kernel, fix_end, case, act, valid, *, axis_name,
     return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), state)
 
 
+def run_sharded_composed(kernel, fix_ends: dict, case, act, valid, *,
+                         axis_name, n_dev):
+    """Fused multi-state twin of :func:`run_sharded_kernel` for a
+    ``core.engine.compose`` kernel: per-member ppermute halo (each member
+    at *its* depth — the composed carry is a dict of member carries, so
+    the top-level driver cannot use one depth for all), ONE composed
+    update over the shard, per-member end fix, one leafwise psum.  Every
+    distinct mergeable state crosses the wire once; the event columns
+    cross zero extra times."""
+    state, carry = kernel.init()
+    depths = {m: (2 if "case2" in c else 1) for m, c in carry.items()}
+    deepest = max(depths.values())
+    if case.shape[0] < deepest:
+        raise ValueError(
+            f"{kernel.name}: {case.shape[0]} row(s) per shard < halo depth "
+            f"{deepest}; use fewer shards or a larger frame")
+    halo = {m: shard_halo_carry(c, case, act, valid, axis_name=axis_name,
+                                n_dev=n_dev, depth=depths[m])
+            for m, c in carry.items()}
+    chunk = EventFrame({CASE: case, ACTIVITY: act}, {}, valid)
+    state, carry = kernel.update(state, halo, chunk)
+    is_last = jax.lax.axis_index(axis_name) == n_dev - 1
+    state = {m: fix_ends[m](state[m], carry[m],
+                            (is_last & carry[m]["rv"]).astype(jnp.int32))
+             for m in state}
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), state)
+
+
 def _local_state(case, act, valid, *, num_activities, axis_name, n_dev):
     return run_sharded_kernel(dfg_kernel(num_activities), fix_trailing_end,
                               case, act, valid, axis_name=axis_name,

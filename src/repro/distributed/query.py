@@ -13,10 +13,17 @@ and sharded == streamed == filter-then-mine, bitwise.
 The one boundary the shards cannot resolve is the *stream's* final end
 activity: the last physical row is padding (all-masked), so the trailing
 end is re-applied host-side from the true tail row after the psum.
+
+**Fused collection** (:func:`query_sharded_multi`) mines several
+*distinct* mergeable states — ``"dfg"``, ``"discovery"`` — from ONE
+gathered stream and ONE ``shard_map``: the member state kernels are
+``core.engine.compose``-d, each member gets its own ppermute halo at its
+own depth, and the psum carries every state in one leafwise all-reduce.
+``query_sharded_dfg`` / ``query_sharded_discovery`` are its single-state
+special cases, so fused and separate runs share one code path and are
+bitwise equal state-for-state.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,14 +31,22 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import engine
 from repro.core.dfg import DFG, dfg_kernel
 from repro.core.discovery import DiscoveryState, discovery_kernel
 from repro.core.eventframe import ACTIVITY, CASE
 from repro.query.exec import pruned_source
 from repro.query.plan import MultiPlan, Plan
 
-from .dfg import fix_trailing_end, run_sharded_kernel
+from .dfg import fix_trailing_end, run_sharded_composed
 from .discovery import _fix_end as fix_discovery_end
+
+# every distributed lowering a KernelSpec.sharded_state can name:
+# state name -> (kernel factory(num_activities, method), shard-end fix)
+STATE_DRIVERS = {
+    "dfg": (dfg_kernel, fix_trailing_end),
+    "discovery": (discovery_kernel, fix_discovery_end),
+}
 
 
 def _gather(plan: "Plan | MultiPlan", prune: bool):
@@ -74,31 +89,56 @@ def _pad_to_shards(case, act, rv, n_dev: int):
     return case, act, rv
 
 
-def _run(kernel_factory, fix_end, plan, num_activities, mesh, axis_name,
-         prune, method):
-    case, act, rv, report = _gather(plan, prune)
-    tail = (int(case[-1]), int(act[-1]), bool(rv[-1])) if case.size else None
-    n_dev = mesh.shape[axis_name]
-    case, act, rv = _pad_to_shards(case, act, rv, n_dev)
-    kernel = kernel_factory(num_activities, method)
-
-    def local(case, act, valid):
-        return run_sharded_kernel(
-            kernel, fix_end, case, act, valid, axis_name=axis_name,
-            n_dev=n_dev, halo_depth=2 if "case2" in kernel.init()[1] else 1)
-
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-                   out_specs=P())
-    state = jax.jit(fn)(jnp.asarray(case), jnp.asarray(act), jnp.asarray(rv))
-    return state, tail, report
-
-
 def _apply_tail_end(dfg: DFG, tail) -> DFG:
     if tail is None or not tail[2]:
         return dfg
     return DFG(dfg.counts, dfg.starts,
                dfg.ends.at[tail[1]].add(jnp.int32(1), mode="drop"))
+
+
+def _finish_state(name: str, state, tail):
+    """Host-side tail fix per distributed state (the stream's true last
+    row is padding on-device; see module docstring)."""
+    if name == "dfg":
+        return _apply_tail_end(state, tail)
+    if name == "discovery":
+        return DiscoveryState(_apply_tail_end(state["dfg"], tail),
+                              state["l2"])
+    raise KeyError(f"no distributed lowering named {name!r}; "
+                   f"known: {sorted(STATE_DRIVERS)}")
+
+
+def query_sharded_multi(plan: "Plan | MultiPlan", states, num_activities: int,
+                        mesh, axis_name: str = "data", *, prune: bool = True,
+                        method: str = "auto"):
+    """Mine every distributed state in ``states`` (distinct names from
+    :data:`STATE_DRIVERS`) from ONE gathered pruned stream and ONE
+    ``shard_map``.  Returns ``({state_name: state}, ScanReport)`` — each
+    state bitwise equal to its separate ``query_sharded_*`` run, with the
+    event columns gathered and sharded exactly once however many verbs
+    share the pass."""
+    states = tuple(dict.fromkeys(states))       # dedupe, keep order
+    unknown = set(states) - set(STATE_DRIVERS)
+    if not states or unknown:
+        raise KeyError(f"distributed states must be a non-empty subset of "
+                       f"{sorted(STATE_DRIVERS)}; got {list(states)}")
+    case, act, rv, report = _gather(plan, prune)
+    tail = (int(case[-1]), int(act[-1]), bool(rv[-1])) if case.size else None
+    n_dev = mesh.shape[axis_name]
+    case, act, rv = _pad_to_shards(case, act, rv, n_dev)
+    kernel = engine.compose({s: STATE_DRIVERS[s][0](num_activities, method)
+                             for s in states})
+    fix_ends = {s: STATE_DRIVERS[s][1] for s in states}
+
+    def local(case, act, valid):
+        return run_sharded_composed(kernel, fix_ends, case, act, valid,
+                                    axis_name=axis_name, n_dev=n_dev)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+                   out_specs=P())
+    out = jax.jit(fn)(jnp.asarray(case), jnp.asarray(act), jnp.asarray(rv))
+    return {s: _finish_state(s, out[s], tail) for s in states}, report
 
 
 def query_sharded_dfg(plan: "Plan | MultiPlan", num_activities: int, mesh,
@@ -107,9 +147,9 @@ def query_sharded_dfg(plan: "Plan | MultiPlan", num_activities: int, mesh,
     """Full DFG of a filtered log, mined from the pruned scan sharded over
     ``axis_name``.  Returns ``(DFG, ScanReport)``; counts/starts/ends are
     bitwise equal to ``dfg(filter(read(path)))``."""
-    state, tail, report = _run(dfg_kernel, fix_trailing_end, plan,
-                               num_activities, mesh, axis_name, prune, method)
-    return _apply_tail_end(state, tail), report
+    out, report = query_sharded_multi(plan, ("dfg",), num_activities, mesh,
+                                      axis_name, prune=prune, method=method)
+    return out["dfg"], report
 
 
 def query_sharded_discovery(plan: "Plan | MultiPlan", num_activities: int, mesh,
@@ -117,10 +157,10 @@ def query_sharded_discovery(plan: "Plan | MultiPlan", num_activities: int, mesh,
                             method: str = "auto"):
     """DFG + L2-loop discovery state over the pruned, sharded scan
     (feeds ``discover_alpha`` / ``discover_heuristics`` host-side)."""
-    state, tail, report = _run(discovery_kernel, fix_discovery_end, plan,
-                               num_activities, mesh, axis_name, prune, method)
-    return DiscoveryState(_apply_tail_end(state["dfg"], tail),
-                          state["l2"]), report
+    out, report = query_sharded_multi(plan, ("discovery",), num_activities,
+                                      mesh, axis_name, prune=prune,
+                                      method=method)
+    return out["discovery"], report
 
 
 def query_sharded_dfg_host(plan: "Plan | MultiPlan", num_activities: int, num_shards: int,

@@ -29,10 +29,23 @@ one for the kernels:
 (equal to ``filterN(...).compact()``); ``pruned_source`` exposes the
 pruned stream as a re-iterable ``ChunkedEventFrame`` for custom drivers
 (``repro.distributed.query`` shards it across devices).
+
+**Double buffering** — the scan's wall clock is ``sum(read+decode) +
+sum(kernel update)`` when sequential; a bounded background prefetcher
+(``REPRO_QUERY_PREFETCH``, default 1 group ahead, ``0`` = off) fetches
+and decodes row group *g+1* on the host while the kernel runs on group
+*g*, overlapping the two terms.  Only the ``read_group`` I/O moves off
+the consumer thread: residual masks, segment tracking and ghost-chunk
+synthesis are order-dependent and stay synchronous, so the chunk stream
+— and therefore every kernel result — is bitwise identical with the
+prefetcher on or off.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import queue
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -56,6 +69,7 @@ class ScanReport:
     path: str
     columns: tuple
     pruned: bool
+    prefetch: int = 0           # read-ahead depth the scan ran with
     groups_total: int = 0
     groups_read: int = 0
     groups_skipped: int = 0
@@ -95,7 +109,9 @@ def merge_reports(reports) -> ScanReport:
         return reports[0]
     out = ScanReport(";".join(r.path for r in reports),
                      reports[0].columns if reports else (),
-                     any(r.pruned for r in reports), per_file=reports)
+                     any(r.pruned for r in reports),
+                     prefetch=max(r.prefetch for r in reports),
+                     per_file=reports)
     for f in ("groups_total", "groups_read", "groups_skipped",
               "groups_proved", "rows_total", "rows_read", "bytes_total",
               "bytes_read", "phase1_groups_read", "phase1_bytes_read"):
@@ -122,6 +138,75 @@ def _account(report: ScanReport, physical: PhysicalPlan, schedule,
 
 
 # ----------------------------------------------------------- the stream
+def prefetch_depth(prefetch: int | None = None) -> int:
+    """Resolve the read-ahead depth: explicit argument wins, else the
+    ``REPRO_QUERY_PREFETCH`` env var (default 1 group ahead; 0 disables)."""
+    if prefetch is None:
+        try:
+            prefetch = int(os.environ.get("REPRO_QUERY_PREFETCH", "1"))
+        except ValueError:
+            prefetch = 1
+    return max(int(prefetch), 0)
+
+
+_DONE = object()
+
+
+def _read_ahead(reader: EDFReader, schedule, read_columns, depth: int):
+    """Yield ``(item, frame | None)`` pairs in schedule order, fetching and
+    decoding up to ``depth`` read groups ahead on a daemon thread (the
+    double buffer: group *g+1* decompresses while the kernel runs on *g*).
+    Ghost items pass through with ``frame=None`` — their synthesis is
+    order-dependent and stays on the consumer.  Worker exceptions re-raise
+    at the consumer's matching position; an abandoned consumer (generator
+    closed early) stops the worker via the stop event + queue drain, so no
+    thread is ever left blocked on a full queue."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def _put(payload) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(payload, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def worker():
+        try:
+            for item in schedule:
+                if isinstance(item, GhostItem):
+                    out = (item, None)
+                elif stop.is_set():
+                    return
+                else:
+                    out = (item, reader.read_group(item.index, read_columns))
+                if not _put(out):
+                    return
+            _put(_DONE)
+        except BaseException as exc:  # noqa: BLE001 — re-raised at consumer
+            _put(exc)
+
+    t = threading.Thread(target=worker, daemon=True, name="repro-prefetch")
+    t.start()
+    try:
+        while True:
+            got = q.get()
+            if got is _DONE:
+                return
+            if isinstance(got, BaseException):
+                raise got
+            yield got
+    finally:
+        stop.set()
+        while True:  # unblock a worker parked on a full queue
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+
+
 def _ghost_chunk(item: GhostItem, chunk_columns, reader: EDFReader
                  ) -> EventFrame:
     """One all-masked row per case segment of a skipped run (padded to a
@@ -153,26 +238,48 @@ def _ghost_chunk(item: GhostItem, chunk_columns, reader: EDFReader
 
 
 def _iter_chunks(physical: PhysicalPlan, schedule, keeps: dict,
-                 chunk_columns, read_columns):
+                 chunk_columns, read_columns, prefetch: int | None = None):
     """Yield the pruned chunk stream: read groups with residual masks,
     ghost chunks for skipped runs.  Tracks global segment numbering
     sequentially (read groups from their case column, ghost runs from
-    metadata), so case-level keep masks broadcast to the right rows."""
+    metadata), so case-level keep masks broadcast to the right rows.
+    ``prefetch`` groups are fetched+decoded ahead on a background thread
+    (:func:`prefetch_depth` resolves ``None`` from the environment); the
+    masking below consumes them strictly in schedule order, so the stream
+    is bitwise identical with read-ahead on or off."""
     reader = physical.reader
     steps = physical.steps
+    depth = prefetch_depth(prefetch)
+    if depth > 0:
+        pairs = _read_ahead(reader, schedule, read_columns, depth)
+    else:
+        pairs = ((item, None) for item in schedule)
     # global segment ids are only materialized when a keep mask needs the
     # broadcast; ghost continuation needs just the previous case id
     track_segs = any(getattr(item, "case_steps", ()) for item in schedule)
     last_seg = -1
     prev_case = None
-    for item in schedule:
+    try:
+        yield from _masked_chunks(pairs, reader, steps, keeps, chunk_columns,
+                                  read_columns, track_segs, last_seg,
+                                  prev_case)
+    finally:
+        close = getattr(pairs, "close", None)
+        if close is not None:
+            close()
+
+
+def _masked_chunks(pairs, reader, steps, keeps, chunk_columns, read_columns,
+                   track_segs, last_seg, prev_case):
+    for item, frame in pairs:
         if isinstance(item, GhostItem):
             cont = prev_case is not None and item.first_case == prev_case
             yield _ghost_chunk(item, chunk_columns, reader)
             last_seg += int(item.segments) - (1 if cont else 0)
             prev_case = item.tail["values"][CASE]
             continue
-        frame = reader.read_group(item.index, read_columns)
+        if frame is None:
+            frame = reader.read_group(item.index, read_columns)
         mask = np.ones(frame.nrows, bool)
         for pos in item.residual:
             mask &= np.asarray(steps[pos].mask(frame), bool)
@@ -272,7 +379,8 @@ def _local_keeps(keeps: dict, off: int, num_cases: int) -> dict:
     return {pos: k[off:off + num_cases] for pos, k in keeps.items()}
 
 
-def _multi_phase1(physicals, reports, offsets, total) -> dict:
+def _multi_phase1(physicals, reports, offsets, total,
+                  prefetch: int | None = None) -> dict:
     """Phase one of every case predicate, streamed across the whole file
     set with one kernel (its carry numbers segments globally, so a case
     straddling a file boundary accumulates into a single slot)."""
@@ -301,19 +409,21 @@ def _multi_phase1(physicals, reports, offsets, total) -> dict:
 
         def gen():
             for ph, sched, lk in zip(physicals, schedules, locals_):
-                yield from _iter_chunks(ph, sched, lk, chunk_cols, read_cols)
+                yield from _iter_chunks(ph, sched, lk, chunk_cols, read_cols,
+                                        prefetch)
 
         result = engine.run_streaming(step.phase1_kernel(total), gen())
         keeps[pos] = np.asarray(step.finalize_keep(result), bool)
     return keeps
 
 
-def _multi_compile(mplan: MultiPlan, prune: bool):
+def _multi_compile(mplan: MultiPlan, prune: bool,
+                   prefetch: int | None = None):
     physicals = [compile_plan(p, prune) for p in mplan.per_file()]
     check_homogeneous(ph.reader for ph in physicals)
     reports = [_base_report(ph) for ph in physicals]
     offsets, total = _multi_offsets(physicals)
-    keeps = _multi_phase1(physicals, reports, offsets, total)
+    keeps = _multi_phase1(physicals, reports, offsets, total, prefetch)
     if offsets is None:
         offsets = [0] * len(physicals)
     return physicals, reports, offsets, keeps
@@ -333,7 +443,8 @@ def _multi_schedules(physicals, reports, offsets, keeps, *, ghosts,
 
 
 def multi_pruned_source(mplan: MultiPlan, *, prune: bool = True,
-                        mask_exact: bool = True
+                        mask_exact: bool = True,
+                        prefetch: int | None = None
                         ) -> tuple[ChunkedEventFrame, ScanReport]:
     """Compile a multi-file plan into one re-iterable pruned chunk stream.
 
@@ -342,16 +453,22 @@ def multi_pruned_source(mplan: MultiPlan, *, prune: bool = True,
     the files (the engine's carry crosses file boundaries exactly as it
     crosses row-group boundaries — no state merging, no float reordering).
     The returned report aggregates the per-file reports (``per_file``).
+    ``prefetch`` sets the read-ahead depth of every scan the source runs
+    (``None`` = the ``REPRO_QUERY_PREFETCH`` environment default).
     """
-    physicals, reports, offsets, keeps = _multi_compile(mplan, prune)
+    physicals, reports, offsets, keeps = _multi_compile(mplan, prune,
+                                                        prefetch)
     schedules, locals_ = _multi_schedules(physicals, reports, offsets, keeps,
                                           ghosts=mask_exact,
                                           skippable=mask_exact)
+    depth = prefetch_depth(prefetch)
+    for rep in reports:
+        rep.prefetch = depth
 
     def factory():
         for ph, sched, lk in zip(physicals, schedules, locals_):
             yield from _iter_chunks(ph, sched, lk, ph.chunk_columns,
-                                    ph.read_columns)
+                                    ph.read_columns, depth)
 
     src = ChunkedEventFrame(factory,
                             num_chunks=sum(len(s) for s in schedules),
@@ -371,7 +488,7 @@ def count_cases(plan: "Plan | MultiPlan") -> int | None:
 
 
 def pruned_source(plan: "Plan | MultiPlan", *, prune: bool = True,
-                  mask_exact: bool = True
+                  mask_exact: bool = True, prefetch: int | None = None
                   ) -> tuple[ChunkedEventFrame, ScanReport]:
     """Compile a plan into a re-iterable pruned chunk stream.
 
@@ -383,11 +500,12 @@ def pruned_source(plan: "Plan | MultiPlan", *, prune: bool = True,
     """
     if isinstance(plan, Plan):
         plan = MultiPlan((plan.path,), plan.steps, plan.projection)
-    return multi_pruned_source(plan, prune=prune, mask_exact=mask_exact)
+    return multi_pruned_source(plan, prune=prune, mask_exact=mask_exact,
+                               prefetch=prefetch)
 
 
 def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
-            prune: bool = True):
+            prune: bool = True, prefetch: int | None = None):
     """Fold a chunk kernel over the pruned scan of ``plan``.
 
     Returns ``(result, report)`` with ``result`` bitwise equal to running
@@ -397,7 +515,8 @@ def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
     (the full-scan baseline the benchmarks compare against).
     """
     src, report = pruned_source(
-        plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True))
+        plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True),
+        prefetch=prefetch)
     return engine.run_streaming(mine, src), report
 
 
@@ -418,7 +537,8 @@ def _materialize(parts, physical: PhysicalPlan):
     return concat_frames(parts), tables
 
 
-def execute_frame(plan: "Plan | MultiPlan", *, prune: bool = True):
+def execute_frame(plan: "Plan | MultiPlan", *, prune: bool = True,
+                  prefetch: int | None = None):
     """Materialize the filtered, projected frame (rows the predicates
     refute are dropped — equal to the eager filter chain + ``compact``;
     multi-file plans concatenate in path order).
@@ -427,14 +547,17 @@ def execute_frame(plan: "Plan | MultiPlan", *, prune: bool = True):
     """
     if isinstance(plan, Plan):
         plan = MultiPlan((plan.path,), plan.steps, plan.projection)
-    physicals, reports, offsets, keeps = _multi_compile(plan, prune)
+    physicals, reports, offsets, keeps = _multi_compile(plan, prune, prefetch)
     schedules, locals_ = _multi_schedules(physicals, reports, offsets,
                                           keeps, ghosts=False,
                                           skippable=True)
+    depth = prefetch_depth(prefetch)
+    for rep in reports:
+        rep.prefetch = depth
     parts = []
     for ph, sched, lk in zip(physicals, schedules, locals_):
         parts += [c.compact() for c in
                   _iter_chunks(ph, sched, lk, ph.chunk_columns,
-                               ph.read_columns)]
+                               ph.read_columns, depth)]
     frame, tables = _materialize(parts, physicals[0])
     return frame, tables, merge_reports(reports)

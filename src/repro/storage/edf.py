@@ -265,11 +265,16 @@ def _tables_from_schema(header: dict) -> dict[str, list]:
     return {c["name"]: c["table"] for c in header["columns"] if "table" in c}
 
 
-def _read_group_v2(f, base: int, header: dict, group: dict, want):
-    cols: dict[str, np.ndarray] = {}
-    valid: dict[str, np.ndarray] = {}
+def _fetch_group_v2(f, base: int, header: dict, group: dict, want
+                    ) -> list[tuple]:
+    """Raw (still-compressed) byte extents of one group's projected
+    columns — the only step that touches the shared file handle.  Kept
+    separate from :func:`_decode_group_v2` so a reader can hold its I/O
+    lock for the seek/read pairs only and decompress outside it (what
+    lets a background prefetch thread decode group g+1 while another
+    thread/device works on group g)."""
+    fetched: list[tuple] = []
     codec = header.get("codec", "raw")
-    gn = group["nrows"]
     for meta in header["columns"]:
         name = meta["name"]
         if want is not None and name not in want:
@@ -277,14 +282,33 @@ def _read_group_v2(f, base: int, header: dict, group: dict, want):
         ext = group["columns"][name]
         ccodec = meta.get("codec", codec)
         f.seek(base + ext["offset"])
-        raw = _decode(f.read(ext["nbytes"]), ccodec)
-        cols[name] = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])).copy()
+        raw = f.read(ext["nbytes"])
+        vraw = None
         if "valid_offset" in ext:
             f.seek(base + ext["valid_offset"])
-            vraw = _decode(f.read(ext["valid_nbytes"]), ccodec)
+            vraw = f.read(ext["valid_nbytes"])
+        fetched.append((meta, ccodec, raw, vraw))
+    return fetched
+
+
+def _decode_group_v2(fetched: list[tuple], gn: int) -> EventFrame:
+    """Decompress + deserialize fetched extents (no file handle needed)."""
+    cols: dict[str, np.ndarray] = {}
+    valid: dict[str, np.ndarray] = {}
+    for meta, ccodec, raw, vraw in fetched:
+        name = meta["name"]
+        buf = _decode(raw, ccodec)
+        cols[name] = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])).copy()
+        if vraw is not None:
             valid[name] = np.unpackbits(
-                np.frombuffer(vraw, np.uint8), count=gn).astype(bool)
+                np.frombuffer(_decode(vraw, ccodec), np.uint8),
+                count=gn).astype(bool)
     return EventFrame.from_numpy(cols, valid)
+
+
+def _read_group_v2(f, base: int, header: dict, group: dict, want):
+    return _decode_group_v2(_fetch_group_v2(f, base, header, group, want),
+                            group["nrows"])
 
 
 def _read_v1(path: str, columns):
@@ -425,6 +449,7 @@ class EDFReader:
         self.column_names = tuple(sorted(self.schema))
         self.nrows: int = self.header["nrows"]
         self._synth: list[dict] | None = None   # v1/v2 metadata cache
+        self._synth_lock = threading.Lock()     # one synthesis per group
         self._file = None                       # persistent handle (lazy)
         self._io_lock = threading.Lock()        # seek/read pairs are shared
         st = os.stat(path)
@@ -491,26 +516,34 @@ class EDFReader:
         group = self.header["groups"][index]
         want = set(columns) if columns is not None else None
         # one handle serves every plan over this file (ReaderPool); its
-        # seek/read pairs must not interleave across threads
+        # seek/read pairs must not interleave across threads — but the
+        # decompression happens *outside* the lock, so concurrent scans
+        # (or a prefetch thread) of the same pooled reader decode in
+        # parallel instead of serializing on the handle
         with self._io_lock:
-            return _read_group_v2(self._fh(), self.base, self.header, group,
-                                  want)
+            fetched = _fetch_group_v2(self._fh(), self.base, self.header,
+                                      group, want)
+        return _decode_group_v2(fetched, group["nrows"])
 
     def group_meta(self, index: int) -> dict:
         """``{"nrows", "zones", "segments"?, "tail"?}`` for one row group."""
         group = self._groups()[index]
         if "zones" in group:
             return group
-        if self._synth is None:
-            self._synth = [dict() for _ in range(self.num_groups)]
-        if not self._synth[index]:
-            frame = self.read_group(index)
-            data = {k: np.asarray(v) for k, v in frame.columns.items()}
-            valid = {k: np.asarray(v) for k, v in frame.valid.items()}
-            meta = {"nrows": frame.nrows}
-            meta.update(_group_aux(data, valid, self.tables, 0, frame.nrows))
-            self._synth[index] = meta
-        return self._synth[index]
+        # v1/v2 synthesis fallback: serialized so two threads planning over
+        # the same pooled reader synthesize each group exactly once
+        with self._synth_lock:
+            if self._synth is None:
+                self._synth = [dict() for _ in range(self.num_groups)]
+            if not self._synth[index]:
+                frame = self.read_group(index)
+                data = {k: np.asarray(v) for k, v in frame.columns.items()}
+                valid = {k: np.asarray(v) for k, v in frame.valid.items()}
+                meta = {"nrows": frame.nrows}
+                meta.update(_group_aux(data, valid, self.tables, 0,
+                                       frame.nrows))
+                self._synth[index] = meta
+            return self._synth[index]
 
     def group_nbytes(self, index: int, columns: Iterable[str] | None = None
                      ) -> int:

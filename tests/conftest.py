@@ -5,5 +5,20 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 assert len(jax.devices()) >= 1
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables():
+    """Release jitted executables after each test module.
+
+    The full suite compiles thousands of distinct (kernel, chunk-shape)
+    programs; every live CPU executable holds mmap'd JIT code pages, and
+    one process accumulating all of them can exhaust ``vm.max_map_count``
+    (default 65530) and die in a compile-time segfault long before it
+    runs out of memory.  Per-module cache clearing keeps the map count
+    bounded; retracing in later modules is cheap relative to that."""
+    yield
+    jax.clear_caches()

@@ -292,11 +292,16 @@ except ValueError:
 
 
 def test_engine_auto_is_cost_based(logset, monkeypatch):
-    """auto must switch engines as the cost thresholds move — the
-    decision reads zone-map selectivity and byte totals, not a constant."""
+    """auto must switch engines as the fitted costs move — the decision
+    compares the calibrated eager/streaming time predictions (per-byte
+    rates x the zone-map estimate), not a static byte threshold."""
     paths, _, _ = logset
     ds = repro.open(paths)
-    # tiny unselective dataset -> everything survives -> eager
+    # a pinned calibration (no intercepts, streaming 20% dearer per byte)
+    # makes the decision hinge purely on estimated selectivity
+    monkeypatch.setattr(engines, "_CALIBRATION",
+                        engines.Calibration(0.0, 1.0, 0.0, 1.2, 0.0, "test"))
+    # unselective: streaming reads the same bytes at a worse rate -> eager
     r = ds.collect("dfg")
     assert r.engine == "eager" and r.estimate is not None
     assert r.estimate.selectivity == 1.0
@@ -304,9 +309,13 @@ def test_engine_auto_is_cost_based(logset, monkeypatch):
     sel = ds.filter((col(CASE) >= 90) & (col(CASE) <= 110))
     r2 = sel.collect("dfg")
     assert r2.engine == "streaming"
-    assert r2.estimate.selectivity < engines.PRUNE_RATIO
-    # shrink the eager budget -> even the unselective scan streams
-    monkeypatch.setattr(engines, "EAGER_BYTES", 0)
+    assert r2.estimate.selectivity < 0.5
+    cal = engines.calibration()
+    assert cal.streaming_us(r2.estimate) <= cal.eager_us(r2.estimate)
+    # recalibrate: every eager byte ruinous -> even the unselective scan
+    # streams (the knob is the fitted coefficients now, not a threshold)
+    monkeypatch.setattr(engines, "_CALIBRATION",
+                        engines.Calibration(0.0, 1e9, 0.0, 1.2, 0.0, "test"))
     assert ds.collect("dfg").engine == "streaming"
     # in-memory datasets always run eagerly
     frame, tables = synthetic.generate(num_cases=30, num_activities=5,
