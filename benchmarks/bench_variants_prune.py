@@ -1,0 +1,242 @@
+"""Variant-band pruning benchmark: header sketches vs full decode.
+
+Sweeps ``variant_in`` selectivity over a partitioned synthetic log and
+measures what resolving the per-case keep mask from the header sketch
+band alone buys: groups skipped, bytes decoded, and wall clock against
+the unpruned (eager: read-everything-then-mask) baseline — with bitwise
+parity asserted at every point, for the lone ``variants`` verb and for a
+fused 4-verb ``collect_many`` that includes it.
+
+``--smoke`` asserts the acceptance gates: pruned == unpruned bitwise,
+skip ratio > 0 at every selectivity, and < 25% of the bytes decoded at
+the ~1% point (fused collection included).
+
+Writes the ``BENCH_variants.json`` trajectory artifact.
+
+Standalone:  python benchmarks/bench_variants_prune.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only variants_prune
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # script mode
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+SELECTIVITIES = (0.01, 0.10, 0.50)
+FUSED_VERBS = ("dfg", "stats", "variants", "heuristics")
+
+
+def _variant_census(frame):
+    """[(fingerprint, case_count)] sorted most-frequent-first."""
+    from repro.core import ACTIVITY, CASE
+    from repro.core.polyhash import sequence_fingerprint
+
+    case = np.asarray(frame[CASE])
+    act = np.asarray(frame[ACTIVITY])
+    seqs: dict = {}
+    for c, a in zip(case.tolist(), act.tolist()):
+        seqs.setdefault(c, []).append(a)
+    census: dict = {}
+    for seq in seqs.values():
+        fp = sequence_fingerprint(seq)
+        census[fp] = census.get(fp, 0) + 1
+    return sorted(census.items(), key=lambda kv: -kv[1])
+
+
+def _band_for(census, num_cases, target):
+    """Greedy fingerprint band covering ~``target`` of the cases."""
+    want = max(1, int(num_cases * target))
+    band, covered = [], 0
+    for fp, cnt in census:
+        if covered >= want:
+            break
+        if covered + cnt <= max(want, covered + 1):
+            band.append(fp)
+            covered += cnt
+    return band, covered
+
+
+def _tree_equal(a, b):
+    import dataclasses
+
+    import jax
+
+    if isinstance(a, (jax.Array, np.ndarray)):
+        return bool((np.asarray(a) == np.asarray(b)).all())
+    if dataclasses.is_dataclass(a) and not isinstance(a, type):
+        return type(a) is type(b) and all(
+            _tree_equal(getattr(a, f.name), getattr(b, f.name))
+            for f in dataclasses.fields(a))
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, (tuple, list)):
+        return len(a) == len(b) and all(
+            _tree_equal(x, y) for x, y in zip(a, b))
+    return a == b
+
+
+def run(num_cases: int = 50_000, num_activities: int = 12, seed: int = 47,
+        num_files: int = 4, cases_per_group: int = 8,
+        out_json: str | None = "BENCH_variants.json", smoke: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.core import CASE
+    from repro.data import synthetic
+    from repro.query import variant_in
+    from repro.storage import edf
+
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=num_activities,
+                                       seed=seed)
+    n = frame.nrows
+    census = _variant_census(frame)
+    emit("variants_prune/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n};variants={len(census)}")
+
+    d = tempfile.mkdtemp()
+    case = np.asarray(frame[CASE])
+    paths = []
+    per = -(-num_cases // num_files)
+    for m in range(num_files):
+        lo = int(np.searchsorted(case, m * per))
+        hi = int(np.searchsorted(case, (m + 1) * per))
+        if lo == hi:
+            continue
+        p = os.path.join(d, f"part_{m:02d}.edf")
+        # band keeps are scattered over the case axis (unlike a CASE-range
+        # predicate), so pruning granularity == group granularity: size
+        # groups in *cases*, not a fixed row count
+        ncases_here = len(np.unique(case[lo:hi]))
+        rows = max(1, (hi - lo) * cases_per_group // max(ncases_here, 1))
+        edf.write(p, frame.take(jnp.arange(lo, hi)), tables, codec="zlib1",
+                  row_group_rows=rows)
+        paths.append(p)
+    total_bytes = sum(os.path.getsize(p) for p in paths)
+    emit("variants_prune/write_partitions", 0.0,
+         f"files={len(paths)};bytes={total_bytes}")
+
+    base = repro.open(paths)
+    points = []
+    for sel in SELECTIVITIES:
+        band, covered = _band_for(census, num_cases, sel)
+        ds = base.filter(variant_in(band))
+
+        pruned = ds.collect("variants", engine="streaming")
+        us_pruned = timeit(lambda: ds.collect("variants",
+                                              engine="streaming"))
+        unpruned = ds.collect("variants", engine="eager")
+        us_unpruned = timeit(lambda: ds.collect("variants", engine="eager"))
+        assert _tree_equal(tuple(pruned.result), tuple(unpruned.result)), \
+            f"pruned != unpruned at sel={sel}"
+        rep = pruned.report
+        assert rep.groups_skipped > 0, f"no groups skipped at sel={sel}"
+        assert rep.phase1_groups_read == 0, \
+            "variant band paid a phase-one pass (want header-only keeps)"
+
+        point = {
+            "selectivity_target": sel,
+            "selectivity_actual": covered / num_cases,
+            "band_size": len(band),
+            "groups_total": rep.groups_total,
+            "groups_skipped": rep.groups_skipped,
+            "bytes_total": rep.bytes_total,
+            "bytes_read": rep.bytes_read,
+            "bytes_fraction": rep.bytes_read / max(rep.bytes_total, 1),
+            "us_pruned": us_pruned * 1e6,
+            "us_unpruned": us_unpruned * 1e6,
+            "speedup": us_unpruned / max(us_pruned, 1e-9),
+        }
+        points.append(point)
+        emit(f"variants_prune/sel={sel}", us_pruned,
+             f"skip={rep.groups_skipped}/{rep.groups_total};"
+             f"bytes={rep.bytes_read}/{rep.bytes_total};"
+             f"speedup={point['speedup']:.2f}x")
+
+    # fused 4-verb collection at the tightest band: pruning must survive
+    # variants riding along with every other verb
+    band, covered = _band_for(census, num_cases, SELECTIVITIES[0])
+    ds = base.filter(variant_in(band))
+    fused = ds.collect_many(FUSED_VERBS, engine="streaming")
+    us_fused = timeit(lambda: ds.collect_many(FUSED_VERBS,
+                                              engine="streaming"))
+    for v in FUSED_VERBS:
+        ref = ds.collect(v, engine="eager").result
+        assert _tree_equal(fused[v], ref), f"fused {v} != eager"
+    frep = fused.report
+    assert frep.groups_skipped > 0, "fused collection lost pruning"
+    fused_point = {
+        "verbs": list(FUSED_VERBS),
+        "selectivity_actual": covered / num_cases,
+        "groups_skipped": frep.groups_skipped,
+        "groups_total": frep.groups_total,
+        "bytes_read": frep.bytes_read,
+        "bytes_total": frep.bytes_total,
+        "bytes_fraction": frep.bytes_read / max(frep.bytes_total, 1),
+        "us_fused": us_fused * 1e6,
+    }
+    emit("variants_prune/fused_4verbs", us_fused,
+         f"skip={frep.groups_skipped}/{frep.groups_total};"
+         f"bytes={frep.bytes_read}/{frep.bytes_total}")
+
+    if smoke:
+        tight = points[0]
+        assert tight["bytes_fraction"] < 0.25, \
+            (f"1% band decoded {tight['bytes_fraction']:.0%} of the bytes "
+             f"(want < 25%)")
+        assert fused_point["bytes_fraction"] < 0.25, \
+            (f"fused 4-verb 1% band decoded "
+             f"{fused_point['bytes_fraction']:.0%} of the bytes (want < 25%)")
+
+    if out_json:
+        artifact = {
+            "bench": "variants_prune",
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "backend": jax.default_backend(),
+            "config": {"num_cases": num_cases,
+                       "num_activities": num_activities, "events": n,
+                       "files": len(paths), "bytes_total": total_bytes,
+                       "distinct_variants": len(census)},
+            "selectivity_sweep": points,
+            "fused_collection": fused_point,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"variants_prune/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return points
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; asserts parity + <25% bytes at 1%")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_variants.json")
+    args = ap.parse_args()
+    header()
+    cases = 200_000 if args.full else (15_000 if args.smoke else 50_000)
+    points = run(num_cases=cases, out_json=args.out, smoke=args.smoke)
+    if args.smoke:
+        print(f"variants_prune/SMOKE_OK,0.0,bytes_fraction="
+              f"{points[0]['bytes_fraction']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,8 @@ _EXPORTS = {
     "col": ("repro.query.expr", "col"),
     "cases_containing": ("repro.query.expr", "cases_containing"),
     "case_size": ("repro.query.expr", "case_size"),
+    "variant_in": ("repro.query.expr", "variant_in"),
+    "variant_of": ("repro.query.expr", "variant_of"),
 }
 
 __all__ = sorted(_EXPORTS)

@@ -55,13 +55,19 @@ class ChunkKernel:
     retraces once per distinct chunk shape (a fixed-size chunk stream plus
     one tail shape compiles exactly twice).
 
-    ``mask_exact`` declares that rows with ``rows_valid() == False``
-    contribute *nothing* to the state (they may still move the carry's
-    case/segment bookkeeping).  This is what lets the query layer
-    (``repro.query``) replace a row group whose rows are all refuted by a
-    predicate with an O(segments) ghost chunk instead of reading it — the
-    variants kernel hashes invalid rows too (matching the whole-log
-    fingerprints) and therefore opts out.
+    ``mask_exact`` declares the kernel stays exact on a pruned stream:
+    either masked rows contribute nothing to the state (the usual case —
+    they may still move the carry's case/segment bookkeeping), or the
+    kernel recovers whatever masked rows would have contributed from the
+    ghost-chunk metadata the query layer supplies.  This is what lets
+    ``repro.query`` replace a row group whose rows are all refuted by a
+    predicate with an O(segments) ghost chunk instead of reading it.
+
+    ``ghost_sketch`` asks the query layer to attach per-segment affine
+    polyhash maps (``repro.core.polyhash.SKETCH_COLUMNS``, composed from
+    EDF header sketches) to the ghost chunks it synthesizes — how the
+    variants kernel replays the exact validity-blind hash of skipped runs
+    without reading them, keeping ``mask_exact=True``.
 
     ``columns`` names the event columns ``update`` reads (what a
     projected scan must materialize for this kernel).  The empty tuple
@@ -77,6 +83,7 @@ class ChunkKernel:
     finalize: Callable[[State, Carry], Any]
     mask_exact: bool = True
     columns: tuple = ()
+    ghost_sketch: bool = False
 
 
 # ------------------------------------------------------- kernel registry
@@ -272,10 +279,10 @@ def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
     dict of results. One disk scan computes DFG + stats + variants at once.
 
     The fused kernel's ``columns`` is the *union* of the members' column
-    requirements (unknown if any member's is unknown), and ``mask_exact``
-    the conjunction — projection pushdown cannot starve a member of a
-    column it reads, and pruning degrades to the unpruned stream as soon
-    as one member consumes masked rows.
+    requirements (unknown if any member's is unknown), ``mask_exact`` the
+    conjunction (every registered verb is pruning-exact, so fused scans
+    always prune), and ``ghost_sketch`` the disjunction — one
+    sketch-consuming member is enough for ghost chunks to carry sketches.
     """
     names = tuple(kernels)
 
@@ -300,7 +307,9 @@ def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
                        init, update, merge, finalize,
                        mask_exact=all(k.mask_exact for k in kernels.values()),
                        columns=union_columns(
-                           k.columns for k in kernels.values()))
+                           k.columns for k in kernels.values()),
+                       ghost_sketch=any(
+                           k.ghost_sketch for k in kernels.values()))
 
 
 def compose_specs(specs: Mapping[str, KernelSpec]) -> KernelSpec:

@@ -23,14 +23,14 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_ops import segment_reduce, segmented_scan
+from repro.kernels.segment_ops import (segment_reduce, segmented_affine,
+                                       segmented_scan)
 
 from .eventframe import ACTIVITY, CASE, EventFrame
+from .polyhash import BASE1 as _BASE1, BASE2 as _BASE2
+from .polyhash import SK_ADD1, SK_ADD2, SK_MUL1, SK_MUL2
 from . import backend as _backend
 from . import engine, ops
-
-_BASE1 = 1_000_003
-_BASE2 = 16_777_619  # FNV prime
 
 
 def _hash_scan(act: jax.Array, starts: jax.Array, h0, impl: str | None):
@@ -55,7 +55,12 @@ def variants_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkK
     fingerprint is scattered when its last event is identified — within the
     chunk, at the next chunk's first row, or at ``finalize`` for the final
     case of the stream.  Hashing ignores row validity, matching the
-    whole-log ``variant_fingerprints``.
+    whole-log ``variant_fingerprints`` — yet the kernel is pruning-exact
+    (``mask_exact=True``): ghost chunks synthesized for refuted row groups
+    carry per-segment affine sketch columns (``core.polyhash``, composed
+    from EDF headers), and the update folds those pre-composed maps through
+    :func:`segmented_affine` instead of hashing rows, reproducing the
+    skipped runs' hashes bitwise.
     """
     return _variants_kernel(num_cases, _backend.resolve(backend))
 
@@ -75,8 +80,19 @@ def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
         fp1, fp2 = state
         adj = engine.adjacent(chunk, carry)
         seg = engine.global_segments(adj, carry)
-        (e1, e2), (hs1, hs2) = _hash_scan(adj.act, adj.new_seg,
-                                          (carry["h1"], carry["h2"]), impl)
+        if SK_MUL1 in chunk:
+            # ghost chunk: each row is a whole case run collapsed to its
+            # composed affine map (padding rows are the identity) — fold
+            # the maps instead of hashing rows; bitwise equal to hashing
+            # the skipped group's actual activity stream
+            hs1, e1 = segmented_affine(chunk[SK_MUL1], chunk[SK_ADD1],
+                                       adj.new_seg, carry["h1"], impl=impl)
+            hs2, e2 = segmented_affine(chunk[SK_MUL2], chunk[SK_ADD2],
+                                       adj.new_seg, carry["h2"], impl=impl)
+        else:
+            (e1, e2), (hs1, hs2) = _hash_scan(adj.act, adj.new_seg,
+                                              (carry["h1"], carry["h2"]),
+                                              impl)
         # the carry case ended iff this chunk opens a new segment at row 0;
         # O(1) halo scatter, not an inner loop
         closed = adj.new_seg[0] & carry["exists"]
@@ -107,11 +123,12 @@ def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
                                        mode="drop")
         return fp1, fp2, jnp.maximum(carry["seg"] + 1, 0)
 
-    # hashing ignores row validity (whole-log parity), so a fully-masked
-    # chunk still changes fingerprints: the query layer must read it
+    # hashing ignores row validity (whole-log parity); pruning stays exact
+    # because ghost chunks carry the skipped runs' composed sketch maps
+    # (ghost_sketch=True asks the query layer to attach them)
     return engine.ChunkKernel(f"variants[{num_cases},{impl}]", init, update,
-                              merge, finalize, mask_exact=False,
-                              columns=(ACTIVITY, CASE))
+                              merge, finalize, mask_exact=True,
+                              columns=(ACTIVITY, CASE), ghost_sketch=True)
 
 
 # ------------------------------------------------- whole-log entry points
@@ -167,5 +184,7 @@ engine.register_kernel(engine.KernelSpec(
     "variants",
     make=lambda dims, backend=None: variants_kernel(dims.num_cases, backend),
     columns=(ACTIVITY, CASE),
-    doc="per-case variant fingerprints (hashing is validity-blind: no "
-        "distributed lowering, scans stream unpruned)"))
+    sharded_state="variants",
+    from_sharded=lambda state, **_: state,
+    doc="per-case variant fingerprints (validity-blind hashing; pruned "
+        "scans replay skipped runs from header sketches)"))

@@ -246,14 +246,42 @@ class Dataset:
                          f"streaming~{cal.streaming_us(est):.0f}us "
                          f"(calibration: {cal.source})")
         if verbs is not None:
-            dims = engines._engine.Dims(self.num_activities, self.num_cases)
-            kernel = spec.make(dims)
-            prune = "pruned" if kernel.mask_exact else (
-                "unpruned (a member consumes masked rows)")
             lines.append(f"  fused [{', '.join(spec.members)}] -> one "
-                         f"{prune} scan of {list(spec.columns)}")
+                         f"pruned scan of {list(spec.columns)}")
             lines.append(f"  prefetch {prefetch_depth()} group(s) ahead")
+        sketch_refuted = self._sketch_refutations()
+        if sketch_refuted is not None:
+            lines.append(f"  sketch keeps refute {sketch_refuted[0]}/"
+                         f"{sketch_refuted[1]} groups (header-only, "
+                         f"no phase-one I/O)")
         return "\n".join(lines)
+
+    def _sketch_refutations(self) -> tuple | None:
+        """(groups refuted by sketch-derived keep masks, nonempty groups)
+        when the plan carries a :class:`~repro.query.expr.SketchPredicate`
+        and every file's variant sketches resolve it header-only; None
+        otherwise (no such predicate, or sketches unavailable)."""
+        from repro.query.exec import (_multi_offsets, _sketch_keeps)
+        from repro.query.expr import SketchPredicate
+        from repro.query.optimize import compile_plan
+
+        if not self.is_files or not any(isinstance(s, SketchPredicate)
+                                        for s in self.steps):
+            return None
+        physicals = [compile_plan(p, True) for p in self.plan().per_file()]
+        offsets, total = _multi_offsets(physicals)
+        keeps = _sketch_keeps(physicals, total, physicals[0].steps)
+        if not keeps:
+            return None
+        refuted = groups = 0
+        for ph, off in zip(physicals, offsets):
+            for g in ph._nonempty():
+                groups += 1
+                lo = off + int(ph.seg_start[g])
+                hi = lo + int(ph.seg_count[g])
+                if any(not k[lo:hi].any() for k in keeps.values()):
+                    refuted += 1
+        return refuted, groups
 
     # ------------------------------------------------------------- verbs
     def collect(self, verb: str, *, engine: str = "auto",
@@ -310,9 +338,13 @@ class Dataset:
     def variants(self, *, engine: str = "auto", **kw) -> dict:
         """{variant fingerprint: number of cases} (the paper's Variants).
 
-        The fingerprint hash is validity-blind, so this verb always reads
-        every surviving group (``mask_exact=False``); there is no sharded
-        lowering.
+        Pruning-exact like every other verb: refuted row groups are
+        skipped and their hash contribution replayed from the per-group
+        affine sketch maps persisted in EDFV0003 headers (synthesized
+        on open for older files), so pruned == eager == sharded bitwise.
+        Filter by result with :func:`repro.variant_in` /
+        :func:`repro.variant_of` — those predicates resolve from the same
+        sketches with zero phase-one I/O.
         """
         from repro.core.variants import _counts_from_fps
 

@@ -275,8 +275,7 @@ def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
     if spec.sharded_state is None:
         raise ValueError(
             f"verb {spec.name!r} has no exact distributed lowering "
-            f"(order-sensitive or validity-blind state); use "
-            f"engine='streaming' or 'eager'")
+            f"(order-sensitive state); use engine='streaming' or 'eager'")
     if not dataset.is_files:
         raise ValueError("engine='sharded' needs a file-backed dataset")
     # same projection/column validation as the other engines (the driver
@@ -284,7 +283,8 @@ def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
     plan = dataset.plan(columns=spec.columns)
     out, report = query_sharded_multi(plan, (spec.sharded_state,),
                                       dims.num_activities, _mesh(num_shards),
-                                      method=kwargs.get("method", "auto"))
+                                      method=kwargs.get("method", "auto"),
+                                      num_cases=dims.num_cases)
     return spec.from_sharded(out[spec.sharded_state], **kwargs), report
 
 
@@ -297,8 +297,8 @@ def _sharded_many(dataset, specs: Mapping[str, _engine.KernelSpec],
         bad = sorted(v for v, s in specs.items() if s.sharded_state is None)
         raise ValueError(
             f"fused collection has no exact distributed lowering: verbs "
-            f"{bad} (order-sensitive or validity-blind state); drop them "
-            f"or use engine='streaming' or 'eager'")
+            f"{bad} (order-sensitive state); drop them or use "
+            f"engine='streaming' or 'eager'")
     if not dataset.is_files:
         raise ValueError("engine='sharded' needs a file-backed dataset")
     # verbs sharing a distributed state (dfg + alpha, discovery +
@@ -308,7 +308,8 @@ def _sharded_many(dataset, specs: Mapping[str, _engine.KernelSpec],
     plan = dataset.plan(columns=fused.columns)
     out, report = query_sharded_multi(plan, states, dims.num_activities,
                                       _mesh(num_shards),
-                                      method=common.get("method", "auto"))
+                                      method=common.get("method", "auto"),
+                                      num_cases=dims.num_cases)
     results = {v: s.from_sharded(out[s.sharded_state],
                                  **{**common, **dict(verb_kwargs.get(v, {}))})
                for v, s in specs.items()}
@@ -391,9 +392,9 @@ def collect_many(dataset, verbs: Iterable[str], *, engine: str = "auto",
     member column requirements — and dispatch like any other verb:
     ``engine="auto"`` applies the calibrated cost model to the fused
     spec, ``"sharded"`` mines each distinct distributed state once from
-    one gathered stream.  A ``mask_exact=False`` member (``variants``)
-    degrades the whole composite to the unpruned stream — still bitwise
-    correct, just reading every surviving group.
+    one gathered stream.  Every registered verb is pruning-exact
+    (``variants`` replays skipped groups from header sketches), so the
+    fused scan always skips refuted groups whatever the member mix.
 
     ``verb_kwargs={"alpha": {"min_count": 2}}`` routes per-verb options;
     other keyword arguments (e.g. ``method=``) apply to every member.

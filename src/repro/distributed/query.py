@@ -15,13 +15,16 @@ activity: the last physical row is padding (all-masked), so the trailing
 end is re-applied host-side from the true tail row after the psum.
 
 **Fused collection** (:func:`query_sharded_multi`) mines several
-*distinct* mergeable states — ``"dfg"``, ``"discovery"`` — from ONE
-gathered stream and ONE ``shard_map``: the member state kernels are
-``core.engine.compose``-d, each member gets its own ppermute halo at its
-own depth, and the psum carries every state in one leafwise all-reduce.
-``query_sharded_dfg`` / ``query_sharded_discovery`` are its single-state
-special cases, so fused and separate runs share one code path and are
-bitwise equal state-for-state.
+*distinct* mergeable states — ``"dfg"``, ``"discovery"``, ``"variants"``
+— from ONE gathered stream and ONE ``shard_map``: the halo-carry state
+kernels are ``core.engine.compose``-d, each member gets its own ppermute
+halo at its own depth, and the psum carries every state in one leafwise
+all-reduce.  Variants rides the same shard_map with its own lowering
+(``distributed.variants`` — per-row affine hash maps, an ``all_gather``
+boundary fold instead of a halo, so ghost rows and shards smaller than a
+case both work).  ``query_sharded_dfg`` / ``query_sharded_discovery``
+are its single-state special cases, so fused and separate runs share one
+code path and are bitwise equal state-for-state.
 """
 from __future__ import annotations
 
@@ -35,58 +38,108 @@ from repro.core import engine
 from repro.core.dfg import DFG, dfg_kernel
 from repro.core.discovery import DiscoveryState, discovery_kernel
 from repro.core.eventframe import ACTIVITY, CASE
+from repro.core.polyhash import BASE1, BASE2, SK_ADD1, SK_ADD2, SK_MUL1, \
+    SK_MUL2
 from repro.query.exec import pruned_source
 from repro.query.plan import MultiPlan, Plan
 
 from .dfg import fix_trailing_end, run_sharded_composed
 from .discovery import _fix_end as fix_discovery_end
+from .variants import run_sharded_variants
 
-# every distributed lowering a KernelSpec.sharded_state can name:
+# every halo-carry distributed lowering a KernelSpec.sharded_state can name:
 # state name -> (kernel factory(num_activities, method), shard-end fix)
 STATE_DRIVERS = {
     "dfg": (dfg_kernel, fix_trailing_end),
     "discovery": (discovery_kernel, fix_discovery_end),
 }
 
+# every sharded state, halo-carry or bespoke ("variants" gathers affine
+# hash maps and folds shard boundaries with an all_gather — see
+# distributed.variants)
+SHARDED_STATES = frozenset(STATE_DRIVERS) | {"variants"}
 
-def _gather(plan: "Plan | MultiPlan", prune: bool):
+
+def _gather(plan: "Plan | MultiPlan", prune: bool, sketch: bool = False):
     """Concatenate the pruned stream's (case, activity, rows_valid).
 
     Multi-file plans concatenate every file's pruned scan in path order
     (``repro.query.multi_pruned_source``), so the shards of a dataset-wide
     mine see one contiguous sorted log with ghost rows standing in for
-    every skipped row group of every file.
+    every skipped row group of every file.  With ``sketch`` the stream's
+    ghost chunks carry composed header sketch maps, and the gather also
+    returns per-row affine hash maps ``(m1, b1, m2, b2)`` — real rows
+    hash as ``(BASE, act+1)``, ghost segment rows as their composed
+    sketch map, ghost padding rows as the identity — the sharded variants
+    input.
     """
     src, report = pruned_source(plan.project((ACTIVITY, CASE)), prune=prune,
-                                mask_exact=True)
-    case_parts, act_parts, rv_parts = [], [], []
+                                mask_exact=True, sketch=sketch)
+    case_parts, act_parts, rv_parts, map_parts = [], [], [], []
     for chunk in src:
         if chunk.nrows == 0:
             continue
         case_parts.append(np.asarray(chunk[CASE]))
-        act_parts.append(np.asarray(chunk[ACTIVITY]))
+        act = np.asarray(chunk[ACTIVITY])
+        act_parts.append(act)
         rv_parts.append(np.asarray(chunk.rows_valid(), bool))
+        if sketch:
+            if SK_MUL1 in chunk:
+                map_parts.append(tuple(np.asarray(chunk[c]) for c in
+                                       (SK_MUL1, SK_ADD1, SK_MUL2, SK_ADD2)))
+            else:
+                v = act.astype(np.uint32) + 1
+                map_parts.append((np.full(v.shape, BASE1, np.uint32), v,
+                                  np.full(v.shape, BASE2, np.uint32), v))
     if not case_parts:
         z = np.zeros(0, np.int64)
-        return z, z.astype(np.int32), np.zeros(0, bool), report
+        maps = tuple(np.zeros(0, np.uint32) for _ in range(4)) \
+            if sketch else None
+        return z, z.astype(np.int32), np.zeros(0, bool), maps, report
+    maps = tuple(np.concatenate([p[i] for p in map_parts])
+                 for i in range(4)) if sketch else None
     return (np.concatenate(case_parts), np.concatenate(act_parts),
-            np.concatenate(rv_parts), report)
+            np.concatenate(rv_parts), maps, report)
 
 
-def _pad_to_shards(case, act, rv, n_dev: int):
+def _pad_to_shards(case, act, rv, n_dev: int, maps=None):
     """Pad with >= 1 all-masked copies of the last row so every shard is
-    equally sized and the trailing end is *never* resolved on-device."""
+    equally sized and the trailing end is *never* resolved on-device.
+    Hash map padding is the *identity* map (1, 0): the padded rows extend
+    the final case without touching its hash."""
     n = case.shape[0]
     if n == 0:
         case = np.zeros(1, np.int64)
         act = np.zeros(1, np.int32)
         rv = np.zeros(1, bool)
+        if maps is not None:
+            maps = tuple(np.zeros(1, np.uint32) for _ in range(4))
         n = 1
     pad = (-(n + 1)) % n_dev + 1
     case = np.concatenate([case, np.full(pad, case[-1], case.dtype)])
     act = np.concatenate([act, np.full(pad, act[-1], act.dtype)])
     rv = np.concatenate([rv, np.zeros(pad, bool)])
-    return case, act, rv
+    if maps is not None:
+        one = np.ones(pad, np.uint32)
+        zero = np.zeros(pad, np.uint32)
+        maps = tuple(np.concatenate([m, one if i % 2 == 0 else zero])
+                     for i, m in enumerate(maps))
+    return case, act, rv, maps
+
+
+def _segment_markers(case):
+    """Global ``(starts, seg, ends)`` of the padded case column — the
+    variants lowering's segment geometry (host-derived once, sliced per
+    shard by the shard_map)."""
+    n = case.shape[0]
+    starts = np.zeros(n, bool)
+    starts[0] = True
+    starts[1:] = case[1:] != case[:-1]
+    seg = np.cumsum(starts, dtype=np.int64).astype(np.int32) - 1
+    ends = np.zeros(n, bool)
+    ends[:-1] = starts[1:]
+    ends[-1] = True
+    return starts, seg, ends
 
 
 def _apply_tail_end(dfg: DFG, tail) -> DFG:
@@ -104,41 +157,77 @@ def _finish_state(name: str, state, tail):
     if name == "discovery":
         return DiscoveryState(_apply_tail_end(state["dfg"], tail),
                               state["l2"])
+    if name == "variants":
+        return state            # no end-activity concept, nothing to fix
     raise KeyError(f"no distributed lowering named {name!r}; "
-                   f"known: {sorted(STATE_DRIVERS)}")
+                   f"known: {sorted(SHARDED_STATES)}")
 
 
 def query_sharded_multi(plan: "Plan | MultiPlan", states, num_activities: int,
                         mesh, axis_name: str = "data", *, prune: bool = True,
-                        method: str = "auto"):
+                        method: str = "auto", num_cases: int | None = None):
     """Mine every distributed state in ``states`` (distinct names from
-    :data:`STATE_DRIVERS`) from ONE gathered pruned stream and ONE
+    :data:`SHARDED_STATES`) from ONE gathered pruned stream and ONE
     ``shard_map``.  Returns ``({state_name: state}, ScanReport)`` — each
     state bitwise equal to its separate ``query_sharded_*`` run, with the
     event columns gathered and sharded exactly once however many verbs
-    share the pass."""
+    share the pass.  ``"variants"`` needs ``num_cases`` (its fingerprint
+    table capacity) and yields ``(fp1, fp2, ncases)`` exactly like the
+    streaming kernel's finalize."""
     states = tuple(dict.fromkeys(states))       # dedupe, keep order
-    unknown = set(states) - set(STATE_DRIVERS)
+    unknown = set(states) - SHARDED_STATES
     if not states or unknown:
         raise KeyError(f"distributed states must be a non-empty subset of "
-                       f"{sorted(STATE_DRIVERS)}; got {list(states)}")
-    case, act, rv, report = _gather(plan, prune)
+                       f"{sorted(SHARDED_STATES)}; got {list(states)}")
+    want_var = "variants" in states
+    if want_var and num_cases is None:
+        raise ValueError("states including 'variants' need num_cases= "
+                         "(the fingerprint table capacity)")
+    halo_states = tuple(s for s in states if s in STATE_DRIVERS)
+    case, act, rv, maps, report = _gather(plan, prune, sketch=want_var)
     tail = (int(case[-1]), int(act[-1]), bool(rv[-1])) if case.size else None
+    empty = case.size == 0
     n_dev = mesh.shape[axis_name]
-    case, act, rv = _pad_to_shards(case, act, rv, n_dev)
+    case, act, rv, maps = _pad_to_shards(case, act, rv, n_dev, maps)
+    var_dev = want_var and num_cases > 0
+    if want_var:
+        starts, seg, ends = _segment_markers(case)
+        ncases_seen = 0 if empty else int(seg[-1]) + 1
     kernel = engine.compose({s: STATE_DRIVERS[s][0](num_activities, method)
-                             for s in states})
-    fix_ends = {s: STATE_DRIVERS[s][1] for s in states}
+                             for s in halo_states}) if halo_states else None
+    fix_ends = {s: STATE_DRIVERS[s][1] for s in halo_states}
 
-    def local(case, act, valid):
-        return run_sharded_composed(kernel, fix_ends, case, act, valid,
-                                    axis_name=axis_name, n_dev=n_dev)
+    def local(case, act, valid, *var_args):
+        out = {}
+        if kernel is not None:
+            out.update(run_sharded_composed(kernel, fix_ends, case, act,
+                                            valid, axis_name=axis_name,
+                                            n_dev=n_dev))
+        if var_args:
+            m1, b1, m2, b2, starts, seg, ends = var_args
+            out["variants"] = run_sharded_variants(
+                m1, b1, m2, b2, starts, seg, ends, num_cases,
+                axis_name=axis_name, n_dev=n_dev)
+        return out
 
-    fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-                   out_specs=P())
-    out = jax.jit(fn)(jnp.asarray(case), jnp.asarray(act), jnp.asarray(rv))
-    return {s: _finish_state(s, out[s], tail) for s in states}, report
+    args = [jnp.asarray(case), jnp.asarray(act), jnp.asarray(rv)]
+    if var_dev:
+        args += [jnp.asarray(x) for x in (*maps, starts, seg, ends)]
+    out = {}
+    if kernel is not None or var_dev:
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(P(axis_name),) * len(args), out_specs=P())
+        out = jax.jit(fn)(*args)
+    result = {}
+    for s in states:
+        if s == "variants":
+            fp1, fp2 = out.get("variants",
+                               (jnp.zeros(0, jnp.uint32),) * 2)
+            result[s] = (fp1, fp2,
+                         jnp.int32(min(ncases_seen, num_cases)))
+        else:
+            result[s] = _finish_state(s, out[s], tail)
+    return result, report
 
 
 def query_sharded_dfg(plan: "Plan | MultiPlan", num_activities: int, mesh,

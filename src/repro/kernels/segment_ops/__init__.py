@@ -4,19 +4,22 @@ lowered twice (Pallas TPU kernels + XLA reference) behind one dispatch
 from . import ops, ref
 from .histogram import histogram_pallas
 from .ops import (histogram, pair_count, pair_count_matmul, segment_reduce,
-                  segmented_scan)
+                  segmented_affine, segmented_scan)
 from .pair_count import pair_count_pallas
 from .ref import (histogram_ref, pair_count_ref, segment_reduce_ref,
-                  segmented_scan_ref)
+                  segmented_affine_ref, segmented_scan_ref)
 from .segment_reduce import segment_reduce_pallas
-from .segmented_scan import segmented_polyhash_pallas, segmented_sum_scan_pallas
+from .segmented_scan import (segmented_affine_pallas,
+                             segmented_polyhash_pallas,
+                             segmented_sum_scan_pallas)
 
 __all__ = [
     "ops", "ref",
     "segment_reduce", "histogram", "pair_count", "pair_count_matmul",
-    "segmented_scan",
+    "segmented_scan", "segmented_affine",
     "segment_reduce_pallas", "histogram_pallas", "pair_count_pallas",
-    "segmented_polyhash_pallas", "segmented_sum_scan_pallas",
+    "segmented_polyhash_pallas", "segmented_affine_pallas",
+    "segmented_sum_scan_pallas",
     "segment_reduce_ref", "histogram_ref", "pair_count_ref",
-    "segmented_scan_ref",
+    "segmented_scan_ref", "segmented_affine_ref",
 ]

@@ -31,7 +31,9 @@ from . import ref as _ref
 from .histogram import histogram_pallas
 from .pair_count import pair_count_pallas
 from .segment_reduce import segment_reduce_pallas
-from .segmented_scan import segmented_polyhash_pallas, segmented_sum_scan_pallas
+from .segmented_scan import (segmented_affine_pallas,
+                             segmented_polyhash_pallas,
+                             segmented_sum_scan_pallas)
 
 reduce_identity = _ref.reduce_identity
 
@@ -207,3 +209,24 @@ def segmented_scan(values: jax.Array, seg_starts: jax.Array, carry,
             return _ref.segmented_scan_ref(values, seg_starts, carry, "sum")
         raise ValueError(f"unknown segmented_scan impl {chosen!r}")
     raise ValueError(f"unknown segmented_scan op {op!r}")
+
+
+def segmented_affine(mul: jax.Array, add: jax.Array, seg_starts: jax.Array,
+                     carry, *, impl: str | None = None, block_e: int = 512):
+    """Case-local scan of explicit affine maps ``h <- h*mul + add`` (mod
+    2**32); returns ``(ys, carry_out)``.
+
+    The generalization of ``segmented_scan(op="polyhash")`` where each row
+    carries its own coefficients — what lets the variants kernel fold a
+    pre-composed header *sketch* entry (the collapsed map of a whole skipped
+    case run) in a single row.  uint32 arithmetic is exact mod 2^32, so both
+    lowerings are bitwise identical.
+    """
+    chosen = _resolve(impl, False, False)
+    if chosen == "pallas":
+        return segmented_affine_pallas(mul, add, seg_starts, carry,
+                                       block_e=block_e,
+                                       interpret=_interpret())
+    if chosen == "xla":
+        return _ref.segmented_affine_ref(mul, add, seg_starts, carry)
+    raise ValueError(f"unknown segmented_affine impl {chosen!r}")

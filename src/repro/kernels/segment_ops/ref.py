@@ -118,6 +118,21 @@ def pair_count_matmul(src: jax.Array, dst: jax.Array, w: jax.Array,
     return c.astype(w.dtype)
 
 
+@jax.jit
+def segmented_affine_ref(mul: jax.Array, add: jax.Array,
+                         seg_starts: jax.Array, carry):
+    """Sequential fold of explicit affine maps ``h -> h*mul + add``
+    (segment starts reset ``h`` to 0 first).  Returns ``(ys, carry_out)``."""
+
+    def step(h, xs):
+        m, b, start = xs
+        h = jnp.where(start, jnp.zeros_like(h), h) * m + b
+        return h, h
+
+    last, ys = jax.lax.scan(step, carry, (mul, add, seg_starts))
+    return ys, last
+
+
 @functools.partial(jax.jit, static_argnames=("op",))
 def segmented_scan_ref(values: jax.Array, seg_starts: jax.Array,
                        carry, op: str = "sum", base=None):

@@ -63,6 +63,38 @@ def _polyhash_kernel(v_ref, f_ref, ok_ref, c0_ref, ys_ref, carry_ref, *, base):
     carry_ref[0] = ys[-1]
 
 
+def _affine_kernel(m_ref, b_ref, f_ref, ok_ref, c0_ref, ys_ref, carry_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = c0_ref[...]
+
+    ok = ok_ref[...]                     # (W,) bool — False on tail padding
+    w = ok.shape[0]
+    # generalized polyhash tile: each row carries an *explicit* affine map
+    # h -> h*m + b (a header sketch entry, or base/value for a plain row);
+    # padding is the identity map
+    m = jnp.where(ok, m_ref[...], jnp.ones((w,), m_ref.dtype))
+    b = jnp.where(ok, b_ref[...], jnp.zeros((w,), b_ref.dtype))
+    ff = f_ref[...] & ok
+    idx = _positions(w)
+    d = 1
+    while d < w:                         # static unroll: log2(W) VPU steps
+        pm = jnp.concatenate([jnp.ones((d,), m.dtype), m[:-d]])
+        pb = jnp.concatenate([jnp.zeros((d,), b.dtype), b[:-d]])
+        pf = jnp.concatenate([jnp.zeros((d,), jnp.bool_), ff[:-d]])
+        take = (idx >= d) & ~ff
+        b = jnp.where(take, pb * m + b, b)   # compose prev∘cur (uses old m)
+        m = jnp.where(take, pm * m, m)
+        ff = ff | (pf & (idx >= d))
+        d *= 2
+    h_in = carry_ref[0]
+    ys = jnp.where(ff, b, h_in * m + b)
+    ys_ref[...] = ys
+    carry_ref[0] = ys[-1]
+
+
 def _segsum_kernel(v_ref, f_ref, c0_ref, ys_ref, carry_ref):
     t = pl.program_id(0)
 
@@ -119,6 +151,44 @@ def segmented_polyhash_pallas(values: jax.Array, seg_starts: jax.Array,
         ],
         interpret=interpret,
     )(v, f, ok, jnp.reshape(carry, (1,)))
+    return ys[:n], cout[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def segmented_affine_pallas(mul: jax.Array, add: jax.Array,
+                            seg_starts: jax.Array, carry: jax.Array, *,
+                            block_e: int = 512, interpret: bool = True):
+    """Inclusive segmented scan of explicit affine maps ``h -> h*mul + b``;
+    returns ``(ys, carry_out)``.  The polyhash scan with per-row
+    coefficients — uint32-exact, so bitwise across lowerings."""
+    n = mul.shape[0]
+    if n == 0:
+        return mul, carry
+    pad = (-n) % block_e
+    m = jnp.pad(mul, (0, pad))
+    b = jnp.pad(add, (0, pad))
+    f = jnp.pad(seg_starts.astype(bool), (0, pad))
+    ok = jnp.pad(jnp.ones((n,), bool), (0, pad))
+    ys, cout = pl.pallas_call(
+        _affine_kernel,
+        grid=((n + pad) // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), mul.dtype),
+            jax.ShapeDtypeStruct((1,), mul.dtype),
+        ],
+        interpret=interpret,
+    )(m, b, f, ok, jnp.reshape(carry, (1,)))
     return ys[:n], cout[0]
 
 

@@ -20,14 +20,15 @@ This package is the planner/executor IR; the user-facing surface is the
 from .exec import (ScanReport, count_cases, execute,  # noqa: F401
                    execute_frame, merge_reports, multi_pruned_source,
                    pruned_source)
-from .expr import (CasePredicate, Col, Expr, case_size,  # noqa: F401
-                   cases_containing, col)
+from .expr import (CasePredicate, Col, Expr, SketchPredicate,  # noqa: F401
+                   case_size, cases_containing, col, variant_in, variant_of)
 from .optimize import PhysicalPlan, compile_plan  # noqa: F401
 from .plan import MultiPlan, Plan, scan, scan_many  # noqa: F401
 
 __all__ = [
     "CasePredicate", "Col", "Expr", "MultiPlan", "Plan", "PhysicalPlan",
-    "ScanReport", "case_size", "cases_containing", "col", "compile_plan",
-    "count_cases", "execute", "execute_frame", "merge_reports",
-    "multi_pruned_source", "pruned_source", "scan", "scan_many",
+    "ScanReport", "SketchPredicate", "case_size", "cases_containing", "col",
+    "compile_plan", "count_cases", "execute", "execute_frame",
+    "merge_reports", "multi_pruned_source", "pruned_source", "scan",
+    "scan_many", "variant_in", "variant_of",
 ]

@@ -22,8 +22,23 @@ one for the kernels:
   ``update`` advances the carry — case id, one/two-row halo, *global
   segment numbering* — exactly as the unread rows would have (they are
   all refuted, hence all masked), at a cost independent of the run's row
-  count.  Kernels that consume masked rows (``mask_exact=False``, e.g.
-  variants' validity-blind hashing) opt out and are streamed unpruned.
+  count.  Kernels whose state depends on masked rows declare
+  ``ghost_sketch`` (variants' validity-blind hashing): their ghost
+  chunks additionally carry the run's composed per-segment affine
+  polyhash maps (``core.polyhash``, read from EDF headers), so the
+  kernel replays the skipped rows' hash contribution bitwise without
+  any I/O — every registered verb now runs on the pruned stream.
+
+Case-level predicates resolve in as little as **zero** passes: variant
+predicates (``variant_of`` / ``variant_in``) derive their per-case keep
+masks straight from the composed header sketches when every file has
+them; the remaining data-dependent case predicates
+(``cases_containing`` / ``case_size``) run a fused **single-pass**
+schedule (:func:`_single_pass_source`) that folds their phase-one
+kernels and the mining kernel over one scan — each surviving group is
+read once, buffered until its segments' keeps are resolved, and either
+emitted masked or replaced by a ghost — instead of the old two-pass
+plan (a phase-one scan per predicate, then the final scan).
 
 ``execute_frame`` materializes the filtered, projected frame instead
 (equal to ``filterN(...).compact()``); ``pruned_source`` exposes the
@@ -53,9 +68,10 @@ import numpy as np
 from repro.core import engine
 from repro.core.chunked import ChunkedEventFrame
 from repro.core.eventframe import ACTIVITY, CASE, EventFrame
+from repro.core.polyhash import sketch_columns
 from repro.storage.edf import EDFReader
 
-from .expr import CasePredicate
+from .expr import ALL, NONE, CasePredicate, Expr, SketchPredicate
 from .optimize import GhostItem, PhysicalPlan, ReadItem, compile_plan
 from .plan import MultiPlan, Plan
 
@@ -233,6 +249,11 @@ def _ghost_chunk(item: GhostItem, chunk_columns, reader: EDFReader
             v = np.ones(m, bool)
             v[d - 1:] = bool(item.tail.get("valid", {}).get(name, True))
             valid[name] = v
+    if item.sketch is not None:
+        # per-segment composed affine polyhash maps on the segment rows,
+        # identity maps on padding — sketch-consuming kernels (variants)
+        # fold these instead of hashing the unread rows
+        cols.update(sketch_columns(item.sketch, d, m))
     frame = EventFrame.from_numpy(cols, valid)
     return EventFrame(frame.columns, frame.valid, jnp.zeros(m, bool))
 
@@ -379,15 +400,80 @@ def _local_keeps(keeps: dict, off: int, num_cases: int) -> dict:
     return {pos: k[off:off + num_cases] for pos, k in keeps.items()}
 
 
+def _sketch_fingerprints(physicals, total):
+    """Whole-dataset per-case variant fingerprints from header sketches
+    alone (no data I/O): walk the nonempty groups in stream order, folding
+    each segment's composed affine map — a case that straddles group/file
+    boundaries composes across them exactly like the streamed hash.
+    Returns ``(fp1, fp2)`` uint32 arrays of length ``total``, or ``None``
+    when any group lacks a sketch."""
+    if total is None:
+        return None
+    fp1 = np.zeros(total, np.uint32)
+    fp2 = np.zeros(total, np.uint32)
+    seg = -1                    # id of the open (possibly straddling) case
+    h1 = h2 = 0                 # its running hash pair (python ints, mod 2^32)
+    prev_tail = None
+    for ph in physicals:
+        for g in ph._nonempty():
+            sk = ph.reader.group_sketch(g)
+            if sk is None:
+                return None
+            meta = ph.metas[g]
+            first = meta["zones"][CASE]["min"]
+            mul1, add1 = sk["mul1"], sk["add1"]
+            mul2, add2 = sk["mul2"], sk["add2"]
+            nsegs = len(mul1)
+            j0 = 0
+            if prev_tail is not None and first == prev_tail:
+                h1 = (h1 * int(mul1[0]) + int(add1[0])) & 0xFFFFFFFF
+                h2 = (h2 * int(mul2[0]) + int(add2[0])) & 0xFFFFFFFF
+                j0 = 1
+            if nsegs > j0:
+                if seg >= 0:
+                    fp1[seg], fp2[seg] = h1, h2     # close the open case
+                # fresh segments closed inside the group start from h=0:
+                # their fingerprint is their additive coefficient directly
+                fresh = nsegs - j0
+                fp1[seg + 1:seg + fresh] = add1[j0:nsegs - 1]
+                fp2[seg + 1:seg + fresh] = add2[j0:nsegs - 1]
+                seg += fresh
+                h1, h2 = int(add1[nsegs - 1]), int(add2[nsegs - 1])
+            prev_tail = meta["tail"]["values"][CASE]
+    if seg >= 0:
+        fp1[seg], fp2[seg] = h1, h2
+    return fp1, fp2
+
+
+def _sketch_keeps(physicals, total, steps) -> dict:
+    """Keep masks of every :class:`SketchPredicate` step, resolved entirely
+    from header sketches (empty when fingerprints aren't derivable — those
+    predicates then fall back to the streamed phase-one kernel)."""
+    pos_list = [i for i, s in enumerate(steps)
+                if isinstance(s, SketchPredicate)]
+    if not pos_list or total is None or \
+            not all(ph.can_ghost for ph in physicals):
+        return {}
+    fps = _sketch_fingerprints(physicals, total)
+    if fps is None:
+        return {}
+    return {pos: np.asarray(steps[pos].keep_from_fps(*fps), bool)
+            for pos in pos_list}
+
+
 def _multi_phase1(physicals, reports, offsets, total,
-                  prefetch: int | None = None) -> dict:
+                  prefetch: int | None = None,
+                  seeded: dict | None = None) -> dict:
     """Phase one of every case predicate, streamed across the whole file
     set with one kernel (its carry numbers segments globally, so a case
-    straddling a file boundary accumulates into a single slot)."""
+    straddling a file boundary accumulates into a single slot).  Variant
+    predicates resolve header-only via :func:`_sketch_keeps` first and
+    skip the streamed pass entirely."""
     steps = physicals[0].steps
-    keeps: dict = {}
+    keeps: dict = dict(seeded) if seeded is not None else \
+        _sketch_keeps(physicals, total, steps)
     for pos, step in enumerate(steps):
-        if not isinstance(step, CasePredicate):
+        if not isinstance(step, CasePredicate) or pos in keeps:
             continue
         if total is None:
             raise ValueError(
@@ -400,9 +486,11 @@ def _multi_phase1(physicals, reports, offsets, total,
             if not isinstance(s, CasePredicate):
                 read |= s.columns()
         read_cols = tuple(sorted(read))
+        kern = step.phase1_kernel(total)
+        sketch = getattr(kern, "ghost_sketch", False)
         locals_ = [_local_keeps(keeps, off, ph.num_cases)
                    for ph, off in zip(physicals, offsets)]
-        schedules = [ph.phase1_schedule(pos, lk)
+        schedules = [ph.phase1_schedule(pos, lk, sketch=sketch)
                      for ph, lk in zip(physicals, locals_)]
         for ph, rep, sched in zip(physicals, reports, schedules):
             _account(rep, ph, sched, read_cols, phase1=True)
@@ -412,7 +500,7 @@ def _multi_phase1(physicals, reports, offsets, total,
                 yield from _iter_chunks(ph, sched, lk, chunk_cols, read_cols,
                                         prefetch)
 
-        result = engine.run_streaming(step.phase1_kernel(total), gen())
+        result = engine.run_streaming(kern, gen())
         keeps[pos] = np.asarray(step.finalize_keep(result), bool)
     return keeps
 
@@ -430,11 +518,12 @@ def _multi_compile(mplan: MultiPlan, prune: bool,
 
 
 def _multi_schedules(physicals, reports, offsets, keeps, *, ghosts,
-                     skippable):
+                     skippable, sketch=False):
     schedules, locals_ = [], []
     for ph, rep, off in zip(physicals, reports, offsets):
         lk = _local_keeps(keeps, off, ph.num_cases or 0)
-        sched = ph.final_schedule(lk, ghosts=ghosts, skippable=skippable)
+        sched = ph.final_schedule(lk, ghosts=ghosts, skippable=skippable,
+                                  sketch=sketch)
         _account(rep, ph, sched, ph.read_columns)
         rep.groups_skipped = rep.groups_total - rep.groups_read
         schedules.append(sched)
@@ -442,8 +531,220 @@ def _multi_schedules(physicals, reports, offsets, keeps, *, ghosts,
     return schedules, locals_
 
 
+def _sp_buffer_cap() -> int:
+    """Single-pass frame buffer: decoded groups held while their segments'
+    keeps resolve (``REPRO_QUERY_SP_BUFFER``, default 16).  Overflowed
+    frames are dropped (their read charged to phase one) and re-read at
+    emission, bounding residency on adversarial straddles."""
+    try:
+        cap = int(os.environ.get("REPRO_QUERY_SP_BUFFER", "16"))
+    except ValueError:
+        cap = 16
+    return max(cap, 1)
+
+
+def _group_ghost(ph: PhysicalPlan, g: int, sketch: bool) -> GhostItem:
+    meta = ph.metas[g]
+    sk = None
+    if sketch:
+        sk = ph.reader.group_sketch(g)
+        if sk is None:
+            raise ValueError(
+                f"group {g} of {ph.reader.path!r} has no variant sketch "
+                f"(case/activity columns missing?) — cannot ghost-skip it "
+                f"for a sketch-consuming kernel")
+    return GhostItem((g,), int(ph.seg_count[g]), meta["zones"][CASE]["min"],
+                     meta["tail"], sk)
+
+
+def _single_pass_source(physicals, reports, offsets, total, sk_keeps,
+                        data_pos, sketch):
+    """Fused phase-one + mine scan (the ``cases_containing`` fast path).
+
+    One walk over the nonempty groups: each group is either refuted
+    header-only, read once (feeding every data-dependent case predicate's
+    phase-one kernel the frame masked by its *preceding* expression
+    residuals), or ghosted through the phase-one kernels.  Groups buffer
+    until the scan has passed their segment range — phase-one states are
+    segment-local with pure finalize, so a closed segment's keep is final
+    the moment the scan moves past it — then emit to the consumer: masked
+    chunk if any segment survives, ghost otherwise.  Bitwise equal to the
+    two-pass plan (same final keeps, same skip set, kernel
+    chunk-invariance covers the differing ghost granularity) while
+    reading each surviving group once instead of once per pass plus once.
+
+    Accounting lands at emission: a surviving group's read counts as scan
+    I/O, a read that only served phase one counts as phase-one I/O, and a
+    header-refuted group costs nothing.  Re-iterating the source replays
+    a conventional schedule from the resolved keeps (no re-accounting).
+    """
+    from collections import deque
+
+    steps = physicals[0].steps
+    exprs = [i for i, s in enumerate(steps) if isinstance(s, Expr)]
+    case_pos = [i for i, s in enumerate(steps)
+                if isinstance(s, CasePredicate)]
+    before = {pos: [i for i in exprs if i < pos] for pos in data_pos}
+    merged = merge_reports(reports)
+    targets = [[rep] if merged is rep else [rep, merged] for rep in reports]
+    all_targets = [t for tg in targets for t in tg]
+    cell: dict = {"finals": None, "replay": None}
+
+    def first_pass():
+        for rep in all_targets:     # idempotent restart of an abandoned pass
+            rep.groups_read = rep.bytes_read = rep.rows_read = 0
+            rep.groups_proved = rep.groups_skipped = 0
+            rep.phase1_groups_read = rep.phase1_bytes_read = 0
+        kernels = {pos: steps[pos].phase1_kernel(total) for pos in data_pos}
+        p1_sketch = any(getattr(k, "ghost_sketch", False)
+                        for k in kernels.values())
+        states = {pos: k.init() for pos, k in kernels.items()}
+        finals: dict = {}
+        dirty = True
+        pending: deque = deque()
+        held = 0
+        cap = _sp_buffer_cap()
+
+        def keep_masks():
+            nonlocal dirty
+            if dirty:
+                for pos in data_pos:
+                    st, ca = states[pos]
+                    finals[pos] = np.asarray(steps[pos].finalize_keep(
+                        kernels[pos].finalize(st, ca)), bool)
+                dirty = False
+            return {**sk_keeps, **finals}
+
+        def emit(entry):
+            fi, g, glo, ghi, frame, was_read = entry
+            ph, tg = physicals[fi], targets[fi]
+            keeps = keep_masks()
+            refuted = (any(ph.proves[i][g] == NONE for i in exprs) or
+                       any(not keeps[p][glo:ghi].any() for p in case_pos))
+            if refuted:
+                if was_read:        # the read only served phase one
+                    nb = ph.reader.group_nbytes(g, ph.read_columns)
+                    for rep in tg:
+                        rep.phase1_groups_read += 1
+                        rep.phase1_bytes_read += nb
+                yield _ghost_chunk(_group_ghost(ph, g, sketch),
+                                   ph.read_columns, ph.reader)
+                return
+            if frame is None:       # never read, or dropped at the cap
+                frame = ph.reader.read_group(g, ph.read_columns)
+            nb = ph.reader.group_nbytes(g, ph.read_columns)
+            for rep in tg:
+                rep.groups_read += 1
+                rep.bytes_read += nb
+                rep.rows_read += frame.nrows
+            residual = [i for i in exprs if ph.proves[i][g] != ALL]
+            if not residual and ph.steps:
+                for rep in tg:
+                    rep.groups_proved += 1
+            mask = np.ones(frame.nrows, bool)
+            for i in residual:
+                mask &= np.asarray(steps[i].mask(frame), bool)
+            case = np.asarray(frame[CASE])
+            seg = glo + np.concatenate(
+                [[0], np.cumsum(case[1:] != case[:-1])])
+            for p in case_pos:
+                mask &= keeps[p][seg]
+            sel = frame.select(ph.chunk_columns)
+            yield EventFrame(sel.columns, sel.valid, jnp.asarray(mask))
+
+        def masked_for(frame, residual, cache):
+            key = tuple(residual)
+            if key not in cache:
+                if not key:
+                    cache[key] = frame
+                else:
+                    mask = np.ones(frame.nrows, bool)
+                    for i in key:
+                        mask &= np.asarray(steps[i].mask(frame), bool)
+                    cache[key] = EventFrame(frame.columns, frame.valid,
+                                            jnp.asarray(mask))
+            return cache[key]
+
+        for fi, ph in enumerate(physicals):
+            off = offsets[fi]
+            for g in ph._nonempty():
+                glo = off + int(ph.seg_start[g])
+                ghi = glo + int(ph.seg_count[g])
+                meta = ph.metas[g]
+                # phase one wants the rows iff some predicate's preceding
+                # conjuncts don't refute the group and its own header
+                # proof can't (presence bitsets / zone maps)
+                want = any(
+                    not any(ph.proves[i][g] == NONE for i in before[pos])
+                    and steps[pos].phase1_prove(meta) != NONE
+                    for pos in data_pos)
+                frame = None
+                if want:
+                    frame = ph.reader.read_group(g, ph.read_columns)
+                    cache: dict = {}
+                    for pos in data_pos:
+                        resid = [i for i in before[pos]
+                                 if ph.proves[i][g] != ALL]
+                        st, ca = states[pos]
+                        states[pos] = kernels[pos].update(
+                            st, ca, masked_for(frame, resid, cache))
+                    dirty = True
+                    held += 1
+                else:
+                    ghost = _ghost_chunk(_group_ghost(ph, g, p1_sketch),
+                                         ph.read_columns, ph.reader)
+                    for pos in data_pos:
+                        st, ca = states[pos]
+                        states[pos] = kernels[pos].update(st, ca, ghost)
+                pending.append([fi, g, glo, ghi, frame, want])
+                while held > cap:
+                    for entry in pending:
+                        if entry[4] is not None:
+                            nb = physicals[entry[0]].reader.group_nbytes(
+                                entry[1], physicals[entry[0]].read_columns)
+                            for rep in targets[entry[0]]:
+                                rep.phase1_groups_read += 1
+                                rep.phase1_bytes_read += nb
+                            entry[4], entry[5] = None, False
+                            held -= 1
+                            break
+                # segments below the open one (ghi - 1) are closed: their
+                # phase-one state slots are final, so those groups resolve
+                while pending and pending[0][3] <= ghi - 1:
+                    entry = pending.popleft()
+                    if entry[4] is not None:
+                        held -= 1
+                    yield from emit(entry)
+        while pending:
+            entry = pending.popleft()
+            yield from emit(entry)
+        for rep in all_targets:
+            rep.groups_skipped = rep.groups_total - rep.groups_read
+        cell["finals"] = keep_masks()
+
+    def factory():
+        if cell["finals"] is None:
+            yield from first_pass()
+            return
+        if cell["replay"] is None:      # resolved keeps -> plain schedules
+            schedules, locals_ = [], []
+            for ph, off in zip(physicals, offsets):
+                lk = _local_keeps(cell["finals"], off, ph.num_cases or 0)
+                schedules.append(ph.final_schedule(
+                    lk, ghosts=True, skippable=True, sketch=sketch))
+                locals_.append(lk)
+            cell["replay"] = (schedules, locals_)
+        for ph, sched, lk in zip(physicals, *cell["replay"]):
+            yield from _iter_chunks(ph, sched, lk, ph.chunk_columns,
+                                    ph.read_columns)
+
+    src = ChunkedEventFrame(factory, num_chunks=None,
+                            tables=dict(physicals[0].reader.tables))
+    return src, merged
+
+
 def multi_pruned_source(mplan: MultiPlan, *, prune: bool = True,
-                        mask_exact: bool = True,
+                        mask_exact: bool = True, sketch: bool = False,
                         prefetch: int | None = None
                         ) -> tuple[ChunkedEventFrame, ScanReport]:
     """Compile a multi-file plan into one re-iterable pruned chunk stream.
@@ -453,15 +754,40 @@ def multi_pruned_source(mplan: MultiPlan, *, prune: bool = True,
     the files (the engine's carry crosses file boundaries exactly as it
     crosses row-group boundaries — no state merging, no float reordering).
     The returned report aggregates the per-file reports (``per_file``).
-    ``prefetch`` sets the read-ahead depth of every scan the source runs
-    (``None`` = the ``REPRO_QUERY_PREFETCH`` environment default).
+    ``sketch`` attaches composed header sketch maps to every ghost chunk
+    (what ``ghost_sketch`` kernels need); ``prefetch`` sets the read-ahead
+    depth of every scan the source runs (``None`` = the
+    ``REPRO_QUERY_PREFETCH`` environment default).
+
+    Plans whose case predicates are all sketch-resolvable compile with
+    zero phase-one passes; remaining data-dependent case predicates fuse
+    into the scan itself (:func:`_single_pass_source`) when the plan is
+    pruned with complete segment metadata — the classic two-pass schedule
+    is the fallback.
     """
-    physicals, reports, offsets, keeps = _multi_compile(mplan, prune,
-                                                        prefetch)
+    physicals = [compile_plan(p, prune) for p in mplan.per_file()]
+    check_homogeneous(ph.reader for ph in physicals)
+    reports = [_base_report(ph) for ph in physicals]
+    offsets, total = _multi_offsets(physicals)
+    steps = physicals[0].steps
+    sk_keeps = _sketch_keeps(physicals, total, steps)
+    data_pos = [i for i, s in enumerate(steps)
+                if isinstance(s, CasePredicate) and i not in sk_keeps]
+    depth = prefetch_depth(prefetch)
+    if (prune and mask_exact and data_pos and total is not None
+            and all(ph.can_ghost for ph in physicals)):
+        for rep in reports:
+            rep.prefetch = depth
+        return _single_pass_source(physicals, reports, offsets, total,
+                                   sk_keeps, data_pos, sketch)
+    keeps = _multi_phase1(physicals, reports, offsets, total, prefetch,
+                          seeded=sk_keeps)
+    if offsets is None:
+        offsets = [0] * len(physicals)
     schedules, locals_ = _multi_schedules(physicals, reports, offsets, keeps,
                                           ghosts=mask_exact,
-                                          skippable=mask_exact)
-    depth = prefetch_depth(prefetch)
+                                          skippable=mask_exact,
+                                          sketch=sketch)
     for rep in reports:
         rep.prefetch = depth
 
@@ -488,20 +814,24 @@ def count_cases(plan: "Plan | MultiPlan") -> int | None:
 
 
 def pruned_source(plan: "Plan | MultiPlan", *, prune: bool = True,
-                  mask_exact: bool = True, prefetch: int | None = None
+                  mask_exact: bool = True, sketch: bool = False,
+                  prefetch: int | None = None
                   ) -> tuple[ChunkedEventFrame, ScanReport]:
     """Compile a plan into a re-iterable pruned chunk stream.
 
     ``mask_exact=False`` keeps every group in the stream (residual masks
-    only) for consumers that inspect masked rows.  The returned source
-    plugs into ``engine.run_streaming`` / ``repro.distributed.query``.
-    A single-file ``Plan`` is the one-path special case of
-    :func:`multi_pruned_source` (one code path, one set of invariants).
+    only) for consumers that inspect masked rows; ``sketch=True`` attaches
+    the composed header sketch maps to ghost chunks (what ``ghost_sketch``
+    kernels — variants — need to replay skipped runs).  The returned
+    source plugs into ``engine.run_streaming`` /
+    ``repro.distributed.query``.  A single-file ``Plan`` is the one-path
+    special case of :func:`multi_pruned_source` (one code path, one set
+    of invariants).
     """
     if isinstance(plan, Plan):
         plan = MultiPlan((plan.path,), plan.steps, plan.projection)
     return multi_pruned_source(plan, prune=prune, mask_exact=mask_exact,
-                               prefetch=prefetch)
+                               sketch=sketch, prefetch=prefetch)
 
 
 def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
@@ -516,7 +846,7 @@ def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
     """
     src, report = pruned_source(
         plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True),
-        prefetch=prefetch)
+        sketch=getattr(mine, "ghost_sketch", False), prefetch=prefetch)
     return engine.run_streaming(mine, src), report
 
 

@@ -439,6 +439,82 @@ class CaseSizeBetween(CasePredicate):
         return (sizes >= self.min_events) & (sizes <= self.max_events)
 
 
+class SketchPredicate(CasePredicate):
+    """A case predicate decidable from variant fingerprints alone.
+
+    The planner resolves these **without any phase-one I/O** when every
+    file carries (or can synthesize) per-group variant sketches: composing
+    the header sketch maps in stream order reproduces each case's exact
+    fingerprint pair, and :meth:`keep_from_fps` turns those into the keep
+    mask.  Files without sketch metadata fall back to the generic
+    phase-one kernel path (``phase1_kernel`` — the variants kernel itself,
+    which is still pruned and ghost-exact)."""
+
+    def keep_from_fps(self, fp1: np.ndarray, fp2: np.ndarray) -> np.ndarray:
+        """Boolean keep mask from the per-case fingerprint pair arrays."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class VariantIn(SketchPredicate):
+    """Keep every event of any case whose variant fingerprint is one of
+    ``pairs`` — the variant-band filter.  ``pairs`` holds ``(fp1, fp2)``
+    tuples as produced by ``variant_counts`` / ``collect("variants")``."""
+
+    pairs: tuple
+
+    def phase1_kernel(self, num_cases: int):
+        from repro.core.variants import variants_kernel
+
+        return variants_kernel(num_cases)
+
+    def finalize_keep(self, result):
+        fp1, fp2, _ncases = result
+        return self.keep_from_fps(np.asarray(fp1), np.asarray(fp2))
+
+    def keep_from_fps(self, fp1, fp2):
+        keep = np.zeros(fp1.shape, bool)
+        for a, b in self.pairs:
+            keep |= (fp1 == np.uint32(a)) & (fp2 == np.uint32(b))
+        return keep
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class VariantOf(SketchPredicate):
+    """Keep cases whose activity sequence equals ``sequence`` exactly.
+
+    Resolves (at plan time, against the file's dictionary tables when the
+    sequence is given as strings) to a single-pair :class:`VariantIn` via
+    :func:`repro.core.polyhash.sequence_fingerprint`."""
+
+    sequence: tuple
+
+    def resolve(self, tables):
+        from repro.core.polyhash import sequence_fingerprint
+
+        seq = self.sequence
+        if any(isinstance(a, str) for a in seq):
+            table = tables.get(ACTIVITY)
+            if table is None:
+                raise KeyError(f"no dictionary table for {ACTIVITY!r}; "
+                               f"pass integer activity ids")
+            seq = tuple(table.index(a) if isinstance(a, str) else int(a)
+                        for a in seq)
+        return VariantIn((sequence_fingerprint(seq),))
+
+    def phase1_kernel(self, num_cases: int):
+        raise RuntimeError("VariantOf must be resolve()-d to VariantIn "
+                           "before execution")
+
+    def finalize_keep(self, result):
+        raise RuntimeError("VariantOf must be resolve()-d to VariantIn "
+                           "before execution")
+
+    def keep_from_fps(self, fp1, fp2):
+        raise RuntimeError("VariantOf must be resolve()-d to VariantIn "
+                           "before execution")
+
+
 def cases_containing(activity, column: str = ACTIVITY) -> CaseContains:
     """Case-level ``contains(activity)``; accepts a dictionary id or the
     decoded string (resolved against the file's tables at plan time)."""
@@ -448,3 +524,18 @@ def cases_containing(activity, column: str = ACTIVITY) -> CaseContains:
 def case_size(min_events: int, max_events: int) -> CaseSizeBetween:
     """Case-level size filter (``filtering.filter_case_size`` pushed down)."""
     return CaseSizeBetween(int(min_events), int(max_events))
+
+
+def variant_in(pairs) -> VariantIn:
+    """Case-level variant membership filter.  ``pairs`` is an iterable of
+    ``(fp1, fp2)`` fingerprint tuples (see ``collect("variants")``); the
+    planner decides it from header sketches alone — zero phase-one I/O —
+    whenever the files carry variant sketch metadata."""
+    return VariantIn(tuple((int(a) & 0xFFFFFFFF, int(b) & 0xFFFFFFFF)
+                           for a, b in pairs))
+
+
+def variant_of(sequence) -> VariantOf:
+    """Keep cases following exactly this activity sequence (ids or decoded
+    strings — strings resolve against the file's tables at plan time)."""
+    return VariantOf(tuple(sequence))

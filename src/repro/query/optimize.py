@@ -17,7 +17,11 @@
   keeps case-indexed kernels (case sizes, durations, variants, case-level
   filters) bitwise identical under pruning: a skipped run of groups is
   replaced by an O(segments) *ghost chunk* that advances the engine's
-  carry exactly as the unread rows would have (all of them masked);
+  carry exactly as the unread rows would have (all of them masked).
+  When the consumer declares ``ghost_sketch`` (variants), the ghost also
+  carries the run's composed per-segment affine polyhash maps
+  (``core.polyhash``), so even validity-blind hashing replays skipped
+  runs exactly;
 * **two-pass planning** — each :class:`CasePredicate` gets its own
   phase-one schedule (pruned by the conjuncts that precede it in the
   plan), whose streamed kernel result becomes a per-case keep mask; the
@@ -58,6 +62,10 @@ class GhostItem:
     segments: int         # distinct case segments across the run
     first_case: int       # case id of the run's first row
     tail: dict            # last row's {"values", "valid"} halo
+    sketch: dict | None = None  # per-segment composed affine polyhash maps
+    #   ({"mul1","add1","mul2","add2"} uint32 arrays of length ``segments``,
+    #   header sketches composed across the run's group boundaries) — only
+    #   materialized when the consumer asked for it (kernel.ghost_sketch)
 
 
 @dataclasses.dataclass
@@ -89,7 +97,36 @@ class PhysicalPlan:
         hi = lo + int(self.seg_count[g])
         return not keeps[pos][lo:hi].any()
 
-    def _schedule(self, skip, residual, case_steps, ghosts: bool):
+    def _run_sketch(self, run) -> dict:
+        """Compose the run's per-group header sketches into one per-segment
+        map list, merging the maps of a case that straddles a group boundary
+        (apply the earlier group's partial map first, then the later's)."""
+        acc: dict | None = None
+        prev_tail = None
+        for g in run:
+            sk = self.reader.group_sketch(g)
+            if sk is None:
+                raise ValueError(
+                    f"group {g} of {self.reader.path!r} has no variant "
+                    f"sketch (case/activity columns missing?) — cannot "
+                    f"ghost-skip it for a sketch-consuming kernel")
+            first = self.metas[g]["zones"][CASE]["min"]
+            if acc is None:
+                acc = {k: sk[k].copy() for k in sk}
+            elif prev_tail is not None and first == prev_tail:
+                for mk, ak in (("mul1", "add1"), ("mul2", "add2")):
+                    # python-int compose: uint32 scalar ops would warn on wrap
+                    m0, a0 = int(sk[mk][0]), int(sk[ak][0])
+                    acc[ak][-1] = (int(acc[ak][-1]) * m0 + a0) & 0xFFFFFFFF
+                    acc[mk][-1] = (int(acc[mk][-1]) * m0) & 0xFFFFFFFF
+                acc = {k: np.concatenate([acc[k], sk[k][1:]]) for k in sk}
+            else:
+                acc = {k: np.concatenate([acc[k], sk[k]]) for k in sk}
+            prev_tail = self.metas[g]["tail"]["values"][CASE]
+        return acc
+
+    def _schedule(self, skip, residual, case_steps, ghosts: bool,
+                  sketch: bool = False):
         """Fold per-group decisions into read items and ghost runs."""
         items: list = []
         run: list[int] = []
@@ -108,7 +145,8 @@ class PhysicalPlan:
             items.append(GhostItem(
                 tuple(run), segs,
                 self.metas[run[0]]["zones"][CASE]["min"],
-                self.metas[run[-1]]["tail"]))
+                self.metas[run[-1]]["tail"],
+                self._run_sketch(run) if sketch else None))
             run.clear()
 
         for g in self._nonempty():
@@ -122,7 +160,7 @@ class PhysicalPlan:
         return items
 
     # ----------------------------------------------------------- schedules
-    def phase1_schedule(self, pos: int, keeps: dict):
+    def phase1_schedule(self, pos: int, keeps: dict, sketch: bool = False):
         """Schedule for phase one of the case predicate at step ``pos``;
         pruned by the plan steps that precede it."""
         pred = self.steps[pos]
@@ -150,10 +188,11 @@ class PhysicalPlan:
             return [i for i in before_exprs if self.proves[i][g] != ALL]
 
         return self._schedule(skip, residual, tuple(before_cases),
-                              ghosts=self.can_ghost and self.prune)
+                              ghosts=self.can_ghost and self.prune,
+                              sketch=sketch)
 
     def final_schedule(self, keeps: dict, ghosts: bool = True,
-                       skippable: bool = True):
+                       skippable: bool = True, sketch: bool = False):
         """Schedule for the final (mine / materialize) pass.
 
         ``skippable=False`` reads every group (consumers that inspect
@@ -184,7 +223,8 @@ class PhysicalPlan:
             return [i for i in exprs if self.proves[i][g] != ALL]
 
         return self._schedule(skip, residual, tuple(cases),
-                              ghosts=ghosts and self.can_ghost and self.prune)
+                              ghosts=ghosts and self.can_ghost and self.prune,
+                              sketch=sketch)
 
 
 def compile_plan(plan: Plan, prune: bool = True) -> PhysicalPlan:

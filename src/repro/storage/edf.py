@@ -34,7 +34,13 @@ ORC-stripe-statistics role):
   reading them;
 * ``tail``     — the last row's values (+ epsilon flags): the one-row halo
   ``repro.core.engine`` carries across chunk boundaries, persisted so a
-  skipped group can still hand the correct carry to its successor.
+  skipped group can still hand the correct carry to its successor;
+* ``sketch``   — per case segment, the uint32 affine polyhash coefficients
+  ``(mul, add)`` of the segment's activity run (``repro.core.polyhash``),
+  hex-encoded ``<u4`` bands keyed ``mul1/add1/mul2/add2``.  Affine maps
+  compose, so the query layer rebuilds the exact variant-hash carry of any
+  skipped run — and whole-dataset variant fingerprints — from headers
+  alone, which is what lets ``variants`` prune like every other verb.
 
 All three are synthesized on open for v1/v2 files (one streaming pass — a
 compatibility fallback, not a fast path), so the query layer treats every
@@ -55,7 +61,8 @@ from typing import Iterable, Mapping
 
 import numpy as np
 
-from repro.core.eventframe import CASE, EventFrame
+from repro.core.eventframe import ACTIVITY, CASE, EventFrame
+from repro.core.polyhash import SKETCH_KEYS, segment_sketch
 
 MAGIC = b"EDFV0001"          # legacy, still readable
 MAGIC_V2 = b"EDFV0002"       # row groups, no zone maps — still readable
@@ -117,6 +124,10 @@ def _group_aux(data: Mapping[str, np.ndarray], valid: Mapping[str, np.ndarray],
         if CASE in data:
             case = data[CASE][lo:hi]
             aux["segments"] = int((case[1:] != case[:-1]).sum()) + 1
+            if ACTIVITY in data:
+                sk = segment_sketch(data[ACTIVITY][lo:hi], case)
+                aux["sketch"] = {k: sk[k].astype("<u4").tobytes().hex()
+                                 for k in SKETCH_KEYS}
         aux["tail"] = {
             "values": {name: _scalar(data[name][hi - 1]) for name in sorted(data)},
             "valid": {name: bool(valid[name][hi - 1]) for name in sorted(valid)},
@@ -450,6 +461,7 @@ class EDFReader:
         self.nrows: int = self.header["nrows"]
         self._synth: list[dict] | None = None   # v1/v2 metadata cache
         self._synth_lock = threading.Lock()     # one synthesis per group
+        self._sketch: dict[int, dict] = {}      # decoded/synthesized sketches
         self._file = None                       # persistent handle (lazy)
         self._io_lock = threading.Lock()        # seek/read pairs are shared
         st = os.stat(path)
@@ -544,6 +556,39 @@ class EDFReader:
                                        frame.nrows))
                 self._synth[index] = meta
             return self._synth[index]
+
+    def group_sketch(self, index: int) -> dict[str, np.ndarray] | None:
+        """Per-segment affine polyhash maps of one row group, as
+        ``{"mul1","add1","mul2","add2"}`` uint32 arrays (one entry per case
+        segment), or ``None`` when the group has no case/activity columns.
+
+        EDFV0003 files written with the sketch band decode it straight from
+        the header; older v3 files (and the v1/v2 synthesis path) fall back
+        to a one-time two-column ``(activity, case)`` read per group, cached
+        under ``_synth_lock`` exactly like the zone-map synthesis.
+        """
+        cached = self._sketch.get(index)
+        if cached is not None:
+            return cached
+        meta = self.group_meta(index)       # v1/v2: synthesizes sketch too
+        if "sketch" in meta:
+            sk = {k: np.frombuffer(bytes.fromhex(meta["sketch"][k]), "<u4")
+                  for k in SKETCH_KEYS}
+        elif ("segments" in meta and ACTIVITY in self.schema
+                and CASE in self.schema):
+            # v3 file from before the sketch band: synthesize lazily from a
+            # projected read of just the two id columns
+            with self._synth_lock:
+                cached = self._sketch.get(index)
+                if cached is not None:
+                    return cached
+                frame = self.read_group(index, (ACTIVITY, CASE))
+                sk = segment_sketch(np.asarray(frame.columns[ACTIVITY]),
+                                    np.asarray(frame.columns[CASE]))
+        else:
+            return None
+        self._sketch[index] = sk
+        return sk
 
     def group_nbytes(self, index: int, columns: Iterable[str] | None = None
                      ) -> int:

@@ -250,7 +250,8 @@ def test_mixed_version_multi_log_both_backends(tmp_path, impl):
 
 def test_sharded_engine_1_to_8_shards(logset):
     """Dataset sharded dispatch == eager reference at 1..8 shards (8
-    virtual devices in a subprocess; DFG + alpha + heuristics)."""
+    virtual devices in a subprocess; DFG + alpha + heuristics +
+    variants)."""
     paths, _, _ = logset
     code = f"""
 import os
@@ -278,10 +279,14 @@ for shards in (2, 8):
         m.start_activities == ref_alpha.start_activities
     net = ds.heuristics(engine="sharded", num_shards=shards)
     assert (np.asarray(net.graph) == np.asarray(ref_net.graph)).all()
-try:
-    ds.collect("variants", engine="sharded")
-except ValueError:
-    print("OK")
+rv = ds.collect("variants", engine="sharded", num_shards=4)
+ref_var = ds.collect("variants", engine="eager")
+fp1, fp2, nc = rv.result
+r1, r2, rnc = ref_var.result
+assert (np.asarray(fp1) == np.asarray(r1)).all()
+assert (np.asarray(fp2) == np.asarray(r2)).all()
+assert int(nc) == int(rnc)
+print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
@@ -451,6 +456,6 @@ def test_kernel_registry_is_public_and_complete():
     assert specs["dfg"].sharded_state == "dfg"
     assert specs["alpha"].sharded_state == "dfg"
     assert specs["heuristics"].sharded_state == "discovery"
-    assert specs["variants"].sharded_state is None
+    assert specs["variants"].sharded_state == "variants"
     with pytest.raises(KeyError, match="registered"):
         engine.kernel_spec("nope")

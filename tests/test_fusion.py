@@ -6,8 +6,8 @@ eager, streaming, and sharded engines, over multi-file plans, at any row
 group size, with the prefetcher on or off.  Plus the satellites: the
 ``compose()`` column-union regression (a fused kernel must not starve a
 member of a projected column), ``ReaderPool`` safety under the prefetch
-thread, and the ``mask_exact`` intersection (a variants member degrades
-the whole composite to the unpruned stream, still bitwise-correct).
+thread, and pruning exactness with a variants member (header sketches
+replay skipped runs, so the fused scan skips groups whatever the mix).
 """
 import os
 import subprocess
@@ -124,7 +124,7 @@ def test_compose_specs_fused_spec():
     assert fused.sharded_state == "fused"       # every member shardable
     mixed = engine.compose_specs(
         {v: engine.kernel_spec(v) for v in ("dfg", "variants")})
-    assert mixed.sharded_state is None          # variants opts out
+    assert mixed.sharded_state == "fused"       # variants shards too now
     dims = engine.Dims(A, NC)
     k = fused.make(dims, verb_kwargs={"alpha": {"min_count": 2}})
     assert k.mask_exact
@@ -179,23 +179,28 @@ def test_collect_many_case_predicate(logset):
                            ds.collect(verb, engine="streaming").result, verb)
 
 
-def test_variants_member_degrades_pruning_not_results(logset):
-    """``mask_exact`` intersection: adding variants to a fused set forces
-    the whole composite onto the unpruned stream (every surviving group
-    read), but each member stays bitwise-correct."""
+def test_variants_member_keeps_pruning_and_results(logset):
+    """Regression for the old ``mask_exact`` degradation cliff: adding
+    variants to a fused set must NOT force the composite onto the
+    unpruned stream — header sketches replay the skipped runs, so the
+    fused scan still skips refuted groups and every member (variants
+    included) stays bitwise equal to its separate run."""
     paths, _, _ = logset
     ds = repro.open(paths).filter((col(CASE) >= 20) & (col(CASE) <= 45))
     pruned = ds.collect_many(["dfg", "stats"], engine="streaming")
     assert pruned.report.groups_skipped > 0
-    degraded = ds.collect_many(["dfg", "stats", "variants"],
-                               engine="streaming")
-    assert degraded.report.groups_skipped == 0
-    assert degraded.report.groups_read == degraded.report.groups_total
+    fused = ds.collect_many(["dfg", "stats", "variants"],
+                            engine="streaming")
+    assert fused.report.groups_skipped > 0          # no degradation branch
+    assert fused.report.groups_skipped == pruned.report.groups_skipped
     for verb in ("dfg", "stats"):
-        _assert_tree_equal(pruned.results[verb], degraded.results[verb], verb)
-    _assert_tree_equal(degraded.results["variants"],
+        _assert_tree_equal(pruned.results[verb], fused.results[verb], verb)
+    _assert_tree_equal(fused.results["variants"],
                        ds.collect("variants", engine="streaming").result,
                        "variants")
+    _assert_tree_equal(fused.results["variants"],
+                       ds.collect("variants", engine="eager").result,
+                       "variants vs eager")
 
 
 def test_collect_many_sharded_1_to_8(logset):
@@ -212,7 +217,7 @@ from repro.core.eventframe import CASE
 
 paths = {paths!r}
 ds = repro.open(paths).filter((col(CASE) >= 30) & (col(CASE) <= 120))
-VERBS = ("dfg", "alpha", "heuristics")
+VERBS = ("dfg", "alpha", "heuristics", "variants")
 ref = {{v: ds.collect(v, engine="eager").result for v in VERBS}}
 for shards in (1, 2, 4, 8):
     res = ds.collect_many(VERBS, engine="sharded", num_shards=shards)
@@ -225,10 +230,12 @@ for shards in (1, 2, 4, 8):
     assert res["alpha"].start_activities == ref["alpha"].start_activities
     assert (np.asarray(res["heuristics"].graph)
             == np.asarray(ref["heuristics"].graph)).all(), shards
-try:
-    ds.collect_many(("dfg", "variants"), engine="sharded")
-except ValueError:
-    print("OK")
+    fp1, fp2, nc = res["variants"]
+    rf1, rf2, rnc = ref["variants"]
+    assert (np.asarray(fp1) == np.asarray(rf1)).all(), shards
+    assert (np.asarray(fp2) == np.asarray(rf2)).all(), shards
+    assert int(nc) == int(rnc), shards
+print("OK")
 """
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
@@ -243,8 +250,8 @@ def test_explain_and_profile(logset):
     ds = repro.open(paths)
     text = ds.explain(verbs=["dfg", "stats", "variants"])
     assert "fused [dfg, stats, variants]" in text
-    assert "unpruned" in text and "prefetch" in text and "cost eager~" in text
-    assert "unpruned" not in ds.explain(verbs=["dfg", "alpha"])
+    assert "pruned" in text and "prefetch" in text and "cost eager~" in text
+    assert "unpruned" not in text       # variants no longer degrades
     prof = ds.profile(engine="eager")
     assert set(prof.verbs) >= {"dfg", "stats", "variants", "alpha",
                                "heuristics", "performance_dfg"}

@@ -224,12 +224,13 @@ def test_refuted_everything_yields_empty_result(log):
     assert int(np.asarray(got.starts).sum()) == 0
 
 
-def test_mask_exact_false_reads_everything(log):
-    """Variants hash masked rows — the planner must not skip groups."""
+def test_variants_prunes_via_header_sketches(log):
+    """Variants hash masked rows, yet the pruned scan skips refuted groups
+    — the ghost chunks replay their hashes from the header sketch maps."""
     path, whole, ncases = log
     plan = Plan(path).filter(col(CASE).between(90, 140))
     got, rep = execute(plan, mine=variants_kernel(ncases))
-    assert rep.groups_skipped == 0
+    assert rep.groups_skipped > 0               # no degradation cliff
     c = whole[CASE]
     ref_frame = ops.proj(whole, (c >= 90) & (c <= 140))
     _assert_tree_equal(got, engine.run_single(variants_kernel(ncases),
@@ -237,8 +238,8 @@ def test_mask_exact_false_reads_everything(log):
 
 
 def test_unpruned_stream_masks_refuted_groups(log):
-    """Regression: a group the zone maps refute can still be *read* (a
-    mask_exact=False consumer forces a full read) — its refuting
+    """Regression: a group the zone maps refute can still be *read* (an
+    explicit mask_exact=False source forces a full read) — its refuting
     predicate must then be applied as a residual mask, not dropped."""
     path, whole, ncases = log
     plan = Plan(path).filter(col(CASE).between(90, 140))
@@ -249,13 +250,14 @@ def test_unpruned_stream_masks_refuted_groups(log):
     ref = engine.run_single(dfg_kernel(8),
                             ops.proj(whole, (c >= 90) & (c <= 140)))
     _assert_tree_equal(got, ref, "mask_exact=False stream")
-    # composed kernel containing variants propagates mask_exact=False
+    # composed kernel containing variants stays pruning-exact: its
+    # ghost_sketch flag propagates, and the fused scan still skips
     comp = engine.compose({"v": variants_kernel(ncases), "d": dfg_kernel(8)})
-    assert not comp.mask_exact
+    assert comp.mask_exact and comp.ghost_sketch
     got2, rep2 = execute(plan, mine=comp)
     ref2 = engine.run_single(comp, ops.proj(whole, (c >= 90) & (c <= 140)))
     _assert_tree_equal(got2, ref2, "compose(variants, dfg)")
-    assert rep2.groups_skipped == 0
+    assert rep2.groups_skipped > 0
 
 
 def test_cases_containing_custom_column(log):
@@ -315,11 +317,17 @@ def test_older_versions_prune_via_synthesized_zones(tmp_path, log, version):
     plan = Plan(p).filter(col(CASE).between(90, 140))
     got, rep = execute(plan, mine=dfg_kernel(8))
     c = whole[CASE]
-    ref = engine.run_single(dfg_kernel(8),
-                            ops.proj(whole, (c >= 90) & (c <= 140)))
+    ref_frame = ops.proj(whole, (c >= 90) & (c <= 140))
+    ref = engine.run_single(dfg_kernel(8), ref_frame)
     _assert_tree_equal(got, ref, f"v{version}")
     if version == 2:
         assert rep.groups_skipped > 0      # zones synthesized on open
+    # variant sketches synthesize on open too: older files prune variants
+    gv, rv = execute(plan, mine=variants_kernel(ncases))
+    _assert_tree_equal(gv, engine.run_single(variants_kernel(ncases),
+                                             ref_frame), f"v{version} variants")
+    if version == 2:
+        assert rv.groups_skipped > 0
 
 
 def test_pruned_source_feeds_streaming_engine(log):

@@ -113,6 +113,33 @@ def test_segmented_polyhash_parity(n, block):
     assert int(a_c) == int(b_c)
 
 
+@pytest.mark.parametrize("n,block", [(64, 64), (1000, 64), (513, 256), (1, 128)])
+def test_segmented_affine_parity(n, block):
+    """Per-row (mul, add) affine scan: pallas == xla bitwise, carry and
+    all — the primitive under sketch-folding variants."""
+    mul = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    add = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    starts = np.asarray(rng.random(n) < 0.2)
+    starts[0] = True
+    h0 = jnp.uint32(rng.integers(0, 2**31))
+    a_ys, a_c = so.segmented_affine(mul, add, jnp.asarray(starts), h0,
+                                    impl="xla")
+    b_ys, b_c = so.segmented_affine(mul, add, jnp.asarray(starts), h0,
+                                    impl="pallas", block_e=block)
+    np.testing.assert_array_equal(np.asarray(a_ys), np.asarray(b_ys))
+    assert int(a_c) == int(b_c)
+    # degenerate polyhash: mul == BASE, add == token reproduces the
+    # polyhash scan exactly
+    acts = jnp.asarray(rng.integers(1, 30, n), jnp.uint32)
+    p_ys, p_c = so.segmented_scan(acts, jnp.asarray(starts), jnp.uint32(0),
+                                  "polyhash", base=1_000_003, impl="xla")
+    e_ys, e_c = so.segmented_affine(jnp.full(n, 1_000_003, jnp.uint32),
+                                    acts, jnp.asarray(starts), jnp.uint32(0),
+                                    impl="xla")
+    np.testing.assert_array_equal(np.asarray(p_ys), np.asarray(e_ys))
+    assert int(p_c) == int(e_c)
+
+
 @pytest.mark.parametrize("k", [1, 6])
 def test_segmented_sum_scan_parity(k):
     n = 700
