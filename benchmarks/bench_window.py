@@ -1,0 +1,212 @@
+"""Sliding-window benchmark: slide cost scales with delta groups.
+
+Windows over a multi-file log are re-merges of cached per-group states,
+so once the cache is warm a slide decodes nothing — wall clock tracks
+the number of *fresh* groups (the delta), not the window size.  The
+sweep times windowed DFG collection cold (every group decoded once) and
+warm (pure merge) across growing window sizes, then replays the
+incremental scenario: append one partition and re-collect, proving via
+``ScanReport`` that only the appended groups are read.
+
+``--smoke`` asserts the acceptance gates: warm windows bitwise equal to
+cold ones, warm cache-hit ratio > 0, and the post-append collect reading
+only the delta groups.
+
+Writes the ``BENCH_window.json`` trajectory artifact.
+
+Standalone:  python benchmarks/bench_window.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only window
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):  # script mode
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+WINDOW_SIZES = (2, 4, 8, 16)
+STEP = 2
+
+
+def _tree_equal(a, b):
+    import dataclasses
+
+    import jax
+
+    if isinstance(a, (jax.Array, np.ndarray)):
+        return bool((np.asarray(a) == np.asarray(b)).all())
+    if dataclasses.is_dataclass(a) and not isinstance(a, type):
+        return type(a) is type(b) and all(
+            _tree_equal(getattr(a, f.name), getattr(b, f.name))
+            for f in dataclasses.fields(a))
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(_tree_equal(a[k], b[k]) for k in a)
+    if isinstance(a, (tuple, list)):
+        return len(a) == len(b) and all(
+            _tree_equal(x, y) for x, y in zip(a, b))
+    return a == b
+
+
+def run(num_cases: int = 50_000, num_activities: int = 8, seed: int = 11,
+        num_files: int = 4, groups_per_file: int = 12,
+        out_json: str | None = "BENCH_window.json", smoke: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    from repro.data import synthetic
+    from repro.dataset import engines as ds_engines
+    from repro.query.statecache import state_cache
+    from repro.storage import edf
+
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=num_activities,
+                                       seed=seed)
+    n = frame.nrows
+    emit("window/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n}")
+
+    d = tempfile.mkdtemp()
+    paths = []
+    per = -(-n // num_files)
+    for m in range(num_files):
+        lo, hi = m * per, min((m + 1) * per, n)
+        if lo >= hi:
+            continue
+        p = os.path.join(d, f"part_{m:02d}.edf")
+        edf.write(p, frame.take(jnp.arange(lo, hi)), tables,
+                  row_group_rows=max(1, -(-(hi - lo) // groups_per_file)))
+        paths.append(p)
+    hints = {"num_activities": num_activities, "num_cases": num_cases}
+    base, delta = paths[:-1], paths[-1]
+
+    def fresh():
+        state_cache().clear()
+        ds_engines.clear_result_cache()
+
+    # ---- window-size sweep: cold decode-all vs warm merge-only slides
+    ds = repro.open(paths, **hints)
+    n_units = ds.window(by="groups", size=1, step=1)._num_units()
+    sweep = []
+    for size in WINDOW_SIZES:
+        if size > n_units:
+            break
+        w = ds.window(by="groups", size=size, step=STEP)
+        fresh()
+        t0 = time.perf_counter()
+        cold = w.collect("dfg")
+        us_cold = time.perf_counter() - t0
+        warm = w.collect("dfg")
+        us_warm = timeit(lambda: w.collect("dfg"))
+        assert _tree_equal(cold.results, warm.results), \
+            f"warm windows != cold at size={size}"
+        rep = warm.report
+        hit_ratio = rep.groups_cached / max(
+            rep.groups_cached + rep.groups_folded, 1)
+        assert rep.groups_read == 0, "warm slide decoded a group"
+        nw = len(cold.bounds)
+        point = {
+            "window_size": size,
+            "step": STEP,
+            "windows": nw,
+            "groups_total": cold.report.groups_total,
+            "us_cold": us_cold * 1e6,
+            "us_warm": us_warm * 1e6,
+            "us_warm_per_window": us_warm * 1e6 / max(nw, 1),
+            "warm_hit_ratio": hit_ratio,
+        }
+        sweep.append(point)
+        emit(f"window/size={size}", us_warm,
+             f"windows={nw};cold_us={us_cold*1e6:.0f};"
+             f"hit={hit_ratio:.2f};speedup={us_cold/max(us_warm,1e-9):.1f}x")
+
+    # ---- incremental append: re-collect reads only the delta groups
+    fresh()
+    ds_base = repro.open(base, **hints)
+    t0 = time.perf_counter()
+    r_base = ds_base.collect("dfg", engine="streaming")
+    us_base = time.perf_counter() - t0
+    ds_engines.clear_result_cache()
+    ds_all = repro.open(paths, **hints)
+    t0 = time.perf_counter()
+    r_incr = ds_all.collect("dfg", engine="streaming")
+    us_incr = time.perf_counter() - t0
+    delta_groups = r_incr.report.groups_total - r_base.report.groups_folded
+    assert r_incr.report.groups_read == delta_groups, \
+        "incremental collect decoded non-delta groups"
+    fresh()
+    t0 = time.perf_counter()
+    r_scratch = repro.open(paths, **hints).collect("dfg", engine="eager")
+    us_scratch = time.perf_counter() - t0
+    assert _tree_equal(r_incr.result, r_scratch.result), \
+        "incremental != scratch"
+    append_point = {
+        "base_groups": r_base.report.groups_folded,
+        "delta_groups": delta_groups,
+        "groups_read_incremental": r_incr.report.groups_read,
+        "groups_cached_incremental": r_incr.report.groups_cached,
+        "us_base_cold": us_base * 1e6,
+        "us_incremental": us_incr * 1e6,
+        "us_scratch": us_scratch * 1e6,
+        "speedup_vs_scratch": us_scratch / max(us_incr, 1e-9),
+    }
+    emit("window/append_delta", us_incr,
+         f"read={r_incr.report.groups_read}/{r_incr.report.groups_total};"
+         f"cached={r_incr.report.groups_cached};"
+         f"scratch_speedup={append_point['speedup_vs_scratch']:.1f}x")
+
+    if smoke:
+        assert all(p["warm_hit_ratio"] > 0 for p in sweep), \
+            "warm slides never hit the state cache"
+        assert delta_groups < r_incr.report.groups_total, \
+            "append scenario had no cached base groups"
+
+    if out_json:
+        artifact = {
+            "bench": "window",
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "backend": jax.default_backend(),
+            "config": {"num_cases": num_cases,
+                       "num_activities": num_activities, "events": n,
+                       "files": len(paths), "group_units": n_units},
+            "size_sweep": sweep,
+            "append": append_point,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"window/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return sweep
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; asserts parity + warm hit ratio > 0")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_window.json")
+    args = ap.parse_args()
+    header()
+    cases = 200_000 if args.full else (8_000 if args.smoke else 50_000)
+    sweep = run(num_cases=cases, out_json=args.out, smoke=args.smoke)
+    if args.smoke:
+        print(f"window/SMOKE_OK,0.0,hit_ratio="
+              f"{sweep[-1]['warm_hit_ratio']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

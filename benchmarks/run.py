@@ -12,7 +12,7 @@ from . import (bench_complexity, bench_dataset, bench_discovery,
                bench_distributed_dfg, bench_fusion, bench_kernels,
                bench_query, bench_segment_ops, bench_streaming,
                bench_table1_loading, bench_table2_sizes, bench_table5_ops,
-               bench_table6_biglogs, bench_variants_prune)
+               bench_table6_biglogs, bench_variants_prune, bench_window)
 from .common import header
 
 SUITES = {
@@ -56,6 +56,11 @@ SUITES = {
     "variants_prune": lambda full: bench_variants_prune.run(
         num_cases=200_000 if full else 50_000,
         out_json="BENCH_variants.json"),
+    # sliding windows as merge-trees over cached group states + the
+    # incremental append scenario; writes BENCH_window.json
+    "window": lambda full: bench_window.run(
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_window.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

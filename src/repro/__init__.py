@@ -22,6 +22,10 @@ _EXPORTS = {
     "open_dataset": ("repro.dataset", "open_dataset"),
     "Dataset": ("repro.dataset", "Dataset"),
     "CollectResult": ("repro.dataset.engines", "CollectResult"),
+    "Windows": ("repro.dataset.window", "Windows"),
+    "WindowResult": ("repro.dataset.window", "WindowResult"),
+    "StateCache": ("repro.query.statecache", "StateCache"),
+    "state_cache": ("repro.query.statecache", "state_cache"),
     "col": ("repro.query.expr", "col"),
     "cases_containing": ("repro.query.expr", "cases_containing"),
     "case_size": ("repro.query.expr", "case_size"),

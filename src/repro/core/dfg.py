@@ -105,6 +105,42 @@ def dfg_kernel(num_activities: int, method: str = "auto") -> engine.ChunkKernel:
     return _dfg_kernel(num_activities, _method_impl(method))
 
 
+def stitch_dfg_state(A: DFG, B: DFG, a_tail: dict, b_row0: dict,
+                     straddle: bool) -> DFG:
+    """Group-state stitch of two fresh DFG folds (``core.engine`` algebra).
+
+    Elementwise sums plus the boundary-halo corrections the fresh fold of
+    ``b`` could not see (its carry had ``exists=False``):
+
+    * straddle — ``b``'s first valid row is *not* a case start (subtract
+      the spurious start) and ``(a.last -> b.first)`` is a directly-follows
+      pair when both rows are valid;
+    * no straddle — ``a``'s last valid row *ends* its case at the boundary
+      (``a``'s own fold deferred that end to ``finalize``, which never ran).
+
+    Integer state, so the reconstruction is bitwise.  Shared by the dfg,
+    alpha, discovery, and heuristics kernels (the latter two through their
+    embedded DFG state).
+    """
+    counts = A.counts + B.counts
+    starts = A.starts + B.starts
+    ends = A.ends + B.ends
+    if straddle:
+        if b_row0["rv"]:
+            starts = starts.at[b_row0["act"]].add(-1, mode="drop")
+            if a_tail["rv"]:
+                counts = counts.at[a_tail["act"], b_row0["act"]].add(
+                    1, mode="drop")
+    elif a_tail["rv"]:
+        ends = ends.at[a_tail["act"]].add(1, mode="drop")
+    return DFG(counts, starts, ends)
+
+
+def _dfg_stitch(ctx: engine.StitchCtx):
+    return stitch_dfg_state(ctx.a.state, ctx.b.state, ctx.a.tail,
+                            ctx.b.head["rows"][0], ctx.straddle), {}
+
+
 @lru_cache(maxsize=None)
 def _dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     a = num_activities
@@ -137,7 +173,8 @@ def _dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
 
     return engine.ChunkKernel(f"dfg[{impl}]", init, update,
                               engine.tree_sum, finalize,
-                              columns=(CASE, ACTIVITY))
+                              columns=(CASE, ACTIVITY),
+                              stitch=_dfg_stitch)
 
 
 # ------------------------------------------------- whole-log entry points

@@ -37,7 +37,7 @@ import numpy as np
 from repro.kernels.segment_ops import pair_count
 
 from .eventframe import ACTIVITY, CASE, EventFrame
-from .dfg import DFG, dfg_kernel, _method_impl
+from .dfg import DFG, dfg_kernel, stitch_dfg_state, _method_impl
 from . import engine
 
 
@@ -360,9 +360,43 @@ def _discovery_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
     def finalize(state, carry):
         return DiscoveryState(dk.finalize(state["dfg"], carry), state["l2"])
 
+    def stitch(ctx):
+        # the DFG half shares the one-row-halo stitch; the L2 half needs
+        # the *two*-row halo: triples landing on b's first two rows were
+        # invisible to b's fresh fold (its two-back carry had exists=False)
+        at = ctx.a.tail
+        ac = ctx.a.carry
+        rows_b = ctx.b.head["rows"]
+        b0 = rows_b[0]
+        dfg_s = stitch_dfg_state(ctx.a.state["dfg"], ctx.b.state["dfg"],
+                                 at, b0, ctx.straddle)
+        l2 = ctx.a.state["l2"] + ctx.b.state["l2"]
+        if ctx.straddle and at["rv"] and b0["rv"]:
+            # triple (a[-2], a[-1], b0): a's two-back halo is in its carry
+            if (bool(ac["exists2"]) and bool(ac["rv2"])
+                    and int(ac["case2"]) == b0["case"]
+                    and int(ac["act2"]) == b0["act"]):
+                l2 = l2.at[int(ac["act2"]), at["act"]].add(1, mode="drop")
+            # triple (a[-1], b0, b1): needs b's second leading row
+            if ctx.b.rows >= 2:
+                b1 = rows_b[1]
+                if (b1["case"] == b0["case"] and b1["rv"]
+                        and b1["case"] == at["case"]
+                        and b1["act"] == at["act"]):
+                    l2 = l2.at[at["act"], b0["act"]].add(1, mode="drop")
+        overrides = {}
+        if ctx.b.rows == 1:
+            # the merged two-back row is a's last row, which b's one-row
+            # fold could not know
+            overrides = {"case2": jnp.int32(at["case"]),
+                         "act2": jnp.int32(at["act"]),
+                         "rv2": jnp.bool_(at["rv"]),
+                         "exists2": jnp.bool_(True)}
+        return {"dfg": dfg_s, "l2": l2}, overrides
+
     return engine.ChunkKernel(f"discovery[{impl}]", init, update,
                               engine.tree_sum, finalize,
-                              columns=(ACTIVITY, CASE))
+                              columns=(ACTIVITY, CASE), stitch=stitch)
 
 
 def _dfg_kernel_for(num_activities: int, impl: str) -> engine.ChunkKernel:
@@ -378,7 +412,7 @@ def alpha_kernel(num_activities: int, min_count: int = 1,
     return engine.ChunkKernel(
         f"alpha[{dk.name}]", dk.init, dk.update, dk.merge,
         lambda s, c: discover_alpha(dk.finalize(s, c), min_count),
-        mask_exact=dk.mask_exact, columns=dk.columns)
+        mask_exact=dk.mask_exact, columns=dk.columns, stitch=dk.stitch)
 
 
 def heuristics_kernel(num_activities: int, method: str = "auto",
@@ -388,7 +422,7 @@ def heuristics_kernel(num_activities: int, method: str = "auto",
     return engine.ChunkKernel(
         f"heuristics[{k.name}]", k.init, k.update, k.merge,
         lambda s, c: discover_heuristics(k.finalize(s, c), **thresholds),
-        mask_exact=k.mask_exact, columns=k.columns)
+        mask_exact=k.mask_exact, columns=k.columns, stitch=k.stitch)
 
 
 # ------------------------------------------------- whole-log entry points

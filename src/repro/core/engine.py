@@ -39,7 +39,9 @@ from typing import Any, Callable, Iterable, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import polyhash
 from .eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
 
 State = Any
@@ -74,6 +76,18 @@ class ChunkKernel:
     means "unknown — read everything"; :func:`compose` unions member
     column sets, so a fused kernel's scan can never starve one member of
     a column it needs.
+
+    ``stitch`` declares the kernel's *group-state algebra* support: given
+    a :class:`StitchCtx` pairing two :class:`GroupState` fresh folds, it
+    returns the state (and carry overrides) of the fresh fold of the
+    concatenation — an O(1) boundary-halo fix on top of elementwise
+    combination.  ``None`` marks the kernel non-mergeable at the group
+    level (order-sensitive float accumulation: the sum of f32 chunk
+    contributions depends on fold order bitwise), in which case drivers
+    fall back to the sequential ``update`` stream.  Everything a stitch
+    may consume is exact under reordering (integer counts, min/max,
+    uint32 hashes, integer-valued f32 below 2^24), which is what makes
+    the merge associative *bitwise*, not just mathematically.
     """
 
     name: str
@@ -84,6 +98,7 @@ class ChunkKernel:
     mask_exact: bool = True
     columns: tuple = ()
     ghost_sketch: bool = False
+    stitch: Callable[["StitchCtx"], tuple[State, dict]] | None = None
 
 
 # ------------------------------------------------------- kernel registry
@@ -259,6 +274,252 @@ def run_single(kernel: ChunkKernel, frame: Chunk):
     return kernel.finalize(state, carry)
 
 
+# ------------------------------------------------- group-state algebra
+# A GroupState is the *fresh* fold of a kernel over one contiguous unit of
+# the sorted log (a row group, a shard span, a whole file): state + carry
+# from ``init()``, case segments numbered locally from 0, plus the boundary
+# halo a later merge needs — the unit's leading row(s) and the lead run's
+# histogram/affine summaries.  ``merge_group_states`` reconstructs, bitwise,
+# the fresh fold of the concatenation of two units, so
+#
+#     finalize(merge_tree([fold_group(unit) for unit in units]))
+#     ==  run_streaming(kernel, all chunks)            (bitwise)
+#
+# for every kernel with a ``stitch``.  That single identity is what makes
+# eager (one unit), streaming (one unit per row group, cacheable), sharded
+# (one unit per shard span), windowed (merge a slice of units), and
+# incremental (re-merge cached units + fold fresh ones) the *same* schedule
+# family over one algebra.
+@dataclasses.dataclass
+class GroupState:
+    """Fresh fold of one contiguous unit: mergeable, cacheable, re-usable.
+
+    ``head`` / ``tail`` are the boundary halo (host-side python values):
+    ``head["rows"]`` holds up to two leading physical rows (the two-row
+    stitch the L2-loop kernels need), ``head["hist"]`` the valid-activity
+    histogram of the unit's *lead run* (all leading rows of its first
+    case — the EFG cross term), ``head["affine"]`` the validity-blind
+    polyhash map of that lead run (the variants hash correction).
+    ``segments``/``rows`` count case segments (locally numbered from 0)
+    and physical rows.  ``rows == 0`` is the merge identity.
+    """
+
+    state: State
+    carry: Carry
+    head: dict | None
+    tail: dict | None
+    segments: int
+    rows: int
+
+
+class StitchCtx(NamedTuple):
+    """Everything a kernel ``stitch`` may consult to merge ``a ++ b``:
+    ``straddle`` says the boundary splits one case segment, ``offset`` is
+    the relabel added to ``b``'s local segment ids (``a.segments``, minus
+    one when the straddling segment keeps ``a``'s numbering)."""
+
+    a: GroupState
+    b: GroupState
+    straddle: bool
+    offset: int
+
+
+def mergeable(kernel: ChunkKernel) -> bool:
+    """Does this kernel support the group-state algebra (has a stitch)?"""
+    return kernel.stitch is not None
+
+
+def empty_group_state(kernel: ChunkKernel) -> GroupState:
+    """The merge identity: the fresh fold of zero rows."""
+    state, carry = kernel.init()
+    return GroupState(state, carry, None, None, 0, 0)
+
+
+def shift_segments(arr: jax.Array, offset: int, fill=0) -> jax.Array:
+    """Relabel a per-segment state vector by ``offset`` slots (how a merge
+    maps ``b``'s local segment ids into the concatenation's numbering).
+    Entries shifted past capacity drop — matching the sequential fold's
+    out-of-range scatter drop."""
+    if offset <= 0:
+        return arr
+    cap = arr.shape[0]
+    out = jnp.full_like(arr, fill)
+    if offset < cap:
+        out = out.at[offset:].set(arr[:cap - offset])
+    return out
+
+
+def _compose4(a: tuple, b: tuple) -> tuple:
+    """Compose two (mul1, add1, mul2, add2) affine-map quadruples."""
+    m1, a1 = polyhash.compose(a[0], a[1], b[0], b[1])
+    m2, a2 = polyhash.compose(a[2], a[3], b[2], b[3])
+    return (m1, a1, m2, a2)
+
+
+def fold_group(kernel: ChunkKernel, chunks: Iterable[Chunk]) -> GroupState:
+    """Fold a kernel *freshly* over one contiguous unit of the stream,
+    capturing the boundary halo a later :func:`merge_group_states` needs.
+
+    The state/carry fold is exactly :func:`run_streaming`'s loop (bitwise);
+    the halo bookkeeping is host-side numpy over the same chunks.  Ghost
+    chunks participate like real ones: their rows are masked (so the lead
+    histogram stays empty) and their sketch columns supply the lead run's
+    composed affine map.
+    """
+    state, carry = kernel.init()
+    segments = 0
+    rows = 0
+    head_rows: list[dict] = []
+    hist: dict[int, int] = {}
+    affine = (1, 0, 1, 0)
+    lead_open = True
+    first_case = None
+    tail = None
+    for chunk in chunks:
+        n = int(chunk.nrows)
+        if n == 0:
+            continue
+        case = np.asarray(chunk[CASE])
+        act = np.asarray(chunk[ACTIVITY])
+        rv = np.asarray(chunk.rows_valid())
+        cont = rows > 0 and int(case[0]) == tail["case"]
+        changes = np.flatnonzero(case[1:] != case[:-1])
+        segments += 1 + int(changes.size) - (1 if cont else 0)
+        if rows == 0:
+            first_case = int(case[0])
+        while len(head_rows) < 2 and len(head_rows) < rows + n:
+            i = len(head_rows) - rows
+            head_rows.append({"case": int(case[i]), "act": int(act[i]),
+                              "rv": bool(rv[i])})
+        if lead_open and rows > 0 and not cont:
+            lead_open = False
+        if lead_open:
+            k = int(changes[0]) + 1 if changes.size else n
+            counts = np.bincount(act[:k][rv[:k]])
+            for a_id in np.flatnonzero(counts):
+                hist[int(a_id)] = hist.get(int(a_id), 0) + int(counts[a_id])
+            if polyhash.SK_MUL1 in chunk:
+                m1 = np.asarray(chunk[polyhash.SK_MUL1])[:k]
+                a1 = np.asarray(chunk[polyhash.SK_ADD1])[:k]
+                m2 = np.asarray(chunk[polyhash.SK_MUL2])[:k]
+                a2 = np.asarray(chunk[polyhash.SK_ADD2])[:k]
+                for i in np.flatnonzero((m1 != 1) | (a1 != 0)
+                                        | (m2 != 1) | (a2 != 0)):
+                    affine = _compose4(affine, (int(m1[i]), int(a1[i]),
+                                                int(m2[i]), int(a2[i])))
+            else:
+                sk = polyhash.segment_sketch(act[:k], np.zeros(k, np.int64))
+                affine = _compose4(affine, (int(sk["mul1"][0]),
+                                            int(sk["add1"][0]),
+                                            int(sk["mul2"][0]),
+                                            int(sk["add2"][0])))
+            if changes.size:
+                lead_open = False
+        state, carry = kernel.update(state, carry, chunk)
+        rows += n
+        tail = {"case": int(case[-1]), "act": int(act[-1]), "rv": bool(rv[-1])}
+    if rows == 0:
+        return GroupState(state, carry, None, None, 0, 0)
+    head = {"case": first_case, "rows": tuple(head_rows),
+            "hist": hist, "affine": affine}
+    return GroupState(state, carry, head, tail, segments, rows)
+
+
+def _shift_carry(carry, offset: int):
+    """Recursively relabel every ``"seg"`` entry of a (possibly composed)
+    carry by the merge's segment offset."""
+    if not isinstance(carry, dict):
+        return carry
+    out = {}
+    for k, v in carry.items():
+        if k == "seg":
+            out[k] = v + jnp.int32(offset)
+        elif isinstance(v, dict):
+            out[k] = _shift_carry(v, offset)
+        else:
+            out[k] = v
+    return out
+
+
+def _apply_overrides(carry: dict, overrides: dict) -> dict:
+    out = dict(carry)
+    for k, v in overrides.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _apply_overrides(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def _merge_head(a: GroupState, b: GroupState, straddle: bool) -> dict:
+    head = dict(a.head)
+    head["rows"] = (a.head["rows"] + b.head["rows"])[:2]
+    if straddle and a.segments == 1:
+        # a is entirely one case run that continues into b: the merged
+        # unit's lead run is a's rows followed by b's lead run
+        hist = dict(a.head["hist"])
+        for act, cnt in b.head["hist"].items():
+            hist[act] = hist.get(act, 0) + cnt
+        head["hist"] = hist
+        head["affine"] = _compose4(a.head["affine"], b.head["affine"])
+    return head
+
+
+def merge_group_states(kernel: ChunkKernel, a: GroupState,
+                       b: GroupState) -> GroupState:
+    """The algebra's ``merge``: the fresh fold of ``a ++ b``, bitwise.
+
+    Elementwise state combination plus the kernel's O(1) boundary stitch;
+    ``b``'s carry becomes the merged carry with its local segment ids
+    relabelled (and any kernel-specific overrides applied).  Associative
+    — merging reconstructs fresh folds, so any merge-tree shape over the
+    same ordered units yields the same bits.
+    """
+    if a.rows == 0:
+        return b
+    if b.rows == 0:
+        return a
+    if kernel.stitch is None:
+        raise ValueError(
+            f"kernel {kernel.name!r} has no group-state stitch "
+            "(order-sensitive float state); use the sequential fold")
+    straddle = a.tail["case"] == b.head["case"]
+    offset = a.segments - (1 if straddle else 0)
+    state, overrides = kernel.stitch(StitchCtx(a, b, straddle, offset))
+    carry = _shift_carry(b.carry, offset)
+    if overrides:
+        carry = _apply_overrides(carry, overrides)
+    return GroupState(state, carry, _merge_head(a, b, straddle), b.tail,
+                      a.segments + b.segments - (1 if straddle else 0),
+                      a.rows + b.rows)
+
+
+def merge_tree(kernel: ChunkKernel, states: Iterable[GroupState]) -> GroupState:
+    """Reduce ordered unit states pairwise (a balanced merge tree).
+
+    The tree shape is a free choice — the merge is bitwise-associative —
+    so this is simultaneously the reduction the sharded engine runs over
+    shard spans, the re-merge a sliding window runs over its ring of
+    cached group states, and the combine an incremental collect runs over
+    cached + fresh groups.
+    """
+    level = [s for s in states if s is not None and s.rows > 0]
+    if not level:
+        return empty_group_state(kernel)
+    while len(level) > 1:
+        nxt = [merge_group_states(kernel, level[i], level[i + 1])
+               for i in range(0, len(level) - 1, 2)]
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return level[0]
+
+
+def finalize_group(kernel: ChunkKernel, gs: GroupState):
+    """Terminal step of the algebra: the kernel's ordinary ``finalize``."""
+    return kernel.finalize(gs.state, gs.carry)
+
+
 def union_columns(column_sets: Iterable[tuple]) -> tuple:
     """Union column requirements in first-seen order; any *unknown* set
     (the empty tuple) makes the union unknown — read everything."""
@@ -303,13 +564,33 @@ def compose(kernels: Mapping[str, ChunkKernel]) -> ChunkKernel:
     def finalize(state, carry):
         return {k: kernels[k].finalize(state[k], carry[k]) for k in names}
 
+    # the fused kernel joins the group-state algebra exactly when every
+    # member does: its stitch slices the dict state/carry per member and
+    # runs each member's stitch under the shared boundary halo
+    stitch = None
+    if all(k.stitch is not None for k in kernels.values()):
+        def stitch(ctx):
+            states, overrides = {}, {}
+            for k in names:
+                sub = StitchCtx(
+                    dataclasses.replace(ctx.a, state=ctx.a.state[k],
+                                        carry=ctx.a.carry[k]),
+                    dataclasses.replace(ctx.b, state=ctx.b.state[k],
+                                        carry=ctx.b.carry[k]),
+                    ctx.straddle, ctx.offset)
+                states[k], over = kernels[k].stitch(sub)
+                if over:
+                    overrides[k] = over
+            return states, overrides
+
     return ChunkKernel("compose(" + ",".join(names) + ")",
                        init, update, merge, finalize,
                        mask_exact=all(k.mask_exact for k in kernels.values()),
                        columns=union_columns(
                            k.columns for k in kernels.values()),
                        ghost_sketch=any(
-                           k.ghost_sketch for k in kernels.values()))
+                           k.ghost_sketch for k in kernels.values()),
+                       stitch=stitch)
 
 
 def compose_specs(specs: Mapping[str, KernelSpec]) -> KernelSpec:

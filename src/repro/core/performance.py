@@ -68,6 +68,8 @@ def _performance_dfg_kernel(num_activities: int, impl: str) -> engine.ChunkKerne
         counts, total = state
         return counts, total / jnp.maximum(counts, 1)
 
+    # stitch=None: the f32 wait totals accumulate in row order, so the
+    # kernel opts out of the group-state algebra (sequential fold only)
     return engine.ChunkKernel(f"performance_dfg[{a},{impl}]", init, update,
                               engine.tree_sum, finalize,
                               columns=(ACTIVITY, CASE, TIMESTAMP))
@@ -102,9 +104,32 @@ def _eventually_follows_kernel(num_activities: int, impl: str) -> engine.ChunkKe
     def finalize(state, carry):
         return state.astype(jnp.int32)
 
+    def stitch(ctx):
+        import numpy as np
+
+        # b's lead-run rows scanned from a zero prefix; the concatenation
+        # threads a's open prefix through them, adding exactly
+        # outer(a.prefix, lead-run valid-activity histogram).  All values
+        # are integer-valued f32 < 2^24, so the cross term is exact.
+        state = ctx.a.state + ctx.b.state
+        overrides = {}
+        if ctx.straddle:
+            hist = np.zeros((a,), np.float32)
+            for act, cnt in ctx.b.head["hist"].items():
+                if 0 <= act < a:
+                    hist[act] = cnt
+            state = state + jnp.outer(ctx.a.carry["prefix"],
+                                      jnp.asarray(hist))
+            if ctx.b.segments == 1:
+                # the straddling case is still open: its true prefix is
+                # both halves' counts
+                overrides["prefix"] = (ctx.a.carry["prefix"]
+                                       + ctx.b.carry["prefix"])
+        return state, overrides
+
     return engine.ChunkKernel(f"eventually_follows[{a},{impl}]", init, update,
                               engine.tree_sum, finalize,
-                              columns=(ACTIVITY, CASE))
+                              columns=(ACTIVITY, CASE), stitch=stitch)
 
 
 # ------------------------------------------------- whole-log entry points

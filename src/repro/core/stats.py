@@ -52,9 +52,15 @@ def _case_sizes_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
                                        num_cases, "sum", impl=impl)
         return state, engine.next_row_carry(carry, chunk, seg=seg[-1])
 
+    def stitch(ctx):
+        # per-row valid counts are position-free: relabel b's local segment
+        # slots and add (a straddling segment's halves land in one slot)
+        return ctx.a.state + engine.shift_segments(ctx.b.state,
+                                                   ctx.offset), {}
+
     return engine.ChunkKernel(f"case_sizes[{num_cases},{impl}]", init, update,
                               engine.tree_sum, lambda s, c: s,
-                              columns=(ACTIVITY, CASE))
+                              columns=(ACTIVITY, CASE), stitch=stitch)
 
 
 def case_durations_kernel(num_cases: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -91,9 +97,20 @@ def _case_durations_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
         tmin, tmax = state
         return jnp.where(tmax >= tmin, tmax - tmin, 0.0)
 
+    def stitch(ctx):
+        amin, amax = ctx.a.state
+        bmin, bmax = ctx.b.state
+        # min/max are exact and order-free: shift b's slots (identity
+        # fills) and combine elementwise
+        return (jnp.minimum(amin, engine.shift_segments(
+                    bmin, ctx.offset, _FBIG)),
+                jnp.maximum(amax, engine.shift_segments(
+                    bmax, ctx.offset, -_FBIG))), {}
+
     return engine.ChunkKernel(f"case_durations[{num_cases},{impl}]", init,
                               update, merge, finalize,
-                              columns=(ACTIVITY, CASE, TIMESTAMP))
+                              columns=(ACTIVITY, CASE, TIMESTAMP),
+                              stitch=stitch)
 
 
 def activity_counts_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -116,7 +133,11 @@ def _activity_counts_kernel(num_activities: int, impl: str) -> engine.ChunkKerne
 
     return engine.ChunkKernel(f"activity_counts[{a},{impl}]", init, update,
                               engine.tree_sum, lambda s, c: s,
-                              columns=(ACTIVITY, CASE))
+                              columns=(ACTIVITY, CASE),
+                              # boundary-free integer histogram: the merge
+                              # IS the stitch
+                              stitch=lambda ctx: (ctx.a.state + ctx.b.state,
+                                                  {}))
 
 
 def sojourn_times_kernel(num_activities: int, backend: str | None = None) -> engine.ChunkKernel:
@@ -150,6 +171,9 @@ def _sojourn_times_kernel(num_activities: int, impl: str) -> engine.ChunkKernel:
         tot, cnt = state
         return tot / jnp.maximum(cnt, 1)
 
+    # stitch=None: the f32 dt totals accumulate in row order; regrouping
+    # them is not bitwise-stable, so the kernel opts out of the
+    # group-state algebra and keeps the sequential fold
     return engine.ChunkKernel(f"sojourn_times[{a},{impl}]", init, update,
                               engine.tree_sum, finalize,
                               columns=(ACTIVITY, CASE, TIMESTAMP))

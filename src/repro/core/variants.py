@@ -123,12 +123,47 @@ def _variants_kernel(num_cases: int, impl: str) -> engine.ChunkKernel:
                                        mode="drop")
         return fp1, fp2, jnp.maximum(carry["seg"] + 1, 0)
 
+    def stitch(ctx):
+        afp1, afp2 = ctx.a.state
+        bfp1, bfp2 = ctx.b.state
+        off = ctx.offset
+        ac = ctx.a.carry
+        if not ctx.straddle:
+            # the concatenation closes a's open case at b's first row
+            # (new_seg): the deferred carry hash lands in a's last slot —
+            # exactly the carry-close scatter update() runs at chunk joins
+            slot = ctx.a.segments - 1
+            afp1 = afp1.at[slot].max(ac["h1"], mode="drop")
+            afp2 = afp2.at[slot].max(ac["h2"], mode="drop")
+            return (jnp.maximum(afp1, engine.shift_segments(bfp1, off)),
+                    jnp.maximum(afp2, engine.shift_segments(bfp2, off))), {}
+        # the boundary splits one case: b's fresh fold hashed its lead run
+        # from h=0, but the true hash threads a's open carry through the
+        # lead run's composed affine map (validity-blind — for ghost units
+        # the map came from header sketches, same bits either way)
+        m1, a1, m2, a2 = ctx.b.head["affine"]
+        h1c = jnp.uint32((m1 * int(ac["h1"]) + a1) & 0xFFFFFFFF)
+        h2c = jnp.uint32((m2 * int(ac["h2"]) + a2) & 0xFFFFFFFF)
+        sb1 = engine.shift_segments(bfp1, off)
+        sb2 = engine.shift_segments(bfp2, off)
+        if ctx.b.segments > 1:
+            # the straddling case closed inside b: rewrite its slot with
+            # the corrected hash (a's fold left that slot untouched, and
+            # b's slot 0 held the seed-0 hash)
+            sb1 = sb1.at[off].set(h1c, mode="drop")
+            sb2 = sb2.at[off].set(h2c, mode="drop")
+            return (jnp.maximum(afp1, sb1), jnp.maximum(afp2, sb2)), {}
+        # b is entirely the straddling case — still open; fix the carry
+        return (jnp.maximum(afp1, sb1), jnp.maximum(afp2, sb2)), \
+            {"h1": h1c, "h2": h2c}
+
     # hashing ignores row validity (whole-log parity); pruning stays exact
     # because ghost chunks carry the skipped runs' composed sketch maps
     # (ghost_sketch=True asks the query layer to attach them)
     return engine.ChunkKernel(f"variants[{num_cases},{impl}]", init, update,
                               merge, finalize, mask_exact=True,
-                              columns=(ACTIVITY, CASE), ghost_sketch=True)
+                              columns=(ACTIVITY, CASE), ghost_sketch=True,
+                              stitch=stitch)
 
 
 # ------------------------------------------------- whole-log entry points

@@ -7,11 +7,13 @@ and distributed mining (see ``repro.dataset.dataset`` for the full story).
 """
 from .dataset import Dataset, open_dataset  # noqa: F401
 from .engines import (ENGINES, CollectResult, CostEstimate,  # noqa: F401
-                      choose, estimate)
+                      choose, clear_result_cache, estimate)
+from .window import Windows, WindowResult  # noqa: F401
 
 open = open_dataset  # the facade's entry point: ``repro.open(...)``
 
 __all__ = [
-    "CollectResult", "CostEstimate", "Dataset", "ENGINES", "choose",
-    "estimate", "open", "open_dataset",
+    "CollectResult", "CostEstimate", "Dataset", "ENGINES", "WindowResult",
+    "Windows", "choose", "clear_result_cache", "estimate", "open",
+    "open_dataset",
 ]

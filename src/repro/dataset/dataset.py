@@ -249,6 +249,15 @@ class Dataset:
             lines.append(f"  fused [{', '.join(spec.members)}] -> one "
                          f"pruned scan of {list(spec.columns)}")
             lines.append(f"  prefetch {prefetch_depth()} group(s) ahead")
+        probe = None if verbs is not None else engines.cache_probe(self, verb)
+        if probe is not None:
+            from repro.query.statecache import state_cache
+
+            lines.append(
+                f"  state-cache {probe['units']} group units: "
+                f"{probe['cached']} merged-from-cache, {probe['fresh']} "
+                f"freshly decoded, {probe['ghosted']} ghosted "
+                f"({state_cache().bytes >> 10} KiB resident)")
         sketch_refuted = self._sketch_refutations()
         if sketch_refuted is not None:
             lines.append(f"  sketch keeps refute {sketch_refuted[0]}/"
@@ -383,6 +392,24 @@ class Dataset:
         if isinstance(model, AlphaModel):
             return _conformance.alpha_fitness(d, model)
         return _conformance.footprint_fitness(d, jnp.asarray(model))
+
+    def window(self, by: str = "groups", *, size, step=None):
+        """Sliding windows over the dataset (``repro.dataset.window``).
+
+        ``by="groups"`` windows span ``size`` row groups stepped by
+        ``step`` (mined by re-merging cached per-group states — a slide
+        re-decodes nothing); ``by="time"`` windows span ``[t, t + size]``
+        timestamp intervals stepped by ``step`` (inclusive edges).
+        ``step`` defaults to ``size`` (tumbling windows)::
+
+            w = ds.window(by="time", size=86400.0, step=3600.0)
+            w.collect("dfg")              # per-window DFGs
+            w.drift()                     # footprint drift per slide
+            w.conformance(ds.alpha())     # per-window replay fitness
+        """
+        from .window import Windows
+
+        return Windows(self, by, size, size if step is None else step)
 
     def to_frame(self) -> EventFrame:
         """Materialize the filtered, projected events as one compact frame

@@ -1,19 +1,35 @@
 """Engine dispatch for the ``Dataset`` facade — the first cost-based plan.
 
-Three interchangeable lowerings of one logical plan:
+Three *schedules over one merge algebra* (``core.engine``'s group
+states): a verb whose kernel defines a ``stitch`` folds work units
+independently and ``merge_tree``-s the unit states, so the engines below
+differ only in how they cut the stream into units —
 
-* **eager** — ``edf.read`` every file whole, apply the filter chain in
-  memory (the same masks the planner pushes down), run the kernel once.
+* **eager** — one unit: ``edf.read`` every file whole, apply the filter
+  chain in memory (the same masks the planner pushes down), fold once.
   No per-group overhead: the fastest path when the surviving data is
   small and pruning would not skip much.
-* **streaming** — ``repro.query`` pruned scans: zone maps refute row
-  groups before any I/O, one chunk resident at a time, ghost carries keep
-  case-indexed kernels exact.  Wins when the predicate is selective or
-  the data outgrows memory.
-* **sharded** — the same pruned stream split over devices
-  (``repro.distributed.query``): one kernel update per shard, ppermute
-  halo, psum merge.  Available for verbs whose mergeable state has an
-  exact distributed lowering (``KernelSpec.sharded_state``).
+* **streaming** — one unit per row group: ``repro.query`` pruned scans
+  refute groups from zone maps before any I/O, and ``execute_grouped``
+  folds each surviving group into a cacheable
+  :class:`~repro.core.engine.GroupState` (``query.statecache``) — a
+  re-collect after appending a file only decodes the *fresh* groups and
+  re-merges the rest from the cache.  Kernels without a stitch (the
+  order-sensitive float accumulators: ``sojourn_times`` /
+  ``performance_dfg`` / ``stats``) and plans with case-level predicates
+  keep the sequential carry-threaded scan — same results, no caching.
+* **sharded** — one unit per shard: verbs with a hand-written
+  distributed lowering (``KernelSpec.sharded_state``) keep the
+  ppermute-halo + psum drivers; every *other* mergeable verb shards as a
+  literal merge-tree instance (``distributed.query.merge_tree_sharded``
+  — contiguous spans of the pruned stream folded independently, states
+  merged, finalized once).
+
+Whole :class:`CollectResult`/:class:`CollectManyResult` values are also
+memoized per process, keyed by the plan fingerprint and each file's
+``(st_mtime_ns, st_size)`` signature: re-collecting an untouched dataset
+performs **zero** reads; touching any file invalidates only its entry
+(``REPRO_RESULT_CACHE=0`` disables).
 
 ``engine="auto"`` picks between them from *header metadata only*: total
 on-disk bytes per ``edf.file_sizes``-style group accounting, the
@@ -46,11 +62,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
+from collections import OrderedDict
 from typing import Any, Iterable, Mapping
 
 import numpy as np
 
 from repro.core import engine as _engine
+from repro.core import backend as _backend
 from repro.core.eventframe import CASE, EventFrame
 
 SHARD_ROWS = int(os.environ.get("REPRO_DATASET_SHARD_ROWS", 2_000_000))
@@ -60,6 +79,68 @@ ENGINES = ("auto", "eager", "streaming", "sharded")
 
 def spec_for(verb: str) -> _engine.KernelSpec:
     return _engine.kernel_spec(verb)
+
+
+def _spec_fp(verb: str, dims: _engine.Dims, kwargs: Mapping) -> tuple:
+    from repro.query.statecache import spec_fingerprint
+
+    return spec_fingerprint(verb, dims, dict(kwargs))
+
+
+# ------------------------------------------------------- result memoization
+RESULT_CACHE_ENV = "REPRO_RESULT_CACHE"
+_RESULT_CAP = 128
+_RESULTS: OrderedDict = OrderedDict()
+_RESULTS_LOCK = threading.Lock()
+
+
+def file_signatures(paths) -> tuple:
+    """Per-file ``(path, st_mtime_ns, st_size)`` — the invalidation unit
+    of both the result memo and the reader pool."""
+    return tuple((p, os.stat(p).st_mtime_ns, os.stat(p).st_size)
+                 for p in paths)
+
+
+def _memo_key(dataset, extra) -> tuple | None:
+    """Content key of one collect over a file-backed dataset, or ``None``
+    when memoization does not apply (in-memory frame, disabled, or a file
+    is unreadable).  ``extra`` carries the verb + engine + kwargs."""
+    if not dataset.is_files or os.environ.get(RESULT_CACHE_ENV, "1") == "0":
+        return None
+    try:
+        sigs = file_signatures(dataset.paths)
+    except OSError:
+        return None
+    return (sigs, repr(dataset.steps), dataset.projection,
+            dataset.hint_activities, dataset.hint_cases,
+            _backend.resolve(None), extra)
+
+
+def _memo_get(key):
+    if key is None:
+        return None
+    with _RESULTS_LOCK:
+        hit = _RESULTS.get(key)
+        if hit is not None:
+            _RESULTS.move_to_end(key)
+        return hit
+
+
+def _memo_put(key, value):
+    if key is None:
+        return
+    with _RESULTS_LOCK:
+        _RESULTS[key] = value
+        _RESULTS.move_to_end(key)
+        while len(_RESULTS) > _RESULT_CAP:
+            _RESULTS.popitem(last=False)
+
+
+def clear_result_cache() -> None:
+    """Drop every memoized collect result (tests; the per-group state
+    cache is separate — ``repro.query.statecache.state_cache().clear()``)."""
+    with _RESULTS_LOCK:
+        _RESULTS.clear()
 
 
 # ------------------------------------------------------------ cost model
@@ -269,15 +350,32 @@ def _mesh(num_shards):
     return jax.sharding.Mesh(np.array(devs[:num_shards]), ("data",))
 
 
+def _num_shards(num_shards) -> int:
+    if num_shards is not None:
+        return max(int(num_shards), 1)
+    import jax
+
+    return len(jax.devices())
+
+
 def _sharded(dataset, spec: _engine.KernelSpec, dims, num_shards, **kwargs):
     from repro.distributed.query import query_sharded_multi
 
-    if spec.sharded_state is None:
-        raise ValueError(
-            f"verb {spec.name!r} has no exact distributed lowering "
-            f"(order-sensitive state); use engine='streaming' or 'eager'")
     if not dataset.is_files:
         raise ValueError("engine='sharded' needs a file-backed dataset")
+    if spec.sharded_state is None:
+        # no bespoke distributed state — but a mergeable kernel shards as
+        # a merge-tree instance over contiguous spans of the pruned stream
+        from repro.distributed.query import merge_tree_sharded
+
+        kernel = spec.make(dims, **kwargs)
+        if not _engine.mergeable(kernel):
+            raise ValueError(
+                f"verb {spec.name!r} has no exact distributed lowering "
+                f"(order-sensitive state, no stitch); use "
+                f"engine='streaming' or 'eager'")
+        return merge_tree_sharded(dataset.plan(columns=spec.columns),
+                                  kernel, _num_shards(num_shards))
     # same projection/column validation as the other engines (the driver
     # re-projects the scan to its own (activity, case) columns anyway)
     plan = dataset.plan(columns=spec.columns)
@@ -293,14 +391,27 @@ def _sharded_many(dataset, specs: Mapping[str, _engine.KernelSpec],
                   verb_kwargs: Mapping[str, dict], common: dict):
     from repro.distributed.query import query_sharded_multi
 
-    if fused.sharded_state is None:
-        bad = sorted(v for v, s in specs.items() if s.sharded_state is None)
-        raise ValueError(
-            f"fused collection has no exact distributed lowering: verbs "
-            f"{bad} (order-sensitive state); drop them or use "
-            f"engine='streaming' or 'eager'")
     if not dataset.is_files:
         raise ValueError("engine='sharded' needs a file-backed dataset")
+    if fused.sharded_state is None:
+        # same merge-tree fallback as single-verb collects: a fused kernel
+        # stitches iff every member does
+        from repro.distributed.query import merge_tree_sharded
+
+        kernel = fused.make(dims, verb_kwargs=dict(verb_kwargs), **common)
+        if not _engine.mergeable(kernel):
+            bad = sorted(v for v, s in specs.items()
+                         if s.sharded_state is None and
+                         not _engine.mergeable(s.make(dims, **{
+                             **common, **dict(verb_kwargs.get(v, {}))})))
+            raise ValueError(
+                f"fused collection has no exact distributed lowering: verbs "
+                f"{bad} (order-sensitive state, no stitch); drop them or "
+                f"use engine='streaming' or 'eager'")
+        results, report = merge_tree_sharded(
+            dataset.plan(columns=fused.columns), kernel,
+            _num_shards(num_shards))
+        return dict(results), report
     # verbs sharing a distributed state (dfg + alpha, discovery +
     # heuristics) dedupe: each distinct state is mined once from the one
     # gathered stream, then every verb finalizes host-side from its state
@@ -328,12 +439,44 @@ class CollectResult:
     estimate: CostEstimate | None = None
 
 
+def _fold_eager(kernel, frame):
+    """Eager = the one-unit schedule of the merge algebra: fold the whole
+    in-memory frame as a single group state and finalize it.  For kernels
+    without a stitch this degenerates to ``run_single`` — both are
+    ``finalize(update(init, frame))``, bitwise."""
+    if _engine.mergeable(kernel):
+        chunks = [frame] if frame.nrows else []
+        return _engine.finalize_group(
+            kernel, _engine.fold_group(kernel, chunks))
+    # a zero-row dataset still finalizes cleanly (like run_streaming)
+    return (_engine.run_single(kernel, frame) if frame.nrows
+            else kernel.finalize(*kernel.init()))
+
+
 def collect(dataset, verb: str, *, engine: str = "auto",
             num_shards: int | None = None, prefetch: int | None = None,
             **kwargs) -> CollectResult:
     """Resolve the verb through the kernel registry, pick an engine, run."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    memo_key = _memo_key(dataset, ("collect", verb, engine, num_shards,
+                                   # auto's choice moves with the fitted
+                                   # costs — key them so a recalibration
+                                   # is never served a stale decision
+                                   calibration() if engine == "auto"
+                                   else None,
+                                   tuple(sorted((k, repr(v))
+                                                for k, v in kwargs.items()))))
+    hit = _memo_get(memo_key)
+    if hit is not None:
+        return hit
+    out = _collect(dataset, verb, engine, num_shards, prefetch, kwargs)
+    _memo_put(memo_key, out)
+    return out
+
+
+def _collect(dataset, verb, engine, num_shards, prefetch, kwargs
+             ) -> CollectResult:
     spec = spec_for(verb)
     dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
     est = None
@@ -345,20 +488,22 @@ def collect(dataset, verb: str, *, engine: str = "auto",
             dataset.plan(columns=spec.columns)  # same projection/column
             # validation (and error) the streaming engine would raise
         kernel = spec.make(dims, **kwargs)
-        frame = eager_frame(dataset)
-        # a zero-row dataset still finalizes cleanly (like run_streaming)
-        result = (_engine.run_single(kernel, frame) if frame.nrows
-                  else kernel.finalize(*kernel.init()))
+        result = _fold_eager(kernel, eager_frame(dataset))
         return CollectResult(result, None, "eager", verb, est)
     if engine == "sharded":
         result, report = _sharded(dataset, spec, dims, num_shards, **kwargs)
         return CollectResult(result, report, "sharded", verb, est)
-    # streaming: the pruned multi-scan
-    from repro.query.exec import execute
+    # streaming: per-group states through the cache when the kernel
+    # stitches (and the plan is row-level), else the sequential scan
+    from repro.query.exec import execute, execute_grouped, grouped_eligible
 
     kernel = spec.make(dims, **kwargs)
-    result, report = execute(dataset.plan(columns=spec.columns), kernel,
-                             prefetch=prefetch)
+    plan = dataset.plan(columns=spec.columns)
+    if grouped_eligible(kernel, dataset.steps):
+        result, report = execute_grouped(plan, kernel,
+                                         _spec_fp(verb, dims, kwargs))
+    else:
+        result, report = execute(plan, kernel, prefetch=prefetch)
     return CollectResult(result, report, "streaming", verb, est)
 
 
@@ -404,10 +549,27 @@ def collect_many(dataset, verbs: Iterable[str], *, engine: str = "auto",
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
     if len(set(verbs)) != len(verbs):
         raise ValueError(f"duplicate verbs in collect_many: {list(verbs)}")
+    vk = dict(verb_kwargs or {})
+    memo_key = _memo_key(dataset, (
+        "collect_many", verbs, engine, num_shards,
+        calibration() if engine == "auto" else None,
+        tuple(sorted((v, tuple(sorted((k, repr(x)) for k, x in kw.items())))
+                     for v, kw in vk.items())),
+        tuple(sorted((k, repr(v)) for k, v in common.items()))))
+    hit = _memo_get(memo_key)
+    if hit is not None:
+        return hit
+    out = _collect_many(dataset, verbs, engine, num_shards, prefetch, vk,
+                        common)
+    _memo_put(memo_key, out)
+    return out
+
+
+def _collect_many(dataset, verbs, engine, num_shards, prefetch, vk, common
+                  ) -> CollectManyResult:
     specs = {v: spec_for(v) for v in verbs}
     fused = _engine.compose_specs(specs)
     dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
-    vk = dict(verb_kwargs or {})
     est = None
     if engine == "auto":
         est = estimate(dataset) if dataset.is_files else None
@@ -416,20 +578,54 @@ def collect_many(dataset, verbs: Iterable[str], *, engine: str = "auto",
         if dataset.is_files:
             dataset.plan(columns=fused.columns)
         kernel = fused.make(dims, verb_kwargs=vk, **common)
-        frame = eager_frame(dataset)
-        results = (_engine.run_single(kernel, frame) if frame.nrows
-                   else kernel.finalize(*kernel.init()))
+        results = _fold_eager(kernel, eager_frame(dataset))
         return CollectManyResult(dict(results), None, "eager", verbs, est)
     if engine == "sharded":
         results, report = _sharded_many(dataset, specs, fused, dims,
                                         num_shards, vk, common)
         return CollectManyResult(results, report, "sharded", verbs, est)
-    from repro.query.exec import execute
+    from repro.query.exec import execute, execute_grouped, grouped_eligible
 
     kernel = fused.make(dims, verb_kwargs=vk, **common)
-    results, report = execute(dataset.plan(columns=fused.columns), kernel,
-                              prefetch=prefetch)
+    plan = dataset.plan(columns=fused.columns)
+    if grouped_eligible(kernel, dataset.steps):
+        fp = _spec_fp("+".join(verbs), dims,
+                      {"verb_kwargs": sorted(vk.items()), **common})
+        results, report = execute_grouped(plan, kernel, fp)
+    else:
+        results, report = execute(plan, kernel, prefetch=prefetch)
     return CollectManyResult(dict(results), report, "streaming", verbs, est)
+
+
+def group_states_for(dataset, verb: str, **kwargs):
+    """The per-unit material ``Dataset.window`` re-merges: ``(kernel,
+    states, report)`` with one :class:`~repro.core.engine.GroupState` per
+    nonempty row group of the dataset's plan, resolved through the state
+    cache.  Raises for non-mergeable verbs or case-level plans (windows
+    then fall back to scratch mining)."""
+    from repro.query.exec import group_states
+
+    spec = spec_for(verb)
+    dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
+    kernel = spec.make(dims, **kwargs)
+    states, report = group_states(dataset.plan(columns=spec.columns),
+                                  kernel, _spec_fp(verb, dims, kwargs))
+    return kernel, states, report
+
+
+def cache_probe(dataset, verb: str = "dfg", **kwargs) -> dict | None:
+    """State-cache accounting for a would-be grouped collect, header-only
+    (see ``repro.query.exec.grouped_cache_probe``); None when the verb or
+    plan is not grouped-eligible or the dataset is in-memory."""
+    from repro.query.exec import grouped_cache_probe
+
+    if not dataset.is_files:
+        return None
+    spec = spec_for(verb)
+    dims = _engine.Dims(dataset.num_activities, dataset.num_cases)
+    kernel = spec.make(dims, **kwargs)
+    return grouped_cache_probe(dataset.plan(columns=spec.columns), kernel,
+                               _spec_fp(verb, dims, kwargs))
 
 
 def to_frame(dataset) -> EventFrame:

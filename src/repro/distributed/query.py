@@ -230,6 +230,38 @@ def query_sharded_multi(plan: "Plan | MultiPlan", states, num_activities: int,
     return result, report
 
 
+def merge_tree_sharded(plan: "Plan | MultiPlan", kernel, num_shards: int,
+                       *, prune: bool = True, prefetch: int | None = None):
+    """Shard a pruned scan as a merge tree over the group-state algebra.
+
+    The classic drivers above shard with a ppermute halo + one ``psum`` —
+    a lowering only states with hand-written distributed kernels have.
+    With mergeable group states (``core.engine.GroupState``) the psum *is*
+    a merge-tree instance: split the pruned chunk stream into
+    ``num_shards`` contiguous spans, fold each span fresh (exactly what a
+    shard's local pass computes), then ``merge_tree`` the span states and
+    finalize once.  Every kernel with a ``stitch`` gains a sharded
+    schedule this way — case sizes, durations, activity counts,
+    eventually-follows — with no bespoke halo code, and the result stays
+    bitwise equal to the streamed fold (the merge reconstructs it).
+
+    Returns ``(result, ScanReport)``.
+    """
+    if not engine.mergeable(kernel):
+        raise ValueError(f"kernel {kernel.name!r} defines no stitch — no "
+                         f"merge-tree sharding (and no distributed state)")
+    src, report = pruned_source(
+        plan, prune=prune, mask_exact=getattr(kernel, "mask_exact", True),
+        sketch=getattr(kernel, "ghost_sketch", False), prefetch=prefetch)
+    chunks = [c for c in src if c.nrows]
+    n = max(int(num_shards), 1)
+    bounds = np.linspace(0, len(chunks), n + 1).round().astype(int)
+    states = [engine.fold_group(kernel, chunks[lo:hi])
+              for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+    merged = engine.merge_tree(kernel, states)
+    return engine.finalize_group(kernel, merged), report
+
+
 def query_sharded_dfg(plan: "Plan | MultiPlan", num_activities: int, mesh,
                       axis_name: str = "data", *, prune: bool = True,
                       method: str = "auto"):

@@ -90,6 +90,8 @@ class ScanReport:
     groups_read: int = 0
     groups_skipped: int = 0
     groups_proved: int = 0      # read groups whose residual mask was proved
+    groups_cached: int = 0      # grouped path: states served from the cache
+    groups_folded: int = 0      # grouped path: states freshly decoded+folded
     rows_total: int = 0
     rows_read: int = 0
     bytes_total: int = 0
@@ -129,7 +131,8 @@ def merge_reports(reports) -> ScanReport:
                      prefetch=max(r.prefetch for r in reports),
                      per_file=reports)
     for f in ("groups_total", "groups_read", "groups_skipped",
-              "groups_proved", "rows_total", "rows_read", "bytes_total",
+              "groups_proved", "groups_cached", "groups_folded",
+              "rows_total", "rows_read", "bytes_total",
               "bytes_read", "phase1_groups_read", "phase1_bytes_read"):
         setattr(out, f, sum(getattr(r, f) for r in reports))
     return out
@@ -848,6 +851,151 @@ def execute(plan: "Plan | MultiPlan", mine: engine.ChunkKernel, *,
         plan, prune=prune, mask_exact=getattr(mine, "mask_exact", True),
         sketch=getattr(mine, "ghost_sketch", False), prefetch=prefetch)
     return engine.run_streaming(mine, src), report
+
+
+# -------------------------------------------------- group-state execution
+def grouped_eligible(kernel: engine.ChunkKernel, steps) -> bool:
+    """True when ``plan`` can run on the group-state algebra: the kernel
+    defines a ``stitch`` (bitwise-mergeable states) and every plan step is
+    a row-level expression (case-level keep masks are global, so those
+    plans stay on the sequential schedules)."""
+    return engine.mergeable(kernel) and not any(
+        isinstance(s, CasePredicate) for s in steps)
+
+
+def _unit_key(ph: PhysicalPlan, item: ReadItem, spec_fp) -> tuple:
+    """State-cache key of one read unit: kernel build fingerprint, file
+    path + group index, the group's content signature, and the residual
+    predicate set the fold masked with ("" when none — zone-proved and
+    unfiltered folds share entries)."""
+    residual_fp = "&".join(repr(ph.steps[i]) for i in item.residual)
+    return (spec_fp, ph.reader.path, item.index,
+            ph.reader.group_signature(item.index), residual_fp)
+
+
+def group_states(plan: "Plan | MultiPlan", kernel: engine.ChunkKernel,
+                 spec_fp, *, prune: bool = True):
+    """One :class:`~repro.core.engine.GroupState` per nonempty row group.
+
+    Each unit of :meth:`PhysicalPlan.unit_schedule` is resolved to a
+    group state three ways:
+
+    * **cached** — the state cache (``query.statecache``) holds a fold of
+      this exact group content (group signature), under this exact kernel
+      build (``spec_fp``) and residual predicate set: reuse it with zero
+      I/O (``groups_cached``);
+    * **folded** — read the group, apply the residual masks (the same
+      masking the sequential scan applies), fold it fresh, and cache the
+      result (``groups_read`` / ``groups_folded``);
+    * **ghosted** — a refuted group folds its O(segments) ghost chunk
+      fresh each time (no I/O; too cheap to be worth cache residency),
+      counted in ``groups_skipped``.
+
+    Residual-free groups key with an empty residual fingerprint, so the
+    interior groups of a time-window query share cache entries with the
+    unfiltered collect.  ``finalize_group(merge_tree(states))`` is
+    bitwise equal to ``execute(plan, kernel)`` — the merge reconstructs
+    the sequential fold exactly (``core.engine`` invariant).
+
+    Returns ``(states, report)`` in stream order.
+    """
+    from repro.core.engine import fold_group
+
+    from .statecache import state_cache
+
+    if isinstance(plan, Plan):
+        plan = MultiPlan((plan.path,), plan.steps, plan.projection)
+    if not engine.mergeable(kernel):
+        raise ValueError(f"kernel {kernel.name!r} defines no stitch — it "
+                         f"cannot run on the group-state algebra")
+    physicals = [compile_plan(p, prune) for p in plan.per_file()]
+    check_homogeneous(ph.reader for ph in physicals)
+    if not grouped_eligible(kernel, physicals[0].steps):
+        raise ValueError("group_states: case-level predicates are not "
+                         "group-local — use execute()")
+    reports = [_base_report(ph) for ph in physicals]
+    cache = state_cache()
+    sketch = getattr(kernel, "ghost_sketch", False)
+    mask_exact = getattr(kernel, "mask_exact", True)
+    states: list[engine.GroupState] = []
+    for ph, rep in zip(physicals, reports):
+        steps = ph.steps
+        for item in ph.unit_schedule(sketch=sketch, mask_exact=mask_exact):
+            if isinstance(item, GhostItem):
+                ghost = _ghost_chunk(item, ph.chunk_columns, ph.reader)
+                states.append(fold_group(kernel, [ghost]))
+                continue
+            g = item.index
+            key = _unit_key(ph, item, spec_fp)
+            hit = cache.get(key)
+            if hit is not None:
+                rep.groups_cached += 1
+                states.append(hit)
+                continue
+            frame = ph.reader.read_group(g, ph.read_columns)
+            mask = np.ones(frame.nrows, bool)
+            for i in item.residual:
+                mask &= np.asarray(steps[i].mask(frame), bool)
+            sel = frame.select(ph.chunk_columns)
+            gs = fold_group(kernel, [EventFrame(sel.columns, sel.valid,
+                                                jnp.asarray(mask))])
+            cache.put(key, gs)
+            states.append(gs)
+            rep.groups_folded += 1
+            rep.groups_read += 1
+            rep.bytes_read += ph.reader.group_nbytes(g, ph.read_columns)
+            rep.rows_read += frame.nrows
+            if not item.residual and ph.steps:
+                rep.groups_proved += 1
+        rep.groups_skipped = (rep.groups_total - rep.groups_read
+                              - rep.groups_cached)
+    return states, merge_reports(reports)
+
+
+def execute_grouped(plan: "Plan | MultiPlan", kernel: engine.ChunkKernel,
+                    spec_fp, *, prune: bool = True):
+    """Mine ``plan`` as a merge tree over per-group states.
+
+    ``finalize(merge_tree(group_states(plan)))`` — bitwise equal to
+    :func:`execute` with the same kernel, but incremental: a re-collect
+    after appending a file (or new groups) only decodes what the state
+    cache has not seen.  Returns ``(result, report)``.
+    """
+    states, report = group_states(plan, kernel, spec_fp, prune=prune)
+    merged = engine.merge_tree(kernel, states)
+    return engine.finalize_group(kernel, merged), report
+
+
+def grouped_cache_probe(plan: "Plan | MultiPlan", kernel: engine.ChunkKernel,
+                        spec_fp, *, prune: bool = True) -> dict | None:
+    """How :func:`group_states` would resolve the plan *right now*, from
+    headers alone — no data I/O, no cache mutation (probes with
+    ``contains``, which skips the hit/miss counters).  Returns ``{"units",
+    "cached", "fresh", "ghosted"}``, or ``None`` when the plan/kernel is
+    not grouped-eligible (what ``Dataset.explain`` prints)."""
+    from .statecache import state_cache
+
+    if isinstance(plan, Plan):
+        plan = MultiPlan((plan.path,), plan.steps, plan.projection)
+    if not engine.mergeable(kernel):
+        return None
+    physicals = [compile_plan(p, prune) for p in plan.per_file()]
+    if not grouped_eligible(kernel, physicals[0].steps):
+        return None
+    cache = state_cache()
+    out = {"units": 0, "cached": 0, "fresh": 0, "ghosted": 0}
+    for ph in physicals:
+        for item in ph.unit_schedule(
+                sketch=getattr(kernel, "ghost_sketch", False),
+                mask_exact=getattr(kernel, "mask_exact", True)):
+            out["units"] += 1
+            if isinstance(item, GhostItem):
+                out["ghosted"] += 1
+            elif cache.contains(_unit_key(ph, item, spec_fp)):
+                out["cached"] += 1
+            else:
+                out["fresh"] += 1
+    return out
 
 
 def _materialize(parts, physical: PhysicalPlan):

@@ -226,6 +226,38 @@ class PhysicalPlan:
                               ghosts=ghosts and self.can_ghost and self.prune,
                               sketch=sketch)
 
+    def unit_schedule(self, sketch: bool = False, mask_exact: bool = True):
+        """Group-granular schedule: exactly one item per nonempty group.
+
+        The group-state algebra (``core.engine``) folds each item into its
+        own :class:`~repro.core.engine.GroupState`, so units must map 1:1
+        to row groups — no run coalescing, or the per-group states could
+        not be cached and re-merged independently.  Refuted groups become
+        *single-group* ghost items (segment metadata permitting); their
+        fold is O(segments) with zero I/O.  Only row-level (``Expr``)
+        plans qualify — case-level predicates need global keep masks and
+        stay on the sequential schedules.
+        """
+        exprs = [i for i, s in enumerate(self.steps) if isinstance(s, Expr)]
+        if any(isinstance(s, CasePredicate) for s in self.steps):
+            raise ValueError("unit_schedule: case-level predicates are not "
+                             "group-local — use final_schedule")
+        items: list = []
+        for g in self._nonempty():
+            refuted = self.prune and any(
+                self.proves[i][g] == NONE for i in exprs)
+            if refuted and self.can_ghost and mask_exact:
+                meta = self.metas[g]
+                items.append(GhostItem(
+                    (g,), int(self.seg_count[g]),
+                    meta["zones"][CASE]["min"], meta["tail"],
+                    self._run_sketch([g]) if sketch else None))
+                continue
+            residual = [i for i in exprs if self.proves[i][g] != ALL] \
+                if self.prune else exprs
+            items.append(ReadItem(g, tuple(residual), ()))
+        return items
+
 
 def compile_plan(plan: Plan, prune: bool = True) -> PhysicalPlan:
     # readers are pooled: every plan over the same file shares one cached

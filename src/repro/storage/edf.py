@@ -51,6 +51,7 @@ random-access view the query planner uses.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import struct
@@ -94,6 +95,22 @@ def _scalar(x):
     """A JSON-safe Python scalar preserving the stored value exactly
     (``float(np.float32)`` is the exact binary64 widening of the float32)."""
     return int(x) if np.issubdtype(np.asarray(x).dtype, np.integer) else float(x)
+
+
+def _json_safe(obj):
+    """Recursively convert numpy scalars/arrays so ``json.dumps`` yields a
+    canonical, content-only encoding (group signatures hash this)."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    return str(obj)
 
 
 def _group_aux(data: Mapping[str, np.ndarray], valid: Mapping[str, np.ndarray],
@@ -462,6 +479,7 @@ class EDFReader:
         self._synth: list[dict] | None = None   # v1/v2 metadata cache
         self._synth_lock = threading.Lock()     # one synthesis per group
         self._sketch: dict[int, dict] = {}      # decoded/synthesized sketches
+        self._gsig: dict[int, str] = {}         # per-group content signatures
         self._file = None                       # persistent handle (lazy)
         self._io_lock = threading.Lock()        # seek/read pairs are shared
         st = os.stat(path)
@@ -589,6 +607,39 @@ class EDFReader:
             return None
         self._sketch[index] = sk
         return sk
+
+    def group_signature(self, index: int) -> str:
+        """Stable, content-derived signature of one row group.
+
+        Hashes the group's *content* metadata — row count, zone maps,
+        segment count, tail halo, variant sketch bands, and per-column
+        byte sizes — but never byte offsets.  An append that adds new
+        groups and rewrites the header therefore keeps the signatures of
+        untouched groups stable, which is exactly what lets the
+        group-state cache (``repro.query.statecache``) reuse their folded
+        states while only fresh groups are decoded.
+        """
+        cached = self._gsig.get(index)
+        if cached is not None:
+            return cached
+        meta = self.group_meta(index)
+        group = self._groups()[index]
+        payload = {
+            "nrows": meta.get("nrows"),
+            "zones": meta.get("zones"),
+            "segments": meta.get("segments"),
+            "tail": meta.get("tail"),
+            "sketch": meta.get("sketch"),
+            "columns": sorted(
+                (name, int(ext.get("nbytes", 0)),
+                 int(ext.get("valid_nbytes", 0)))
+                for name, ext in group.get("columns", {}).items()
+                if isinstance(ext, dict)),
+        }
+        blob = json.dumps(_json_safe(payload), sort_keys=True, default=str)
+        sig = hashlib.sha1(blob.encode()).hexdigest()[:16]
+        self._gsig[index] = sig
+        return sig
 
     def group_nbytes(self, index: int, columns: Iterable[str] | None = None
                      ) -> int:

@@ -1,0 +1,273 @@
+"""Sliding windows, incremental collects, and the caches behind them.
+
+Covers the PR's two tentpole workloads end to end: (1) ``Dataset.window``
+re-merging cached group states — every window bitwise equal to mining its
+rows from scratch, mergeable and order-sensitive verbs alike; (2) the
+incremental path — appending a file re-decodes only the fresh groups,
+proven by ``ScanReport.groups_cached`` / ``groups_folded``.  Plus the
+satellite regressions: result memoization is zero-read until a file's
+``st_mtime_ns``/``st_size`` changes, and ``explain()`` prints the
+state-cache accounting.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from helpers import random_log, sorted_frame
+
+import repro
+from repro.core import engine
+from repro.core.eventframe import ACTIVITY, CASE, TIMESTAMP, EventFrame
+from repro.dataset import engines as ds_engines
+from repro.dataset.window import _unit_chunks
+from repro.query.expr import col
+from repro.query.statecache import state_cache
+from repro.storage import edf
+from repro.storage.edf import EDFReader
+
+VERBS = ("dfg", "variants", "case_sizes", "case_durations",
+         "activity_counts", "eventually_follows", "alpha", "heuristics",
+         "discovery", "stats", "sojourn_times", "performance_dfg")
+N_ACTS, N_CASES = 6, 50
+
+
+def eq(a, b):
+    if dataclasses.is_dataclass(a) and not isinstance(a, type):
+        return type(a) is type(b) and all(
+            eq(getattr(a, f.name), getattr(b, f.name))
+            for f in dataclasses.fields(a))
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(eq(a[k], b[k]) for k in a)
+    if isinstance(a, (tuple, list)):
+        return len(a) == len(b) and all(eq(x, y) for x, y in zip(a, b))
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        return np.array_equal(np.asarray(a), np.asarray(b))
+    return a == b
+
+
+def _slice(frame, a, b):
+    return EventFrame({k: v[a:b] for k, v in frame.columns.items()},
+                      {k: v[a:b] for k, v in frame.valid.items()},
+                      frame.rows_valid()[a:b])
+
+
+def _fresh():
+    state_cache().clear()
+    ds_engines.clear_result_cache()
+
+
+@pytest.fixture(scope="module")
+def twofiles(tmp_path_factory):
+    """Two EDF files with tiny row groups and a case cut mid-file."""
+    rng = np.random.default_rng(3)
+    frame, tables = sorted_frame(
+        random_log(rng, n_cases=N_CASES, n_acts=N_ACTS, max_len=9))
+    tmp = tmp_path_factory.mktemp("window")
+    p1, p2 = str(tmp / "a.edf"), str(tmp / "b.edf")
+    cut = frame.nrows // 2
+    edf.write(p1, _slice(frame, 0, cut), tables, version=3,
+              row_group_rows=19)
+    edf.write(p2, _slice(frame, cut, frame.nrows), tables, version=3,
+              row_group_rows=19)
+    return frame, [p1, p2]
+
+
+def _open(paths):
+    return repro.open(paths, num_activities=N_ACTS, num_cases=N_CASES)
+
+
+def test_streaming_report_folds_then_caches(twofiles):
+    """Satellite: ScanReport's groups_folded / groups_cached counters —
+    first collect decodes everything, the second merges from cache."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    rep1 = ds.collect("dfg", engine="streaming").report
+    assert rep1.groups_folded == rep1.groups_read > 0
+    assert rep1.groups_cached == 0
+    ds_engines.clear_result_cache()       # keep the state cache warm
+    rep2 = ds.collect("dfg", engine="streaming").report
+    assert rep2.groups_read == 0 and rep2.groups_folded == 0
+    assert rep2.groups_cached == rep1.groups_folded
+    assert rep2.bytes_read == 0
+
+
+def test_result_memo_zero_reads_until_touch(twofiles, monkeypatch):
+    """Satellite: memoized CollectResults keyed by file stat signatures —
+    an untouched re-collect issues zero reads and returns the identical
+    object; touching a file forces a recompute."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    calls = {"n": 0}
+    orig = EDFReader.read_group
+
+    def counting(self, *a, **k):
+        calls["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(EDFReader, "read_group", counting)
+    a = ds.collect("dfg", engine="streaming")
+    assert calls["n"] > 0
+    before = calls["n"]
+    b = ds.collect("dfg", engine="streaming")
+    assert b is a and calls["n"] == before
+    os.utime(paths[0])                    # st_mtime_ns changes
+    c = ds.collect("dfg", engine="streaming")
+    assert c is not a
+    assert eq(a.result, c.result)
+
+
+def test_memo_disabled_by_env(twofiles, monkeypatch):
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    monkeypatch.setenv(ds_engines.RESULT_CACHE_ENV, "0")
+    a = ds.collect("dfg", engine="streaming")
+    b = ds.collect("dfg", engine="streaming")
+    assert b is not a and eq(a.result, b.result)
+
+
+def test_group_windows_bitwise_equal_scratch(twofiles):
+    """Every verb — mergeable or not — windowed by row groups matches a
+    sequential scratch fold of exactly those units."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    w = ds.window(by="groups", size=3, step=2)
+    assert len(w.bounds()) >= 3
+    dims = engine.Dims(N_ACTS, N_CASES)
+    for verb in VERBS:
+        spec = engine.kernel_spec(verb)
+        kern = spec.make(dims)
+        got = w.collect(verb)
+        units, _ = w._units(spec.columns)
+        assert got.bounds == tuple(w.bounds()) and got.by == "groups"
+        for (lo, hi), res in zip(got.bounds, got.results):
+            state, carry = kern.init()
+            for ch in _unit_chunks(units[lo:hi]):
+                if ch.nrows:
+                    state, carry = kern.update(state, carry, ch)
+            assert eq(kern.finalize(state, carry), res), (verb, lo, hi)
+
+
+def test_group_windows_reuse_cached_states(twofiles):
+    """A slide re-merges cached states: after the first windowed collect,
+    the next one over the same dataset decodes nothing."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    w = ds.window(by="groups", size=3, step=2)
+    r1 = w.collect("dfg")
+    assert r1.report is not None and r1.report.groups_folded > 0
+    r2 = ds.window(by="groups", size=4, step=3).collect("dfg")
+    assert r2.report.groups_read == 0
+    assert r2.report.groups_cached == r1.report.groups_folded
+
+
+def test_time_windows_bitwise_equal_filter_collect(twofiles):
+    """Time windows == eager filter(between)+collect, bitwise, for a
+    mergeable and an order-sensitive verb."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    wt = ds.window(by="time", size=30.0, step=15.0)
+    for verb in ("dfg", "stats"):
+        got = wt.collect(verb)
+        assert len(got.bounds) >= 3 and got.by == "time"
+        for (tlo, thi), res in zip(got.bounds, got.results):
+            ref = ds.filter(col(TIMESTAMP).between(tlo, thi)).collect(
+                verb, engine="eager").result
+            assert eq(ref, res), (verb, tlo, thi)
+    # overlapping windows shared interior-group states through the cache
+    assert wt.collect("dfg").report.groups_cached > 0
+
+
+def test_incremental_append_decodes_only_fresh_groups(twofiles):
+    """Acceptance: after appending a file, collect re-decodes only the new
+    file's groups; result stays bitwise equal to mining from scratch."""
+    _, paths = twofiles
+    for verb in VERBS:
+        spec = engine.kernel_spec(verb)
+        if spec.make(engine.Dims(N_ACTS, N_CASES)).stitch is None:
+            continue                      # order-sensitive: no cached path
+        _fresh()
+        r1 = _open(paths[:1]).collect(verb, engine="streaming")
+        old = r1.report.groups_folded
+        assert old == r1.report.groups_read > 0
+        ds_engines.clear_result_cache()
+        r2 = _open(paths).collect(verb, engine="streaming")
+        fresh = r2.report.groups_total - old
+        assert r2.report.groups_cached == old, verb
+        assert r2.report.groups_read == fresh > 0, verb
+        _fresh()
+        scratch = _open(paths).collect(verb, engine="eager")
+        assert eq(r2.result, scratch.result), verb
+
+
+def test_drift_and_conformance(twofiles):
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    wt = ds.window(by="time", size=30.0, step=15.0)
+    n = len(wt.bounds())
+    d = wt.drift()
+    assert len(d) == n and d[0] == 1.0
+    assert all(0.0 <= x <= 1.0 for x in d)
+    # a fixed reference DFG scores every window against the same footprint
+    ref = ds.dfg()
+    dref = wt.drift(reference=ref)
+    assert len(dref) == n and all(0.0 <= x <= 1.0 for x in dref)
+    for model in (ds.alpha(), ds.heuristics()):
+        cf = wt.conformance(model)
+        assert len(cf) == n and all(0.0 <= x <= 1.0 for x in cf)
+
+
+def test_windowed_collect_many(twofiles):
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    w = ds.window(by="groups", size=2, step=2)
+    cm = w.collect_many(["dfg", "case_sizes"])
+    singles = {v: w.collect(v) for v in ("dfg", "case_sizes")}
+    assert cm.bounds == singles["dfg"].bounds
+    for i in range(len(cm.bounds)):
+        for v in ("dfg", "case_sizes"):
+            assert eq(cm.results[i][v], singles[v].results[i]), (v, i)
+
+
+def test_explain_prints_state_cache_accounting(twofiles):
+    """Satellite: explain() reports groups merged-from-cache vs freshly
+    decoded, before and after the cache warms."""
+    _, paths = twofiles
+    ds = _open(paths)
+    _fresh()
+    cold = ds.explain("dfg")
+    assert "state-cache" in cold
+    probe = ds_engines.cache_probe(ds, "dfg")
+    assert probe["cached"] == 0 and probe["fresh"] == probe["units"] > 0
+    ds.collect("dfg", engine="streaming")
+    warm = ds_engines.cache_probe(ds, "dfg")
+    assert warm["cached"] == probe["units"] and warm["fresh"] == 0
+    assert "0 freshly decoded" in ds.explain("dfg")
+
+
+def test_window_argument_validation(twofiles):
+    _, paths = twofiles
+    ds = _open(paths)
+    with pytest.raises(ValueError):
+        ds.window(by="cases", size=2)
+    with pytest.raises(ValueError):
+        ds.window(by="groups", size=0)
+    with pytest.raises(ValueError):
+        ds.window(by="groups", size=2, step=-1)
+    with pytest.raises(ValueError):
+        ds.window(by="groups", size=2.5)  # units are whole row groups
+    with pytest.raises(ValueError):
+        ds.filter(repro.cases_containing(2)).window(by="groups", size=2)
+    # in-memory datasets cannot window by groups (no row groups to slide)
+    mem = repro.open(twofiles[0], num_activities=N_ACTS, num_cases=N_CASES)
+    with pytest.raises(ValueError):
+        mem.window(by="groups", size=2)
