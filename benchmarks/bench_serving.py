@@ -1,0 +1,292 @@
+"""Serving benchmark: concurrent query latency over a live-ingested log.
+
+The mining service answers every request from a snapshot-consistent view
+while an ingestor appends row groups underneath it.  This bench measures
+the cost of that concurrency:
+
+1. *static sweep* — client-thread counts (1/2/4) hammering ``collect``
+   over a frozen partition set: per-request p50/p99 and aggregate QPS;
+2. *live phase* — the same clients while an ingest thread appends the
+   second half of the log batch by batch: p50/p99 under contention plus
+   the service's optimistic-retry count;
+3. *append delta* — one more batch lands, then a re-collect: because the
+   service pins kernel capacity dims, the state cache must answer the old
+   groups (``groups_cached`` > 0, cache hits advance) and only the fresh
+   groups are decoded;
+4. *HTTP round* — the same queries through the JSON API, measuring the
+   serialization + transport overhead on top of the facade.
+
+``--smoke`` asserts the acceptance gates: the live phase sustains
+concurrent queries (every client result bitwise equal to re-mining its
+claimed snapshot), and the post-append re-collect hits the warm state
+cache.  Writes the ``BENCH_serving.json`` trajectory artifact.
+
+Standalone:  python benchmarks/bench_serving.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import tempfile
+import threading
+import time
+import urllib.request
+
+if __package__ in (None, ""):  # script mode
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header
+else:
+    from .common import emit, header
+
+import numpy as np
+
+THREAD_SWEEP = (1, 2, 4)
+VERBS = ("dfg", "activity_counts", "case_sizes")
+
+
+def _percentiles(times: list[float]) -> dict:
+    arr = np.asarray(times) * 1e6
+    return {"requests": len(times),
+            "p50_us": float(np.percentile(arr, 50)),
+            "p99_us": float(np.percentile(arr, 99)),
+            "mean_us": float(arr.mean())}
+
+
+def _case_cuts(case: np.ndarray, n_batches: int) -> list[int]:
+    bounds = np.flatnonzero(case[1:] != case[:-1]) + 1
+    per = max(1, len(bounds) // n_batches)
+    cuts = [0] + [int(bounds[i]) for i in range(per - 1, len(bounds), per)]
+    if cuts[-1] != case.size:
+        cuts.append(case.size)
+    return cuts
+
+
+def run(num_cases: int = 50_000, num_activities: int = 8, seed: int = 11,
+        num_batches: int = 8, requests_per_client: int = 6,
+        out_json: str | None = "BENCH_serving.json", smoke: bool = False):
+    import jax
+
+    import repro
+    from repro.core.eventframe import CASE, EventFrame
+    from repro.data import synthetic
+    from repro.dataset import engines as ds_engines
+    from repro.query.statecache import state_cache
+    from repro.service import Ingestor, MiningService, ServiceError, serve, \
+        to_jsonable
+    from repro.storage import edf
+
+    t0 = time.perf_counter()
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=num_activities,
+                                       seed=seed)
+    n = frame.nrows
+    emit("serving/generate", time.perf_counter() - t0,
+         f"cases={num_cases};events={n}")
+
+    def _slice(a, b):
+        return EventFrame({k: v[a:b] for k, v in frame.columns.items()},
+                          {k: v[a:b] for k, v in frame.valid.items()},
+                          frame.rows_valid()[a:b])
+
+    cuts = _case_cuts(np.asarray(frame.columns[CASE]), num_batches)
+    batches = [(cuts[i], cuts[i + 1]) for i in range(len(cuts) - 1)]
+    half = max(1, len(batches) // 2)
+
+    root = tempfile.mkdtemp()
+    bdir, pdir = os.path.join(root, "batches"), os.path.join(root, "parts")
+    os.makedirs(bdir)
+    for i, (a, b) in enumerate(batches[:half]):
+        edf.write(os.path.join(bdir, f"batch_{i:04d}.edf"), _slice(a, b),
+                  tables, version=3)
+    ing = Ingestor(pdir, bdir, partition_rows=max(n // 3, 1),
+                   row_group_rows=max(n // 40, 1), poll_interval=0.01)
+    ing.run_once()
+    # capacity pinned to the log's final case count: the spec fingerprint
+    # never moves, so per-group states cached now stay valid to the end
+    svc = MiningService(ing, case_capacity=num_cases)
+    state_cache().clear()
+    ds_engines.clear_result_cache()
+    for verb in VERBS:                          # compile + warm the cache
+        svc.collect(verb, engine="streaming")
+
+    def client(times: list, stop_at: float, results: list | None = None):
+        done = 0
+        while done < requests_per_client and time.monotonic() < stop_at:
+            verb = VERBS[done % len(VERBS)]
+            try:
+                t0 = time.perf_counter()
+                out = svc.collect(verb, engine="streaming")
+                times.append(time.perf_counter() - t0)
+                if results is not None:
+                    results.append((verb, out["snapshot"],
+                                    json.dumps(out["result"])))
+                done += 1
+            except ServiceError:
+                time.sleep(0.02)
+
+    # ---- static sweep: frozen partitions, growing client counts
+    static = []
+    for nthreads in THREAD_SWEEP:
+        times: list[float] = []
+        stop_at = time.monotonic() + 60
+        threads = [threading.Thread(target=client, args=(times, stop_at))
+                   for _ in range(nthreads)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        point = {"threads": nthreads, **_percentiles(times),
+                 "qps": len(times) / max(wall, 1e-9)}
+        static.append(point)
+        emit(f"serving/static_t{nthreads}", point["p50_us"] / 1e6,
+             f"p99_us={point['p99_us']:.0f};qps={point['qps']:.0f}")
+
+    # ---- live phase: ingest thread appends while clients query
+    def produce():
+        for i, (a, b) in enumerate(batches[half:-1], start=half):
+            edf.write(os.path.join(bdir, f"batch_{i:04d}.edf"),
+                      _slice(a, b), tables, version=3)
+            time.sleep(0.01)
+
+    live_times: list[float] = []
+    live_results: list = []
+    retries0 = svc.retries
+    producer = threading.Thread(target=produce)
+    stop_at = time.monotonic() + 120
+    clients = [threading.Thread(target=client,
+                                args=(live_times, stop_at, live_results))
+               for _ in range(max(THREAD_SWEEP))]
+    t0 = time.perf_counter()
+    producer.start()
+    ing.start()
+    for t in clients:
+        t.start()
+    for t in clients:
+        t.join()
+    producer.join()
+    while ing.run_once():                       # drain the tail
+        pass
+    ing.stop()
+    live_wall = time.perf_counter() - t0
+    live = {**_percentiles(live_times),
+            "qps": len(live_times) / max(live_wall, 1e-9),
+            "retries": svc.retries - retries0,
+            "batches_ingested": len(batches) - 1 - half}
+    emit("serving/live", live["p50_us"] / 1e6,
+         f"p99_us={live['p99_us']:.0f};qps={live['qps']:.0f};"
+         f"retries={live['retries']}")
+
+    # every live result must re-mine bitwise-equal from its claimed rows
+    checked = 0
+    for verb, claim, result_json in live_results[:8]:
+        ref = repro.open(_slice(0, claim["rows"]), tables=tables,
+                         num_cases=claim["num_cases"]).collect(
+                             verb, engine="eager")
+        assert result_json == json.dumps(to_jsonable(ref.result)), \
+            f"{verb} diverged at a {claim['rows']}-row snapshot"
+        checked += 1
+    emit("serving/live_parity", 0.0,
+         f"checked={checked}/{len(live_results)}")
+
+    # ---- append delta: one more batch, then a warm re-collect
+    sc = state_cache()
+    svc.collect("dfg", engine="streaming")      # states for current groups
+    hits0, a = sc.hits, batches[-1]
+    edf.write(os.path.join(bdir, f"batch_{len(batches) - 1:04d}.edf"),
+              _slice(a[0], a[1]), tables, version=3)
+    ing.run_once()
+    ds_engines.clear_result_cache()             # isolate the state cache
+    t0 = time.perf_counter()
+    out = svc.collect("dfg", engine="streaming")
+    us_delta = (time.perf_counter() - t0) * 1e6
+    rep = out["report"]
+    append_delta = {
+        "groups_cached": rep["groups_cached"],
+        "groups_folded": rep["groups_folded"],
+        "groups_read": rep["groups_read"],
+        "state_cache_hit_delta": sc.hits - hits0,
+        "us_recollect": us_delta,
+    }
+    emit("serving/append_delta", us_delta / 1e6,
+         f"cached={rep['groups_cached']};folded={rep['groups_folded']};"
+         f"hit_delta={append_delta['state_cache_hit_delta']}")
+    ref = repro.open(frame, tables=tables,
+                     num_cases=out["snapshot"]["num_cases"]).collect(
+                         "dfg", engine="eager")
+    assert json.dumps(out["result"]) == json.dumps(to_jsonable(ref.result)), \
+        "post-ingest service result diverged from scratch re-mine"
+
+    # ---- HTTP round: the same query through the JSON API
+    httpd = serve(svc, port=0)
+    port = httpd.server_address[1]
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    http_times = []
+    try:
+        url = f"http://127.0.0.1:{port}/collect?verb=dfg&engine=streaming"
+        for _ in range(8):
+            t0 = time.perf_counter()
+            with urllib.request.urlopen(url, timeout=60) as r:
+                assert json.loads(r.read())["ok"]
+            http_times.append(time.perf_counter() - t0)
+    finally:
+        httpd.shutdown()
+    http = _percentiles(http_times)
+    emit("serving/http", http["p50_us"] / 1e6, f"p99_us={http['p99_us']:.0f}")
+
+    if smoke:
+        assert live["requests"] > 0, "no queries completed during live ingest"
+        assert checked > 0, "no live result was parity-checked"
+        assert append_delta["groups_cached"] > 0, \
+            "post-append re-collect found no cached group states"
+        assert append_delta["state_cache_hit_delta"] > 0, \
+            "post-append re-collect never hit the warm state cache"
+        assert append_delta["groups_read"] <= rep["groups_folded"], \
+            "re-collect decoded more than the appended delta"
+
+    if out_json:
+        artifact = {
+            "bench": "serving",
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "backend": jax.default_backend(),
+            "config": {"num_cases": num_cases,
+                       "num_activities": num_activities, "events": n,
+                       "batches": len(batches),
+                       "requests_per_client": requests_per_client},
+            "static_sweep": static,
+            "live": live,
+            "append_delta": append_delta,
+            "http": http,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"serving/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return {"static": static, "live": live, "append_delta": append_delta}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small log; asserts live parity + warm cache hits")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    header()
+    if args.smoke:
+        run(num_cases=8_000, requests_per_client=4, out_json=args.out,
+            smoke=True)
+    else:
+        run(num_cases=200_000 if args.full else 50_000, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

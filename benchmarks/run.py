@@ -10,9 +10,10 @@ import traceback
 
 from . import (bench_complexity, bench_dataset, bench_discovery,
                bench_distributed_dfg, bench_fusion, bench_kernels,
-               bench_query, bench_segment_ops, bench_streaming,
-               bench_table1_loading, bench_table2_sizes, bench_table5_ops,
-               bench_table6_biglogs, bench_variants_prune, bench_window)
+               bench_query, bench_segment_ops, bench_serving,
+               bench_streaming, bench_table1_loading, bench_table2_sizes,
+               bench_table5_ops, bench_table6_biglogs, bench_variants_prune,
+               bench_window)
 from .common import header
 
 SUITES = {
@@ -61,6 +62,12 @@ SUITES = {
     "window": lambda full: bench_window.run(
         num_cases=200_000 if full else 50_000,
         out_json="BENCH_window.json"),
+    # the live mining service: concurrent query latency with and without
+    # live ingest + the post-append warm-cache delta; writes
+    # BENCH_serving.json
+    "serving": lambda full: bench_serving.run(
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_serving.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

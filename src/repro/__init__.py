@@ -31,6 +31,9 @@ _EXPORTS = {
     "case_size": ("repro.query.expr", "case_size"),
     "variant_in": ("repro.query.expr", "variant_in"),
     "variant_of": ("repro.query.expr", "variant_of"),
+    "Ingestor": ("repro.service.ingest", "Ingestor"),
+    "MiningService": ("repro.service.server", "MiningService"),
+    "serve": ("repro.service.server", "serve"),
 }
 
 __all__ = sorted(_EXPORTS)

@@ -36,7 +36,6 @@ automate.
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
 from typing import Any, Iterable, Mapping
 
 import numpy as np
@@ -107,31 +106,85 @@ class Dataset:
         raise ValueError("union() cannot mix file-backed and in-memory "
                          "datasets; write the frame to EDF first")
 
+    def append(self, frame: EventFrame, *, path: str | None = None,
+               tables: Mapping[str, list] | None = None,
+               row_group_rows: int | None = None) -> "Dataset":
+        """Append ``frame``'s rows to the dataset's last file, atomically.
+
+        The rows become new row groups of that file
+        (``storage.edf.append``): old groups' bytes — and their content
+        signatures, and therefore the group-state cache — are untouched,
+        and the header rewrite is atomic (temp file + ``os.replace``), so
+        concurrent readers see either the old snapshot or the new one,
+        never a torn mix.  The frame must match the file's schema, be
+        case-sorted, and start at/after the file's tail case (the log
+        stays (case, time)-sorted case-major across the whole set, which
+        is why only the *last* file may grow — earlier partitions are
+        sealed).  Dictionary ``tables`` may extend the file's.
+
+        Returns a dataset over the same paths (shape accessors are live,
+        so this handle sees the new rows too; the return value exists for
+        fluent chaining).  ``row_group_rows=None`` appends one group.
+        """
+        from repro.storage.edf import append as edf_append
+
+        if not self.is_files:
+            raise ValueError("append() needs a file-backed dataset; write "
+                             "the frame to EDF first")
+        target = str(path) if path is not None else self.paths[-1]
+        if target != self.paths[-1]:
+            raise ValueError(
+                f"append() only extends the last file of the set "
+                f"({self.paths[-1]!r}); earlier partitions are sealed")
+        edf_append(target, frame, tables=tables,
+                   row_group_rows=row_group_rows)
+        return dataclasses.replace(self)
+
     # ------------------------------------------------------------- shape
+    # Shape accessors are *live* properties, not cached: files can grow
+    # underneath a Dataset via :meth:`append` (this handle or another),
+    # and a collect must size its kernels for the groups it will actually
+    # scan.  The reads are header-only through pooled readers, so the
+    # recompute is cheap; pin capacities explicitly via
+    # ``repro.open(..., num_cases=N)`` when kernel-shape stability matters
+    # (the mining service does — that is what keeps its state cache warm
+    # across appends).
     @property
     def is_files(self) -> bool:
         return bool(self.paths)
 
-    @cached_property
+    @property
     def _readers(self) -> tuple:
         from repro.storage.edf import pooled_reader
 
         return tuple(pooled_reader(p) for p in self.paths)
 
-    @cached_property
+    @property
     def tables(self) -> dict:
-        """Dictionary tables (validated identical across the file set)."""
+        """Dictionary tables, merged across the file set.  Each file's
+        table must be a *prefix* of the longest one for its column —
+        appends may extend a table (old ids keep their meaning), never
+        reorder it — so partitions written before an alphabet grew stay
+        unioned with ones written after."""
         if not self.is_files:
             return dict(self.frame_tables)
-        first = self._readers[0].tables
-        for r in self._readers[1:]:
-            if r.tables != first:
-                raise ValueError(
-                    f"dataset files disagree on dictionary tables: "
-                    f"{self.paths[0]!r} vs {r.path!r}")
-        return dict(first)
+        merged: dict[str, list] = {}
+        for r in self._readers:
+            for name, table in r.tables.items():
+                cur = merged.get(name)
+                if cur is None:
+                    merged[name] = list(table)
+                    continue
+                short, long_ = sorted((cur, list(table)), key=len)
+                if long_[:len(short)] != short:
+                    raise ValueError(
+                        f"dataset files disagree on the dictionary table "
+                        f"of {name!r} (not a prefix extension): "
+                        f"{self.paths[0]!r} vs {r.path!r}")
+                merged[name] = long_
+        return merged
 
-    @cached_property
+    @property
     def schema(self) -> dict:
         """Column name -> {"dtype": ...} (from the files, or synthesized
         from the frame's arrays) — what predicate constants bind against."""
@@ -140,7 +193,7 @@ class Dataset:
         return {k: {"dtype": str(np.asarray(v).dtype)}
                 for k, v in self.frame.columns.items()}
 
-    @cached_property
+    @property
     def num_activities(self) -> int:
         if self.hint_activities is not None:
             return int(self.hint_activities)
@@ -164,7 +217,7 @@ class Dataset:
         acts = np.asarray(self.frame[ACTIVITY])
         return int(acts.max()) + 1 if acts.size else 0
 
-    @cached_property
+    @property
     def num_cases(self) -> int:
         if self.hint_cases is not None:
             return int(self.hint_cases)

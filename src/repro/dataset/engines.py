@@ -95,10 +95,22 @@ _RESULTS_LOCK = threading.Lock()
 
 
 def file_signatures(paths) -> tuple:
-    """Per-file ``(path, st_mtime_ns, st_size)`` — the invalidation unit
-    of both the result memo and the reader pool."""
-    return tuple((p, os.stat(p).st_mtime_ns, os.stat(p).st_size)
-                 for p in paths)
+    """Per-file ``(path, st_mtime_ns, st_size, header_tag, num_groups)`` —
+    the invalidation unit of both the result memo and the reader pool.
+
+    The stat pair is the cheap fast-moving part; the header content tag
+    (``storage.edf.file_sig``) plus the row-group count close the
+    pathological hole: a same-size rewrite landing within one mtime tick
+    can no longer alias the signature of the file it replaced, so a
+    memoized result can never be served for bytes that were never read.
+    """
+    from repro.storage.edf import pooled_reader
+
+    sigs = []
+    for p in paths:
+        r = pooled_reader(p)
+        sigs.append((p, *r._sig, r.num_groups))
+    return tuple(sigs)
 
 
 def _memo_key(dataset, extra) -> tuple | None:

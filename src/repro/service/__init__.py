@@ -1,0 +1,23 @@
+"""The live mining service: append-only ingestion + a concurrent query API.
+
+Three layers over the ``Dataset`` facade, closing the loop the paper
+opens (columnar event dataframes scale *analysis*; this serves it):
+
+* ``storage.edf.append`` / ``Dataset.append`` — atomic append-only
+  growth of EDFV0003 files (new row groups, header rewritten through
+  ``os.replace``; old groups byte-identical, so the per-group state
+  cache stays hot);
+* :class:`~repro.service.ingest.Ingestor` — a resilient batch ETL loop
+  tailing a source (directory or callable) into partitioned EDFV0003
+  files, with a persisted skip-index, retry-with-backoff, and
+  crash-safe resume;
+* :class:`~repro.service.server.MiningService` / :func:`serve` — a
+  threaded ``http.server`` JSON API (``/collect`` ``/profile``
+  ``/window`` ``/explain`` ``/health``) over the shared reader pool and
+  state/result caches, each request mining a snapshot-consistent view.
+"""
+from .ingest import Ingestor, directory_source
+from .server import MiningService, ServiceError, serve, to_jsonable
+
+__all__ = ["Ingestor", "directory_source", "MiningService", "ServiceError",
+           "serve", "to_jsonable"]

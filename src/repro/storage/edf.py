@@ -48,16 +48,35 @@ EDF file uniformly.  ``read`` loads any version whole; ``read_streaming`` /
 ``read_group`` are the chunk sources for
 ``repro.core.chunked.ChunkedEventFrame``; :class:`EDFReader` is the cached
 random-access view the query planner uses.
+
+**Append-only growth** (:func:`append`): new rows become new row groups at
+the end of the data region; the header — the only part of the file that
+references them — is rewritten through a temp file + ``os.replace``, so a
+concurrent reader sees either the old file or the new one, never a torn
+mix, and a reader holding an open handle keeps a consistent snapshot of
+the version it opened.  The old groups' bytes are copied verbatim, so
+their content signatures (:meth:`EDFReader.group_signature`) — and with
+them every cached per-group fold in ``repro.query.statecache`` — survive
+the append untouched.
+
+Every written header leads with a ``stamp``: a content hash of the rest
+of the header, placed first so :func:`header_tag` can read it from the
+file's first bytes without parsing the (possibly large) header JSON.
+``(st_mtime_ns, st_size, stamp)`` — :func:`file_sig` — is the staleness
+signature the reader pool and the result memo key on: a rewrite that
+lands within one mtime tick at the same size still changes the stamp.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import shutil
 import struct
 import threading
 import zlib
 from collections import OrderedDict
+from contextlib import contextmanager
 from typing import Iterable, Mapping
 
 import numpy as np
@@ -111,6 +130,66 @@ def _json_safe(obj):
     if isinstance(obj, (bool, int, float, str)) or obj is None:
         return obj
     return str(obj)
+
+
+def _stamp_header(header: dict) -> bytes:
+    """Serialize a header with a leading content ``stamp`` key.
+
+    The stamp hashes the canonical header content and is emitted as the
+    *first* key of the JSON object, so :func:`header_tag` can recover it
+    from the first few dozen bytes of the file without parsing a
+    possibly-megabyte header.
+    """
+    body = {k: v for k, v in header.items() if k != "stamp"}
+    blob = json.dumps(_json_safe(body), sort_keys=True).encode()
+    stamp = hashlib.sha1(blob).hexdigest()[:16]
+    return json.dumps({"stamp": stamp, **body}).encode()
+
+
+_TAG_NEEDLE = b'{"stamp": "'
+
+
+def header_tag(path: str) -> str:
+    """Content tag of a file's header — O(1) bytes for stamped files.
+
+    Every file this module writes leads its header with a ``stamp`` key
+    (see :func:`_stamp_header`), recovered here from the file's first
+    bytes.  Files from other producers fall back to hashing up to 64 KiB
+    of the header itself — still content-sensitive, just not O(1).
+    """
+    with open(path, "rb") as f:
+        head = f.read(12 + 64)
+        if len(head) < 12 or head[:8] not in (MAGIC, MAGIC_V2, MAGIC_V3):
+            raise ValueError(f"{path!r} is not an EDF file")
+        (hlen,) = struct.unpack("<I", head[8:12])
+        body = head[12:12 + min(hlen, 64)]
+        if body.startswith(_TAG_NEEDLE):
+            end = body.find(b'"', len(_TAG_NEEDLE))
+            if end > 0:
+                return body[len(_TAG_NEEDLE):end].decode()
+        f.seek(12)
+        return hashlib.sha1(f.read(min(hlen, 65536))).hexdigest()[:16]
+
+
+def file_sig(path: str) -> tuple[int, int, str]:
+    """Staleness signature ``(st_mtime_ns, st_size, header_tag)``.
+
+    The stat pair catches ordinary rewrites cheaply; the header tag
+    catches the pathological one — a same-size rewrite landing within a
+    single mtime tick — so a cached reader (or a memoized result keyed on
+    this signature) can never serve bytes from a file it didn't read.
+    """
+    st = os.stat(path)
+    return (st.st_mtime_ns, st.st_size, header_tag(path))
+
+
+class StaleFileError(ValueError):
+    """An EDF file changed on disk under a cached-header reader.
+
+    Subclasses ``ValueError`` so existing callers that guarded the stat
+    check keep working; the mining service catches this specifically to
+    re-resolve its snapshot and retry.
+    """
 
 
 def _group_aux(data: Mapping[str, np.ndarray], valid: Mapping[str, np.ndarray],
@@ -182,7 +261,7 @@ def _write_v1(path: str, frame: EventFrame, tables, codec: str) -> dict:
             offset += len(enc)
         cols.append(meta)
     header = {"nrows": frame.nrows, "columns": cols}
-    hjson = json.dumps(header).encode()
+    hjson = _stamp_header(header)
     with open(path, "wb") as f:
         f.write(MAGIC)
         f.write(struct.pack("<I", len(hjson)))
@@ -232,9 +311,29 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
             meta["has_valid"] = True
         schema.append(meta)
 
+    groups, blobs = _encode_groups(data, valid, tables, bounds, step, nrows,
+                                   codec, version)
+
+    header = {"version": version, "nrows": nrows, "codec": codec,
+              "columns": schema, "groups": groups}
+    hjson = _stamp_header(header)
+    with open(path, "wb") as f:
+        f.write(MAGIC_V3 if version >= 3 else MAGIC_V2)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+    return header
+
+
+def _encode_groups(data, valid, tables, bounds, step, nrows, codec, version,
+                   offset: int = 0):
+    """Encode rows ``[lo, lo+step)`` per bound into row-group metadata +
+    blobs.  Shared between :func:`write` (``offset=0``) and :func:`append`
+    (``offset`` = current data-region size, so the new groups' extents
+    continue where the file ends)."""
     groups = []
     blobs = []
-    offset = 0
     for lo in bounds:
         hi = min(lo + step, nrows)
         gcols = {}
@@ -255,16 +354,137 @@ def write(path: str, frame: EventFrame, tables: Mapping[str, list] | None = None
         if version >= 3:
             group.update(_group_aux(data, valid, tables, lo, hi))
         groups.append(group)
+    return groups, blobs
 
-    header = {"version": version, "nrows": nrows, "codec": codec,
-              "columns": schema, "groups": groups}
-    hjson = json.dumps(header).encode()
-    with open(path, "wb") as f:
-        f.write(MAGIC_V3 if version >= 3 else MAGIC_V2)
-        f.write(struct.pack("<I", len(hjson)))
-        f.write(hjson)
-        for b in blobs:
-            f.write(b)
+
+# ----------------------------------------------------------------- append
+_APPEND_LOCKS: dict[str, threading.Lock] = {}
+_APPEND_LOCKS_GUARD = threading.Lock()
+
+
+def _append_lock(path: str) -> threading.Lock:
+    key = os.path.abspath(path)
+    with _APPEND_LOCKS_GUARD:
+        lock = _APPEND_LOCKS.get(key)
+        if lock is None:
+            lock = _APPEND_LOCKS[key] = threading.Lock()
+        return lock
+
+
+def append(path: str, frame: EventFrame,
+           tables: Mapping[str, list] | None = None,
+           row_group_rows: int | None = None) -> dict:
+    """Append ``frame``'s rows to an existing v2/v3 EDF file, atomically.
+
+    The new rows become new row groups at the end of the data region;
+    the rewritten header (with extended zone maps / segment counts / tail
+    halos / sketch bands for the fresh groups) goes through a temp file +
+    ``os.replace``, so a concurrent reader observes either the old file or
+    the new one — never a torn mix — and a reader holding an open handle
+    keeps reading its consistent pre-append snapshot via the old inode.
+    Old groups are copied verbatim: their content signatures
+    (:meth:`EDFReader.group_signature`), and therefore every cached
+    per-group fold, stay valid.
+
+    Constraints enforced:
+
+    * the frame's schema (column names, dtypes, validity flags) must match
+      the file's;
+    * dictionary ``tables`` may only *extend* the file's (old ids keep
+      their meaning; pass the merged tables when the alphabet grew);
+    * the file stays (case, time)-sorted case-major: the appended frame
+      must be case-sorted and start at/after the file's tail case.
+
+    ``row_group_rows=None`` writes the whole frame as one new group.
+    Returns the new header.  Thread-safe per path within this process;
+    cross-process writers need external coordination.
+    """
+    with _append_lock(path):
+        return _append_locked(path, frame, tables, row_group_rows)
+
+
+def _append_locked(path, frame, tables, row_group_rows):
+    header, base = read_header(path)
+    version = header["version"]
+    if version < 2:
+        raise ValueError(
+            f"append needs the row-group layout (EDFV0002+); {path!r} is v1")
+    if frame.nrows == 0:
+        return header
+    codec = header.get("codec", "raw")
+    old_tables = _tables_from_schema(header)
+    schema = {c["name"]: c for c in header["columns"]}
+    tables = dict(tables) if tables is not None else dict(old_tables)
+
+    data = {k: np.ascontiguousarray(v) for k, v in frame.to_numpy().items()}
+    valid = {k: np.asarray(v) for k, v in frame.valid.items()}
+
+    if set(data) != set(schema):
+        raise ValueError(
+            f"appended frame columns {sorted(data)} != file schema "
+            f"{sorted(schema)}")
+    for name, meta in schema.items():
+        if str(data[name].dtype) != meta["dtype"]:
+            raise ValueError(
+                f"column {name!r}: appended dtype {data[name].dtype} != "
+                f"file dtype {meta['dtype']}")
+        if bool(meta.get("has_valid")) != (name in valid):
+            raise ValueError(
+                f"column {name!r}: validity flags must match the file")
+    for name, old in old_tables.items():
+        new = list(tables.get(name, old))
+        if new[:len(old)] != list(old):
+            raise ValueError(
+                f"column {name!r}: dictionary table may only extend the "
+                "file's (old ids must keep their meaning)")
+        if len(new) > len(old):
+            schema[name]["table"] = new
+        tables[name] = new
+
+    if CASE in data:
+        case = data[CASE]
+        if case.size > 1 and bool(np.any(case[1:] < case[:-1])):
+            raise ValueError("appended frame must be case-sorted "
+                             "(case-major, like the file)")
+        tail = (header["groups"][-1].get("tail") or {}).get("values", {}) \
+            if header["groups"] else {}
+        if CASE in tail and case.size and case[0] < tail[CASE]:
+            raise ValueError(
+                f"appended rows start at case {int(case[0])} < the file's "
+                f"tail case {int(tail[CASE])}; appends must not reopen "
+                "earlier cases")
+
+    nrows = frame.nrows
+    if row_group_rows is not None and int(row_group_rows) <= 0:
+        raise ValueError("row_group_rows must be positive")
+    step = nrows if row_group_rows is None else int(row_group_rows)
+    data_size = os.path.getsize(path) - base
+    groups, blobs = _encode_groups(data, valid, tables,
+                                   list(range(0, nrows, step)), step, nrows,
+                                   codec, version, offset=data_size)
+    header["groups"] = list(header["groups"]) + groups
+    header["nrows"] = int(header["nrows"]) + nrows
+    hjson = _stamp_header(header)
+
+    tmp = f"{path}.append.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "wb") as out, open(path, "rb") as src:
+            out.write(MAGIC_V3 if version >= 3 else MAGIC_V2)
+            out.write(struct.pack("<I", len(hjson)))
+            out.write(hjson)
+            src.seek(base)
+            shutil.copyfileobj(src, out, 1 << 20)   # old groups, verbatim
+            for b in blobs:
+                out.write(b)
+            out.flush()
+            os.fsync(out.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
     return header
 
 
@@ -482,17 +702,25 @@ class EDFReader:
         self._gsig: dict[int, str] = {}         # per-group content signatures
         self._file = None                       # persistent handle (lazy)
         self._io_lock = threading.Lock()        # seek/read pairs are shared
-        st = os.stat(path)
-        self._sig = (st.st_mtime_ns, st.st_size)
+        self._pins = 0                          # pin() snapshot holds
+        self._close_deferred = False            # close() arrived while pinned
+        # sig must describe the header actually cached above: if an append
+        # raced between the header read and the sig read, take it again
+        # (the pool would otherwise evict this reader on first revalidation)
+        sig = file_sig(path)
+        if sig[2] != self.header.get("stamp", sig[2]):
+            self.header, self.base = read_header(path)
+            sig = file_sig(path)
+        self._sig = sig
 
     # --------------------------------------------------------- file handle
     def _check_sig(self) -> None:
-        """Re-stat before touching bytes with no open handle: decoding a
-        rewritten file against the cached header would return garbage, so
-        it fails loudly instead."""
-        st = os.stat(self.path)
-        if (st.st_mtime_ns, st.st_size) != self._sig:
-            raise ValueError(
+        """Re-validate before touching bytes with no open handle: decoding
+        a rewritten file against the cached header would return garbage, so
+        it fails loudly instead.  The check is content-aware
+        (:func:`file_sig`), so even a same-stat rewrite is caught."""
+        if file_sig(self.path) != self._sig:
+            raise StaleFileError(
                 f"{self.path!r} changed on disk since this reader cached "
                 f"its header; get a fresh reader via pooled_reader()")
 
@@ -511,10 +739,40 @@ class EDFReader:
 
     def close(self) -> None:
         """Release the file handle. The reader stays usable: the next read
-        reopens the handle (the header is already cached)."""
+        reopens the handle (the header is already cached).  While a
+        :meth:`pin` is active the close is deferred to the last unpin —
+        pool eviction must never yank a pinned snapshot's handle."""
         with self._io_lock:             # never yank the handle mid-read
+            if self._pins > 0:
+                self._close_deferred = True
+                return
             if self._file is not None and not self._file.closed:
                 self._file.close()
+
+    @contextmanager
+    def pin(self):
+        """Hold this reader's snapshot open for the duration of a request.
+
+        Opens the persistent handle eagerly (raising
+        :class:`StaleFileError` now rather than mid-scan if the file
+        already changed) and defers any ``close()`` — including
+        :class:`ReaderPool` eviction — until the last pin is released.
+        Because :func:`append` replaces the *path*, never the inode, a
+        pinned reader keeps reading its consistent pre-append snapshot
+        even while appends land.
+        """
+        with self._io_lock:
+            self._fh()                  # validate + open before pinning
+            self._pins += 1
+        try:
+            yield self
+        finally:
+            with self._io_lock:
+                self._pins -= 1
+                if self._pins == 0 and self._close_deferred:
+                    self._close_deferred = False
+                    if self._file is not None and not self._file.closed:
+                        self._file.close()
 
     def __enter__(self) -> "EDFReader":
         return self
@@ -662,11 +920,14 @@ class ReaderPool:
     A multi-file dataset compiles one plan per file and may re-iterate each
     pruned scan several times (phase-one passes, benchmarks, dashboards); the
     pool gives all of them the *same* cached-header reader per file — one
-    header parse, one v1/v2 metadata synthesis, one open handle.  Entries are
-    validated against the file's (mtime, size) on every ``get``, so a file
-    rewritten in place is picked up fresh; least-recently-used readers beyond
-    ``capacity`` are closed (not invalidated — a plan still holding an
-    evicted reader keeps working because :meth:`EDFReader._fh` reopens).
+    header parse, one v1/v2 metadata synthesis, one open handle.  Entries
+    are validated against :func:`file_sig` — ``(mtime_ns, size, header
+    tag)`` — on every ``get``, so a file rewritten in place (including an
+    :func:`append`, and even a same-stat rewrite) is picked up fresh;
+    least-recently-used readers beyond ``capacity`` are closed (not
+    invalidated — a plan still holding an evicted reader keeps working
+    because :meth:`EDFReader._fh` reopens; a *pinned* reader defers the
+    close until its request finishes).
     """
 
     def __init__(self, capacity: int = 16):
@@ -678,8 +939,7 @@ class ReaderPool:
 
     def get(self, path: str) -> EDFReader:
         key = os.path.abspath(path)
-        st = os.stat(key)
-        sig = (st.st_mtime_ns, st.st_size)
+        sig = file_sig(key)
         evicted = []
         with self._lock:
             reader = self._readers.get(key)
