@@ -1,0 +1,227 @@
+"""Graph-query benchmark: semiring closures vs host NumPy Floyd–Warshall.
+
+Sweeps dense random process graphs over (size, density) and times the
+repeated-squaring device closures (``ceil(log2 n)`` jitted semiring
+matmuls) against the n-sweep NumPy Floyd–Warshall on the host:
+
+* ``reach``    — boolean transitive closure (thresholded MXU matmuls)
+* ``widest``   — max-min bottleneck capacities
+* ``shortest`` — min-plus distances (integer edge weights: exact)
+
+Every configuration asserts the device result is *exactly* the host FW
+result (boolean/tropical candidates are computed identically op for op;
+integer-valued sums stay exact below 2^24).
+
+The dense case times reachability against the standard float32 FW
+relaxation (same operand layout as the kernels) and — for honesty on
+CPU — against the bitset-optimized boolean FW, which trades the float
+matrix for byte-wide AND/OR and is bandwidth-bound rather than
+FLOP-bound.  ``--smoke`` asserts speedup >= 1 on the float32 baseline;
+the matmul closure does ``log2(n)`` products of n^3 MACs, so it only
+wins where the matmul unit (BLAS on CPU, the MXU on TPU) buys more than
+the log-factor — which is exactly what the sweep shows.  A mined
+end-to-end section times the ``graph`` / ``bottleneck_paths`` verbs on
+a synthetic log.  Writes the ``BENCH_graph.json`` trajectory artifact.
+
+Standalone:  python benchmarks/bench_graph.py [--smoke | --full]
+Harness:     PYTHONPATH=src python -m benchmarks.run --only graph
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_graph.py
+    _here = os.path.dirname(os.path.abspath(__file__))
+    sys.path.insert(0, _here)
+    sys.path.insert(0, os.path.join(_here, "..", "src"))
+    from common import emit, header, timeit
+else:
+    from .common import emit, header, timeit
+
+import numpy as np
+
+
+# ------------------------------------------------- host FW oracles
+def _fw_bool(adj: np.ndarray) -> np.ndarray:
+    """Bitset-optimized boolean FW (byte-wide AND/OR; the host's best)."""
+    r = adj | np.eye(adj.shape[0], dtype=bool)
+    for k in range(adj.shape[0]):
+        r |= r[:, k, None] & r[None, k, :]
+    return r
+
+
+def _fw_bool_f32(adj: np.ndarray) -> np.ndarray:
+    """Standard float32 FW transitive closure (max-min over {0, 1})."""
+    d = adj.astype(np.float32)
+    np.fill_diagonal(d, 1.0)
+    for k in range(adj.shape[0]):
+        d = np.maximum(d, np.minimum(d[:, k, None], d[None, k, :]))
+    return d > 0
+
+
+def _fw_widest(cap: np.ndarray) -> np.ndarray:
+    d = np.where(np.eye(cap.shape[0], dtype=bool), np.inf, cap)
+    d = d.astype(np.float32)
+    for k in range(cap.shape[0]):
+        d = np.maximum(d, np.minimum(d[:, k, None], d[None, k, :]))
+    return d
+
+
+def _fw_shortest(w: np.ndarray) -> np.ndarray:
+    d = np.where(np.eye(w.shape[0], dtype=bool), 0.0, w).astype(np.float32)
+    for k in range(w.shape[0]):
+        d = np.minimum(d, d[:, k, None] + d[None, k, :])
+    return d
+
+
+def _random_graph(n: int, density: float, seed: int):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < density
+    np.fill_diagonal(adj, False)
+    freq = np.where(adj, rng.integers(1, 1000, (n, n)), 0).astype(np.float32)
+    cap = np.where(adj, freq, -np.inf).astype(np.float32)
+    cost = np.where(adj, freq, np.inf).astype(np.float32)
+    return adj, cap, cost
+
+
+def run(sizes=((48, 0.25), (128, 0.25), (256, 0.5)),
+        dense=(384, 0.5), num_cases: int = 50_000,
+        assert_speedup: bool = False,
+        out_json: str | None = "BENCH_graph.json"):
+    import jax
+
+    from repro.kernels.graph_ops import (bool_closure, maxmin_closure,
+                                         minplus_closure)
+
+    jit_reach = jax.jit(lambda a: bool_closure(a))
+    jit_widest = jax.jit(lambda c: maxmin_closure(c))
+    jit_shortest = jax.jit(lambda c: minplus_closure(c))
+
+    results: dict = {"sweep": []}
+
+    for n, density in sizes:
+        adj, cap, cost = _random_graph(n, density, seed=n)
+        tag = f"n{n}_d{density:g}"
+
+        t_reach = timeit(lambda: jax.block_until_ready(jit_reach(adj)))
+        t_fw_reach = timeit(lambda: _fw_bool(adj))
+        assert np.array_equal(np.asarray(jit_reach(adj)), _fw_bool(adj)), \
+            f"reach parity {tag}"
+
+        t_wide = timeit(lambda: jax.block_until_ready(jit_widest(cap)))
+        t_fw_wide = timeit(lambda: _fw_widest(cap))
+        assert np.array_equal(np.asarray(jit_widest(cap)),
+                              _fw_widest(cap)), f"widest parity {tag}"
+
+        t_short = timeit(lambda: jax.block_until_ready(jit_shortest(cost)))
+        t_fw_short = timeit(lambda: _fw_shortest(cost))
+        assert np.array_equal(np.asarray(jit_shortest(cost)),
+                              _fw_shortest(cost)), f"shortest parity {tag}"
+
+        speedups = {"reach": t_fw_reach / t_reach,
+                    "widest": t_fw_wide / t_wide,
+                    "shortest": t_fw_short / t_short}
+        emit(f"graph/reach_{tag}", t_reach,
+             f"fw={t_fw_reach*1e6:.1f}us;speedup={speedups['reach']:.2f}x")
+        emit(f"graph/widest_{tag}", t_wide,
+             f"fw={t_fw_wide*1e6:.1f}us;speedup={speedups['widest']:.2f}x")
+        emit(f"graph/shortest_{tag}", t_short,
+             f"fw={t_fw_short*1e6:.1f}us;speedup={speedups['shortest']:.2f}x")
+        results["sweep"].append({
+            "n": n, "density": density,
+            "device_us": {"reach": t_reach * 1e6, "widest": t_wide * 1e6,
+                          "shortest": t_short * 1e6},
+            "host_fw_us": {"reach": t_fw_reach * 1e6,
+                           "widest": t_fw_wide * 1e6,
+                           "shortest": t_fw_short * 1e6},
+            "speedup": speedups, "parity": "bitwise"})
+
+    # ---- dense case: reachability closure vs standard f32 FW
+    n, density = dense
+    adj, _, _ = _random_graph(n, density, seed=n)
+    t_reach = timeit(lambda: jax.block_until_ready(jit_reach(adj)))
+    t_fw_f32 = timeit(lambda: _fw_bool_f32(adj))
+    t_fw_bits = timeit(lambda: _fw_bool(adj))
+    assert np.array_equal(np.asarray(jit_reach(adj)), _fw_bool_f32(adj)), \
+        "dense reach parity"
+    speedup = t_fw_f32 / t_reach
+    emit(f"graph/dense_reach_n{n}", t_reach,
+         f"fw_f32={t_fw_f32*1e6:.1f}us;fw_bitset={t_fw_bits*1e6:.1f}us"
+         f";speedup={speedup:.2f}x")
+    results["dense_case"] = {
+        "n": n, "density": density, "device_us": t_reach * 1e6,
+        "host_fw_f32_us": t_fw_f32 * 1e6,
+        "host_fw_bitset_us": t_fw_bits * 1e6,
+        "speedup_vs_f32_fw": speedup, "parity": "bitwise"}
+    if assert_speedup:
+        assert speedup >= 1.0, \
+            f"dense case: closure slower than host f32 FW ({speedup:.2f}x)"
+
+    # ---- mined end-to-end: log -> one DFG fold -> graph verbs
+    import repro
+    from repro.core import ops
+    from repro.core.eventframe import CASE, TIMESTAMP
+    from repro.data import synthetic
+
+    frame, tables = synthetic.generate(num_cases=num_cases,
+                                       num_activities=24, seed=11)
+    frame = ops.sort(frame, (TIMESTAMP, CASE))
+    ds = repro.open(frame, tables=tables)
+    nev = frame.nrows
+
+    t_graph = timeit(lambda: jax.block_until_ready(ds.graph().freq))
+    emit("graph/verb_compile", t_graph,
+         f"events={nev};events_per_s={nev/t_graph:.0f}")
+    results["verb_compile"] = {"us_per_call": t_graph * 1e6,
+                               "events_per_s": nev / t_graph}
+
+    t_bott = timeit(lambda: jax.block_until_ready(ds.bottlenecks().widest))
+    bp = ds.bottlenecks()
+    emit("graph/verb_bottlenecks", t_bott,
+         f"bottleneck={bp.bottleneck:g};hops={len(bp.path)}")
+    results["verb_bottlenecks"] = {"us_per_call": t_bott * 1e6,
+                                   "bottleneck": bp.bottleneck,
+                                   "path_len": len(bp.path)}
+    assert bp.bottleneck > 0 and bp.path, "mined log has an end-to-end path"
+
+    if out_json:
+        artifact = {
+            "bench": "graph",
+            "num_cases": num_cases,
+            "n_events": nev,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "results": results,
+        }
+        with open(out_json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"graph/ARTIFACT,0.0,wrote={out_json}", flush=True)
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep; asserts dense-case speedup >= 1")
+    ap.add_argument("--full", action="store_true",
+                    help="larger sweep (512-node dense case)")
+    ap.add_argument("--out", default="BENCH_graph.json")
+    args = ap.parse_args(argv)
+    if args.full:
+        sizes = ((48, 0.25), (128, 0.25), (256, 0.5))
+        dense, cases = (512, 0.5), 200_000
+    else:
+        sizes = ((48, 0.25), (128, 0.25), (256, 0.5))
+        dense, cases = (384, 0.5), 20_000 if args.smoke else 50_000
+    header()
+    run(sizes=sizes, dense=dense, num_cases=cases,
+        assert_speedup=args.smoke, out_json=args.out)
+
+
+if __name__ == "__main__":
+    main()

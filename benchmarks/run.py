@@ -9,8 +9,8 @@ import sys
 import traceback
 
 from . import (bench_complexity, bench_dataset, bench_discovery,
-               bench_distributed_dfg, bench_fusion, bench_kernels,
-               bench_query, bench_segment_ops, bench_serving,
+               bench_distributed_dfg, bench_fusion, bench_graph,
+               bench_kernels, bench_query, bench_segment_ops, bench_serving,
                bench_streaming, bench_table1_loading, bench_table2_sizes,
                bench_table5_ops, bench_table6_biglogs, bench_variants_prune,
                bench_window)
@@ -68,6 +68,12 @@ SUITES = {
     "serving": lambda full: bench_serving.run(
         num_cases=200_000 if full else 50_000,
         out_json="BENCH_serving.json"),
+    # semiring closures vs host NumPy Floyd–Warshall + the mined graph
+    # verbs; writes BENCH_graph.json
+    "graph": lambda full: bench_graph.run(
+        dense=(512, 0.5) if full else (384, 0.5),
+        num_cases=200_000 if full else 50_000,
+        out_json="BENCH_graph.json"),
     "distributed": lambda full: bench_distributed_dfg.run(),
     "streaming": lambda full: bench_streaming.run(
         num_cases=2_000_000 if full else 100_000),

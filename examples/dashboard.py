@@ -162,6 +162,25 @@ def main():
         print(f"  groups [{lo:2d},{hi:2d})  drift {drift_w:5.3f} {bar:<20s}"
               f" busiest edge x{busiest}")
 
+    # the bottleneck panel: compile the year's merged DFG state into the
+    # weighted process graph and ask for its widest start -> end corridor
+    # (max-min semiring closure over the frequency weights) — the path
+    # every throughput fix has to widen, and the edge that throttles it
+    t0 = time.time()
+    g = ds.graph()
+    bp = ds.bottlenecks()
+    dt = (time.time() - t0) * 1e3
+    labels = g.node_labels()
+    freq = np.asarray(g.freq)
+    print(f"\nbottleneck corridor ({g.num_nodes}-node graph, {dt:.1f} ms):")
+    hops = list(zip(bp.path[:-1], bp.path[1:]))
+    print("  " + " -> ".join(labels[i] for i in bp.path))
+    print("  edge flows: " +
+          ", ".join(f"{labels[a]}->{labels[b]} x{freq[a, b]}"
+                    for a, b in hops))
+    print(f"  throttled at x{bp.bottleneck:.0f} "
+          f"(rarest edge on the widest start->end path)")
+
     print("\nexplain (the fused landing-page plan):")
     print(ds.explain(verbs=["dfg", "stats", "performance_dfg", "alpha"]))
 

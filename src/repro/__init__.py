@@ -34,6 +34,13 @@ _EXPORTS = {
     "Ingestor": ("repro.service.ingest", "Ingestor"),
     "MiningService": ("repro.service.server", "MiningService"),
     "serve": ("repro.service.server", "serve"),
+    "ProcessGraph": ("repro.graph", "ProcessGraph"),
+    "compile_graph": ("repro.graph", "compile_graph"),
+    "alpha_to_pnml": ("repro.graph", "alpha_to_pnml"),
+    "heuristics_to_dot": ("repro.graph", "heuristics_to_dot"),
+    "discover_process_tree": ("repro.graph", "discover_process_tree"),
+    "dfg_to_json": ("repro.graph", "dfg_to_json"),
+    "dfg_from_json": ("repro.graph", "dfg_from_json"),
 }
 
 __all__ = sorted(_EXPORTS)

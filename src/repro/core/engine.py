@@ -152,22 +152,32 @@ def register_kernel(spec: KernelSpec) -> KernelSpec:
     return spec
 
 
-def kernel_spec(name: str) -> KernelSpec:
-    """Look up a registered verb by name (KeyError lists what exists)."""
+def _load_standard_specs() -> None:
     # algorithm modules register their specs at import time; make sure the
     # standard set is loaded before deciding a name is unknown
+    from . import dfg, discovery, performance, stats, variants  # noqa: F401
+    from repro.graph import verbs  # noqa: F401
+
+
+def kernel_spec(name: str) -> KernelSpec:
+    """Look up a registered verb by name (KeyError lists what exists and
+    suggests close matches for typos)."""
     if name not in _KERNEL_SPECS:
-        from . import dfg, discovery, performance, stats, variants  # noqa: F401
+        _load_standard_specs()
     try:
         return _KERNEL_SPECS[name]
     except KeyError:
-        raise KeyError(f"no kernel spec named {name!r}; registered: "
+        import difflib
+
+        close = difflib.get_close_matches(name, _KERNEL_SPECS, n=3)
+        hint = f" (did you mean {' / '.join(map(repr, close))}?)" if close else ""
+        raise KeyError(f"no kernel spec named {name!r}{hint}; registered: "
                        f"{sorted(_KERNEL_SPECS)}") from None
 
 
 def kernel_specs() -> dict[str, KernelSpec]:
     """Snapshot of the registry (import the core modules to populate it)."""
-    from . import dfg, discovery, performance, stats, variants  # noqa: F401
+    _load_standard_specs()
     return dict(_KERNEL_SPECS)
 
 

@@ -291,6 +291,12 @@ class Dataset:
         est = engines.estimate(self) if self.is_files else None
         choice = engines.choose(self, spec, est)
         lines = [self.describe(), f"  engine {choice} (auto)"]
+        if verb in ("graph", "reachability", "bottleneck_paths",
+                    "node_centrality") and verbs is None:
+            n = self.num_activities + 2
+            lines.append(f"  graph query: semiring closure over the "
+                         f"({n}, {n}) compiled ProcessGraph — finalize of "
+                         f"the merged dfg state, not a second scan")
         if est is not None:
             cal = engines.calibration()
             lines.append(f"  estimate {est.bytes_est}/{est.bytes_total} "
@@ -425,6 +431,59 @@ class Dataset:
         """Heuristics miner (dependency graph + AND/XOR bindings)."""
         return self.collect("heuristics", engine=engine, method=method,
                             **thresholds).result
+
+    # ------------------------------------------------------- graph verbs
+    def _activity_labels(self):
+        try:
+            tables = self.tables
+        except Exception:
+            return None
+        lab = tables.get(ACTIVITY)
+        if lab is not None and len(lab) == self.num_activities:
+            return lab
+        return None
+
+    def graph(self, *, engine: str = "auto", timed: bool = False,
+              method: str = "auto", **kw):
+        """Compile the dataset's DFG state into a
+        :class:`~repro.graph.ir.ProcessGraph` — dense weighted adjacency
+        over the activity alphabet plus artificial start (``▶``) / end
+        (``■``) nodes.  ``timed=True`` overlays mean waiting times per
+        edge (streaming/eager only: f32 waits are order-sensitive).
+        Activity labels from the dictionary tables are attached when
+        available."""
+        g = self.collect("graph", engine=engine, timed=timed,
+                         method=method, **kw).result
+        lab = self._activity_labels()
+        return g if lab is None else g.with_labels(lab)
+
+    def reachability(self, k: int | None = None, *, engine: str = "auto",
+                     **kw):
+        """k-step reachability closure of the process graph (``k=None`` =
+        full transitive closure); exact and bitwise engine-invariant."""
+        return self.collect("reachability", engine=engine, k=k, **kw).result
+
+    def bottlenecks(self, weights: str = "frequency", *,
+                    engine: str = "auto", **kw):
+        """All-pairs shortest (min-plus) + widest (max-min) paths over the
+        process graph, plus the source→sink bottleneck corridor.
+        ``weights="performance"`` uses mean waiting times (streaming/eager
+        only)."""
+        return self.collect("bottleneck_paths", engine=engine,
+                            weights=weights, **kw).result
+
+    def centrality(self, iters: int = 16, *, engine: str = "auto", **kw):
+        """Per-node in/out degree + power-method flow centrality."""
+        return self.collect("node_centrality", engine=engine, iters=iters,
+                            **kw).result
+
+    def to_xes(self, path: str) -> None:
+        """Export the filtered events as XES (ISO-8601 timestamps;
+        dictionary columns decoded through the string tables).  Re-imported
+        and re-mined, the XES reproduces this dataset's DFG state bitwise."""
+        from repro.graph.export import frame_to_xes
+
+        frame_to_xes(path, self.to_frame(), self.tables)
 
     def conformance(self, model, *, engine: str = "auto",
                     method: str = "auto", **kw):

@@ -1,0 +1,119 @@
+"""The ``ProcessGraph`` IR: mined state compiled into one dense graph.
+
+Every mergeable DFG-backed state this repo accumulates (``core.dfg.DFG``,
+``core.discovery.DiscoveryState``, a performance overlay) compiles into
+the same intermediate representation: a dense weighted adjacency over the
+dictionary-encoded activity alphabet **plus two artificial nodes** —
+
+* node ``A``     — the artificial source ``▶`` (edges ``▶ -> a`` weighted
+  by the start-activity histogram);
+* node ``A + 1`` — the artificial sink ``■`` (edges ``a -> ■`` weighted by
+  the end-activity histogram).
+
+The artificial nodes turn per-activity start/end histograms into ordinary
+edges, so "from process start" / "to process end" questions are plain
+(source, sink) entries of the all-pairs query answers in
+``repro.graph.queries``.  Frequencies are the exact int32 counts of the
+underlying state — compiling is a pure reshaping of already-merged state,
+so a graph built from eager / streamed / psum-merged / window-merged state
+is bitwise identical whenever the states are.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dfg import DFG
+
+START_LABEL = "▶"
+END_LABEL = "■"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessGraph:
+    """Dense process graph over ``num_activities + 2`` nodes.
+
+    ``freq[i, j]`` is the exact directly-follows count (start/end
+    histogram counts on the artificial rows/columns); ``perf`` — present
+    only when compiled with a performance overlay — is the mean waiting
+    time per edge (0 on artificial edges: the source/sink are
+    instantaneous bookkeeping).  ``labels`` is attached by the facade
+    (kernels never see dictionary tables) and excluded from parity
+    comparisons by construction: engines produce ``labels=None``.
+    """
+
+    freq: jax.Array                      # (N, N) int32
+    num_activities: int
+    perf: jax.Array | None = None        # (N, N) float32 mean waits
+    labels: tuple[str, ...] | None = None
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_activities + 2
+
+    @property
+    def source(self) -> int:
+        return self.num_activities
+
+    @property
+    def sink(self) -> int:
+        return self.num_activities + 1
+
+    @property
+    def adjacency(self) -> jax.Array:
+        """(N, N) bool — at least one observed traversal."""
+        return self.freq > 0
+
+    def node_labels(self) -> tuple[str, ...]:
+        if self.labels is not None:
+            return self.labels + (START_LABEL, END_LABEL)
+        return tuple(f"a{i}" for i in range(self.num_activities)) + \
+            (START_LABEL, END_LABEL)
+
+    def with_labels(self, labels) -> "ProcessGraph":
+        labels = tuple(str(x) for x in labels)
+        if len(labels) != self.num_activities:
+            raise ValueError(f"{len(labels)} labels for "
+                             f"{self.num_activities} activities")
+        return dataclasses.replace(self, labels=labels)
+
+    def edges(self):
+        """Host-side sparse view: ((src, dst), count [, mean_wait])."""
+        import numpy as np
+
+        f = np.asarray(self.freq)
+        p = None if self.perf is None else np.asarray(self.perf)
+        out = []
+        for a, b in zip(*np.nonzero(f)):
+            e = ((int(a), int(b)), int(f[a, b]))
+            out.append(e if p is None else e + (float(p[a, b]),))
+        return out
+
+
+def compile_graph(state: "DFG | object", perf: jax.Array | None = None,
+                  labels=None) -> ProcessGraph:
+    """Compile mined state into a :class:`ProcessGraph`.
+
+    ``state`` is a :class:`~repro.core.dfg.DFG` or anything carrying one
+    (``DiscoveryState.dfg``); ``perf`` is an optional (A, A) mean-wait
+    matrix (``performance_dfg``'s second output) embedded on the real
+    edges.
+    """
+    dfg = state.dfg if hasattr(state, "dfg") else state
+    if not isinstance(dfg, DFG):
+        raise TypeError(f"cannot compile a {type(state).__name__} into a "
+                        f"ProcessGraph (expected DFG-backed state)")
+    a = dfg.num_activities
+    n = a + 2
+    freq = jnp.zeros((n, n), jnp.int32)
+    freq = freq.at[:a, :a].set(dfg.counts.astype(jnp.int32))
+    freq = freq.at[a, :a].set(dfg.starts.astype(jnp.int32))
+    freq = freq.at[:a, a + 1].set(dfg.ends.astype(jnp.int32))
+    pw = None
+    if perf is not None:
+        pw = jnp.zeros((n, n), jnp.float32)
+        pw = pw.at[:a, :a].set(jnp.asarray(perf, jnp.float32))
+    g = ProcessGraph(freq=freq, num_activities=a, perf=pw)
+    return g.with_labels(labels) if labels is not None else g

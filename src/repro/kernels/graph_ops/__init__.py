@@ -1,0 +1,13 @@
+"""Graph semiring primitives — dense matrix queries over process graphs,
+lowered twice (Pallas MXU/VPU tiles + XLA reference) behind the same
+``repro.core.backend`` dispatch as the segmented primitives."""
+from . import ops, ref
+from .ops import bool_closure, maxmin_closure, minplus_closure, semiring_matmul
+from .ref import semiring_matmul_ref
+from .semiring import SEMIRINGS, semiring_matmul_pallas
+
+__all__ = [
+    "ops", "ref",
+    "semiring_matmul", "bool_closure", "minplus_closure", "maxmin_closure",
+    "semiring_matmul_pallas", "semiring_matmul_ref", "SEMIRINGS",
+]

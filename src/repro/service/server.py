@@ -260,6 +260,39 @@ class MiningService:
                 "report": to_jsonable(res.report),
                 "results": to_jsonable(res.results)}
 
+    def graph(self, query: str | None = None, engine: str = "auto",
+              **kwargs) -> dict:
+        """The compiled process graph, optionally with one graph query
+        (``query=reachability|bottleneck_paths|node_centrality``) answered
+        over the *same* snapshot — graph and query come from one ``_mine``
+        so the pair is guaranteed consistent."""
+        self.requests += 1
+        queries = ("reachability", "bottleneck_paths", "node_centrality")
+        if query is not None and query not in queries:
+            raise ServiceError(400, f"unknown graph query {query!r}; "
+                                    f"one of {list(queries)}")
+        timed = bool(kwargs.pop("timed", False))
+
+        def fn(ds):
+            res = ds.collect("graph", engine=engine, timed=timed)
+            g = res.result
+            lab = ds._activity_labels()
+            if lab is not None:
+                g = g.with_labels(lab)
+            out = {"graph": {"freq": to_jsonable(g.freq),
+                             "perf": to_jsonable(g.perf),
+                             "labels": list(g.node_labels()),
+                             "source": g.source, "sink": g.sink},
+                   "engine": res.engine}
+            if query is not None:
+                out["query"] = to_jsonable(
+                    ds.collect(query, engine=engine, **kwargs).result)
+            return out
+
+        payload, claim = self._mine(fn)
+        payload["snapshot"] = claim
+        return payload
+
     def explain(self, verb: str = "dfg", **_ignored) -> dict:
         """The facade's ``explain`` text for one verb, plus the claim."""
         self.requests += 1
@@ -336,6 +369,7 @@ class _Handler(BaseHTTPRequestHandler):
                     "/collect": self.service.collect,
                     "/profile": self.service.profile,
                     "/window": self.service.window,
+                    "/graph": self.service.graph,
                     "/explain": self.service.explain}
         fn = handlers.get(route)
         if fn is None:

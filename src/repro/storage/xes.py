@@ -3,14 +3,33 @@
 Intentionally simple: traces > events > string/int/float/date attributes.
 XES is row-structured XML — its size/parse overheads versus EDF columns are
 exactly the Table 1/2 comparison of the paper.
+
+Timestamps are serialized as the XES-standard ``<date>`` attribute in
+ISO-8601 with an explicit UTC offset (``1970-01-01T00:00:12.500000+00:00``)
+rather than a raw epoch float — what PM4Py/ProM expect — and parsed back
+to epoch seconds on read (a trailing ``Z`` offset is accepted too).
 """
 from __future__ import annotations
 
 import xml.etree.ElementTree as ET
+from datetime import datetime, timezone
 from xml.sax.saxutils import quoteattr
 
 from repro.core.classic_log import ClassicEventLog
 from repro.core.eventframe import ACTIVITY, CASE, TIMESTAMP
+
+
+def _iso8601(epoch: float) -> str:
+    return datetime.fromtimestamp(float(epoch), tz=timezone.utc).isoformat()
+
+
+def _epoch(iso: str) -> float:
+    if iso.endswith("Z"):
+        iso = iso[:-1] + "+00:00"
+    dt = datetime.fromisoformat(iso)
+    if dt.tzinfo is None:        # naive timestamps are taken as UTC
+        dt = dt.replace(tzinfo=timezone.utc)
+    return dt.timestamp()
 
 
 def write(path: str, log: ClassicEventLog) -> None:
@@ -27,6 +46,10 @@ def write(path: str, log: ClassicEventLog) -> None:
                 f.write("    <event>\n")
                 for k, v in e.items():
                     if k == CASE:
+                        continue
+                    if k == TIMESTAMP and isinstance(v, (int, float)):
+                        f.write(f'      <date key={quoteattr(k)} '
+                                f'value={quoteattr(_iso8601(v))}/>\n')
                         continue
                     tag = "int" if isinstance(v, int) else "float" if isinstance(v, float) else "string"
                     f.write(f'      <{tag} key={quoteattr(k)} value={quoteattr(str(v))}/>\n')
@@ -52,6 +75,8 @@ def read(path: str) -> ClassicEventLog:
                     e[k] = int(v)
                 elif a.tag == "float":
                     e[k] = float(v)
+                elif a.tag == "date":
+                    e[k] = _epoch(v)
                 else:
                     e[k] = v
             e.setdefault(TIMESTAMP, float(order))

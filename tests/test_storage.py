@@ -155,6 +155,33 @@ def test_xes_roundtrip(tmp_path):
     assert got == want
 
 
+def test_xes_timestamps_are_iso8601_with_utc_offset(tmp_path):
+    """Timestamps serialize as XES <date> attributes in ISO-8601 with an
+    explicit UTC offset (they were raw epoch <float>s), and a known epoch
+    round-trips through write -> read exactly."""
+    from repro.core import ClassicEventLog
+
+    epoch = 1234567890.5
+    log = ClassicEventLog([
+        {CASE: "c0", ACTIVITY: "a", TIMESTAMP: epoch},
+        {CASE: "c0", ACTIVITY: "b", TIMESTAMP: epoch + 1.25},
+    ])
+    p = str(tmp_path / "dates.xes")
+    xes.write(p, log)
+    text = open(p).read()
+    assert ('<date key="time:timestamp" '
+            'value="2009-02-13T23:31:30.500000+00:00"/>') in text
+    assert "<float key=\"time:timestamp\"" not in text
+    back = xes.read(p)
+    assert [e[TIMESTAMP] for e in back.events] == [epoch, epoch + 1.25]
+    # a trailing-Z offset (and naive-UTC) variants parse to the same epoch
+    zulu = text.replace("+00:00", "Z")
+    pz = str(tmp_path / "zulu.xes")
+    open(pz, "w").write(zulu)
+    assert [e[TIMESTAMP] for e in xes.read(pz).events] == [epoch,
+                                                           epoch + 1.25]
+
+
 def test_xes_attribute_quoting_roundtrip(tmp_path):
     """Values containing quotes/brackets/ampersands survive write -> read.
 
